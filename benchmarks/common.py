@@ -1,0 +1,58 @@
+"""Shared benchmark utilities: container calibration + CSV emission."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.perfmodel import PlatformSpec
+
+_ROWS: List[Tuple[str, float, str]] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    _ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def rows():
+    return list(_ROWS)
+
+
+def calibrate_container(seed: int = 0) -> PlatformSpec:
+    """Measure THIS container's effective matmul FLOP/s and memory
+    bandwidth so the performance model (Eqs. 7-13) can be validated
+    against wall-clock measurements (Fig. 8 reproduction)."""
+    # matmul throughput at GNN-layer-like (tall-skinny) shapes
+    rng = np.random.default_rng(seed)
+    m, k, n = 16384, 256, 256
+    a = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    f = jax.jit(lambda x, y: x @ y)
+    f(a, w).block_until_ready()
+    t0 = time.perf_counter()
+    reps = 8
+    for _ in range(reps):
+        out = f(a, w)
+    out.block_until_ready()
+    dt = (time.perf_counter() - t0) / reps
+    flops = 2 * m * k * n / dt
+
+    # host memory bandwidth under feature-loader-like gathers
+    table = rng.normal(size=(1 << 20, 64)).astype(np.float32)  # 256 MB
+    idx = rng.integers(0, table.shape[0], 1 << 18)
+    np.take(table, idx, axis=0)
+    t0 = time.perf_counter()
+    for _ in range(3):
+        got = np.take(table, idx, axis=0)
+    dt = (time.perf_counter() - t0) / 3
+    bw = 2 * got.nbytes / dt  # read + write
+
+    return PlatformSpec(
+        name="container-cpu", peak_tflops=flops / 1e12,
+        mem_bw_gbps=bw / 1e9, interconnect_gbps=bw / 1e9 / 4,
+        onchip_mb=32.0, mac_parallelism=max(int(flops / 2 / 2.45e9), 1),
+        freq_ghz=2.45, pipelined_agg_update=False)

@@ -1,0 +1,53 @@
+"""Fig. 10 reproduction: cross-platform epoch time — multi-GPU PyG
+baseline vs hybrid CPU-GPU vs hybrid CPU-FPGA, projected with the
+performance model on the paper's platforms (Table II).
+
+Paper's result: hybrid CPU-GPU up to 2.08x over the PyG multi-GPU
+baseline; CPU-FPGA a further 5-6x over CPU-GPU (customized datapath keeps
+intermediates on-chip — in the model this is the ⊕=max pipelined Trainer,
+Eq. 10, plus the FPGA's effective memory behaviour).
+"""
+from __future__ import annotations
+
+from repro.core import PLATFORMS, WorkloadSpec, predict, predict_epoch_time
+from repro.graph.storage import TRAIN_SPLIT
+
+from .common import emit
+
+CASES = [("ogbn-products", (100, 256, 47)),
+         ("ogbn-papers100M", (128, 256, 172)),
+         ("mag240m-homo", (756, 256, 153))]
+
+
+def run(model: str = "sage") -> None:
+    host = PLATFORMS["epyc-7763"]
+    gpu = PLATFORMS["rtx-a5000"]
+    fpga = PLATFORMS["alveo-u250"]
+    for dataset, dims in CASES:
+        total = 1024 * 5
+        samp = 285 * 1024 / 5e7
+
+        def epoch(accel, cpu_share, tfp=True):
+            n_accel = 4
+            accel_each = (total - cpu_share) // n_accel
+            w_c = WorkloadSpec(cpu_share, (25, 10), dims, model=model)
+            w_a = WorkloadSpec(accel_each, (25, 10), dims, model=model)
+            p = predict(host, accel, n_accel, w_c, w_a, t_samp=samp)
+            t = (p.t_execution if tfp
+                 else p.t_samp + p.t_load + p.t_trans + p.t_prop)
+            iters = -(-TRAIN_SPLIT[dataset] // total)
+            return iters * t
+
+        pyg = epoch(gpu, 0, tfp=False)          # accel-only, no overlap
+        cpu_gpu = epoch(gpu, total // 5)        # hybrid + TFP
+        cpu_fpga = epoch(fpga, total // 5)
+        emit(f"fig10/{dataset}/pyg-4gpu-baseline", pyg * 1e6, "1.00x")
+        emit(f"fig10/{dataset}/hybrid-cpu-gpu", cpu_gpu * 1e6,
+             f"{pyg/cpu_gpu:.2f}x vs baseline")
+        emit(f"fig10/{dataset}/hybrid-cpu-fpga", cpu_fpga * 1e6,
+             f"{pyg/cpu_fpga:.2f}x vs baseline, "
+             f"{cpu_gpu/cpu_fpga:.2f}x vs CPU-GPU")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,98 @@
+"""Fig. 11 reproduction: impact of each optimization, MEASURED on this
+container with the real system (not the model):
+
+  baseline      accel-only task mapping (CPU only samples/loads)
+  +hybrid       CPU trainer joins with a static perf-model mapping
+  +DRM          dynamic resource management fine-tunes shares/threads
+  +TFP          two-stage feature prefetching overlaps the stages
+
+Paper result: cumulative speedups up to 1.13x / 1.33x / 1.79x.  On a
+1-core container the hybrid win is muted (the "CPU" and "accelerator"
+trainers share one core) but TFP and DRM still show: the pipeline
+overlaps stage latencies (threads release the GIL inside XLA/numpy) and
+DRM re-balances shares.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import HybridConfig, HybridGNNTrainer
+from repro.graph import GNNConfig, make_dataset
+
+from .common import emit
+
+MODES = [
+    ("baseline", dict(hybrid=False, use_drm=False, tfp_depth=0)),
+    ("hybrid", dict(hybrid=True, use_drm=False, tfp_depth=0)),
+    ("hybrid+drm", dict(hybrid=True, use_drm=True, tfp_depth=0)),
+    ("hybrid+drm+tfp", dict(hybrid=True, use_drm=True, tfp_depth=2)),
+]
+
+
+def run(scale: float = 0.003, iters: int = 34, model: str = "sage") -> None:
+    ds = make_dataset("ogbn-products", scale=scale, seed=0)
+    gcfg = GNNConfig(model=model, layer_dims=ds.layer_dims, fanouts=(10, 5),
+                     num_classes=ds.num_classes)
+    base_time = None
+    for name, kw in MODES:
+        # share_quantum=128 bounds the number of distinct mini-batch
+        # shapes the DRM can create, so jit recompiles settle quickly
+        hcfg = HybridConfig(total_batch=512, n_accel=2, seed=0,
+                            use_accel_sampler=False, share_quantum=128,
+                            **kw)
+        tr = HybridGNNTrainer(ds, gcfg, hcfg)
+        tr.train(iters)
+        # measure the steady state: DRM share changes early in the run
+        # trigger jit recompiles (an XLA artifact the paper's CUDA/HLS
+        # trainers don't have); by ~iter 20 the shape set is warm
+        t = tr.mean_iter_time(skip=24)
+        rate = tr.mean_mteps(skip=24)
+        if base_time is None:
+            base_time = t
+        emit(f"fig11/measured-1core/{name}", t * 1e6,
+             f"MTEPS={rate:.2f} speedup={base_time/t:.2f}x "
+             f"(1-core container: hybrid/DRM/TFP need parallel resources; "
+             f"see projected rows)")
+
+
+def run_projected() -> None:
+    """Fig. 11 on the paper's platform (2xEPYC + 4xU250) via Eqs. 5-13.
+
+    The optimizations map onto the model exactly:
+      baseline     accel-only shares, stages run sequentially (Σ stages)
+      +hybrid      perf-model static CPU share, still sequential
+      +DRM         best share assignment (fine-tuned), still sequential
+      +TFP         stages overlap: T = max(stages)  — Eq. 6
+    """
+    from repro.core import PLATFORMS, WorkloadSpec, predict
+    from repro.core.perfmodel import initial_task_mapping
+    host, fpga = PLATFORMS["epyc-7763"], PLATFORMS["alveo-u250"]
+    for dataset, dims in [("ogbn-products", (100, 256, 47)),
+                          ("ogbn-papers100M", (128, 256, 172))]:
+        total = 1024 * 5
+        samp = total * 285 / 5e7 / 1024
+
+        def stages(cpu_share, accel_each):
+            w_c = WorkloadSpec(cpu_share, (25, 10), dims, model="sage")
+            w_a = WorkloadSpec(accel_each, (25, 10), dims, model="sage")
+            p = predict(host, fpga, 4, w_c, w_a, t_samp=samp)
+            return [p.t_samp, p.t_load, p.t_trans, p.t_prop]
+
+        base = sum(stages(0, total // 4))
+        static = initial_task_mapping(host, fpga, 4, total, (25, 10), dims,
+                                      model="sage")
+        hyb = sum(stages(static["cpu"], static["accel_each"]))
+        # DRM: fine-tune the share by search (the engine's fixed point)
+        best = min(sum(stages(c, (total - c) // 4))
+                   for c in range(0, total // 2, total // 64))
+        tfp = min(max(stages(c, (total - c) // 4))
+                  for c in range(0, total // 2, total // 64))
+        for name, t in [("baseline", base), ("hybrid", hyb),
+                        ("hybrid+drm", best), ("hybrid+drm+tfp", tfp)]:
+            emit(f"fig11/projected-{dataset}/{name}", t * 1e6,
+                 f"speedup={base/t:.2f}x")
+
+
+if __name__ == "__main__":
+    run()
+    run_projected()

@@ -1,0 +1,40 @@
+"""Roofline table (deliverable g): read the dry-run results JSON produced
+by ``python -m repro.launch.dryrun --out results.json`` and print the
+per-(arch × shape × mesh) roofline terms + bottleneck.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+from .common import emit
+
+DEFAULT = os.path.join(os.path.dirname(__file__), "..",
+                       "dryrun_optimized_single.json")
+
+
+def run(path: str = DEFAULT) -> None:
+    if not os.path.exists(path):
+        emit("roofline/missing", 0.0,
+             f"run `python -m repro.launch.dryrun --out {path}` first")
+        return
+    with open(path) as f:
+        results = json.load(f)
+    for r in results:
+        if r.get("status") != "ok":
+            continue
+        roof = r["roofline"]
+        mesh = "x".join(str(m) for m in r["mesh"])
+        name = f"roofline/{r['arch']}/{r['shape']}/{mesh}"
+        emit(name, roof["t_compute_s"] * 1e6,
+             f"mem={roof['t_memory_s']*1e6:.0f}us "
+             f"coll={roof['t_collective_s']*1e6:.0f}us "
+             f"bottleneck={roof['bottleneck']} "
+             f"frac={roof['roofline_fraction']:.3f} "
+             f"mb={r.get('microbatches', 1)} "
+             f"fits={r.get('fits_16gb')}")
+
+
+if __name__ == "__main__":
+    run(sys.argv[1] if len(sys.argv) > 1 else DEFAULT)

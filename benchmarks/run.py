@@ -1,0 +1,26 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV rows (see benchmarks/common.py).
+#
+#   fig8   performance-model validation (predicted vs measured)
+#   fig9   scalability projection to 16 accelerators
+#   fig10  cross-platform epoch time (PyG baseline vs hybrid CPU-GPU/FPGA)
+#   table6 epoch-time comparison vs PaGraph / P^3 / DistDGLv2
+#   table7 TFLOPS-normalized epoch-time comparison
+#   fig11  optimization ablation (baseline/+hybrid/+DRM/+TFP), measured
+#   roofline  per-(arch x shape x mesh) terms from the dry-run JSON
+def main() -> None:
+    print("name,us_per_call,derived")
+    from . import (fig8_perfmodel, fig9_scalability, fig10_crossplatform,
+                   fig11_ablation, roofline, table6_epoch_time,
+                   table7_normalized)
+    fig8_perfmodel.run()
+    fig9_scalability.run()
+    fig10_crossplatform.run()
+    table6_epoch_time.run()
+    table7_normalized.run()
+    fig11_ablation.run()
+    fig11_ablation.run_projected()
+    roofline.run()
+
+if __name__ == '__main__':
+    main()

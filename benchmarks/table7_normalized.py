@@ -1,0 +1,39 @@
+"""Table VII reproduction: epoch time normalized by platform peak TFLOPS
+(sec × TFLOPS), the paper's hardware-efficiency metric.  Platform peaks
+from Table V setups; ours = 2×3.6 (EPYC) + 4×0.6 (U250) = 9.6 TFLOPS.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import emit
+from .table6_epoch_time import BASELINE_CFG, PUBLISHED, _project_ours
+
+PLATFORM_TFLOPS = {
+    # Table V platforms (fp32 peaks)
+    "pagraph": 2 * 3.8 + 8 * 15.7,       # 2x Xeon 8163 + 8x V100
+    "p3": 4 * (0.6 + 4 * 9.3),           # 4 nodes x (Xeon E5 + 4x P100)
+    "distdglv2": 8 * (3.0 + 8 * 8.1),    # 8 nodes x (96 vCPU + 8x T4)
+    "ours": 2 * 3.6 + 4 * 0.6,
+}
+
+
+def run() -> None:
+    for system, rows in PUBLISHED.items():
+        fanouts, hidden = BASELINE_CFG[system]
+        speedups = []
+        for (dataset, model), their_s in rows.items():
+            ours_s = _project_ours(dataset, model, fanouts, hidden)
+            theirs_norm = their_s * PLATFORM_TFLOPS[system]
+            ours_norm = ours_s * PLATFORM_TFLOPS["ours"]
+            speedups.append(theirs_norm / ours_norm)
+            emit(f"table7/{system}/{dataset}-{model}", ours_norm * 1e6,
+                 f"ours={ours_norm:.1f} theirs={theirs_norm:.1f} "
+                 f"sxTFLOPS speedup={theirs_norm/ours_norm:.1f}x")
+        geo = float(np.exp(np.mean(np.log(speedups))))
+        emit(f"table7/{system}/geomean-normalized-speedup", 0.0,
+             f"{geo:.1f}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,28 @@
+"""LM pretraining example: train the ~100M-class smollm-135m family
+(reduced width for CPU speed; pass --full-135m for the real config) with
+the TFP-prefetched token pipeline, AdamW + cosine schedule, checkpointing.
+
+    PYTHONPATH=src python examples/lm_pretrain.py --steps 300
+"""
+import subprocess
+import sys
+
+
+def main():
+    args = sys.argv[1:]
+    full = "--full-135m" in args
+    if full:
+        args.remove("--full-135m")
+    cmd = [sys.executable, "-m", "repro.launch.train",
+           "--arch", "smollm-135m",
+           "--steps", "300", "--batch", "8", "--seq", "64",
+           "--ckpt-dir", "/tmp/repro_lm_ckpt", "--ckpt-every", "100"]
+    if not full:
+        cmd.append("--reduced")
+    cmd += args
+    print(" ".join(cmd))
+    raise SystemExit(subprocess.call(cmd))
+
+
+if __name__ == "__main__":
+    main()

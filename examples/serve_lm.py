@@ -1,0 +1,22 @@
+"""Batched-serving example: prefill + decode a batch of requests against
+the per-layer KV/state caches (works for every assigned arch family —
+attention, SWA ring-buffer, Mamba-2 and RWKV recurrent states).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch rwkv6-1.6b
+"""
+import subprocess
+import sys
+
+
+def main():
+    cmd = [sys.executable, "-m", "repro.launch.serve",
+           "--reduced", "--batch", "4", "--prompt-len", "16", "--gen", "16"]
+    if "--arch" not in sys.argv:
+        cmd += ["--arch", "smollm-135m"]
+    cmd += sys.argv[1:]
+    print(" ".join(cmd))
+    raise SystemExit(subprocess.call(cmd))
+
+
+if __name__ == "__main__":
+    main()

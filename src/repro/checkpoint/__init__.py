@@ -1,0 +1,5 @@
+from .ckpt import (CheckpointManager, latest_step, restore, save, save_async,
+                   wait_for_async)
+
+__all__ = ["CheckpointManager", "latest_step", "restore", "save",
+           "save_async", "wait_for_async"]

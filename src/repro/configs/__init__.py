@@ -1,0 +1,7 @@
+from .registry import (ARCHS, SHAPES, ShapeSpec, all_cells, cell_applicable,
+                       get_arch, input_specs)
+from .hyscale_gnn import PAPER_CONFIGS, PAPER_BATCH, PAPER_FANOUTS
+
+__all__ = ["ARCHS", "SHAPES", "ShapeSpec", "all_cells", "cell_applicable",
+           "get_arch", "input_specs", "PAPER_CONFIGS", "PAPER_BATCH",
+           "PAPER_FANOUTS"]

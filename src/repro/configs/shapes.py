@@ -1,0 +1,79 @@
+"""Assigned input-shape set (one per LM arch, 4 shapes = 40 cells total).
+
+  train_4k     seq 4,096   global_batch 256   lowers train_step
+  prefill_32k  seq 32,768  global_batch 32    lowers prefill_step
+  decode_32k   seq 32,768  global_batch 128   lowers serve_step (1 new token,
+                                              KV/state cache of seq_len)
+  long_500k    seq 524,288 global_batch 1     lowers serve_step; requires a
+                                              sub-quadratic arch (SWA / SSM /
+                                              hybrid / linear-attn) — skipped
+                                              for pure full-attention archs
+                                              (see DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ModelConfig, init_decode_cache, init_params
+
+__all__ = ["ShapeSpec", "SHAPES", "input_specs", "cell_applicable"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    step: str           # 'train' | 'prefill' | 'decode'
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k":    ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k":  ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k":   ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def cell_applicable(cfg: ModelConfig, shape: ShapeSpec
+                    ) -> Tuple[bool, str]:
+    """(runnable?, reason-if-skipped) for an (arch, shape) cell."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("pure full-attention arch: 500k-token decode needs a "
+                       "sub-quadratic mechanism (SWA/SSM/linear); skipped "
+                       "per DESIGN.md §4")
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, object]:
+    """ShapeDtypeStruct stand-ins for the *data* inputs of one step.
+
+    Weak-type-correct, shardable, no device allocation.  Params and decode
+    caches are built separately via ``jax.eval_shape`` in the launcher.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    if shape.step == "decode":
+        return {"tokens": sds((b, 1), i32)}
+    if cfg.frontend == "audio_stub":
+        # EnCodec frontend stub: precomputed frame embeddings
+        batch = {"embeds": sds((b, s, cfg.d_model), cfg.jdtype)}
+        if shape.step == "train":
+            batch["labels"] = sds((b, s), i32)
+        return batch
+    if cfg.frontend == "vision_stub":
+        nv = cfg.vision_tokens
+        batch = {"tokens": sds((b, s - nv), i32),
+                 "vision_embeds": sds((b, nv, cfg.d_model), cfg.jdtype)}
+        if shape.step == "train":
+            batch["labels"] = sds((b, s - nv), i32)
+        return batch
+    batch = {"tokens": sds((b, s), i32)}
+    if shape.step == "train":
+        batch["labels"] = sds((b, s), i32)
+    return batch

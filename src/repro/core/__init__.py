@@ -1,0 +1,21 @@
+# The paper's primary contribution: the hybrid training system —
+# protocol, two-stage feature prefetching, DRM, performance model, and the
+# hybrid (CPU + accelerators) trainer orchestration.
+from .drm import Assignment, DRMEngine, StageTimes
+from .perfmodel import (PLATFORMS, PlatformSpec, StagePrediction,
+                        WorkloadSpec, calibrate_sampling,
+                        initial_task_mapping, mteps, predict,
+                        predict_epoch_time)
+from .pipeline import PipelineItem, PrefetchPipeline, Stage
+from .protocol import Runtime, Synchronizer, TrainerHandle
+from .hybrid import HybridConfig, HybridGNNTrainer, IterationMetrics
+
+__all__ = [
+    "Assignment", "DRMEngine", "StageTimes",
+    "PLATFORMS", "PlatformSpec", "StagePrediction", "WorkloadSpec",
+    "calibrate_sampling", "initial_task_mapping", "mteps", "predict",
+    "predict_epoch_time",
+    "PipelineItem", "PrefetchPipeline", "Stage",
+    "Runtime", "Synchronizer", "TrainerHandle",
+    "HybridConfig", "HybridGNNTrainer", "IterationMetrics",
+]

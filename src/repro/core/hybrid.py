@@ -1,0 +1,356 @@
+"""Hybrid GNN training system (paper Sections III + IV glued together).
+
+``HybridGNNTrainer`` wires every logical component of Fig. 3/4 into the
+pipelined runtime:
+
+  Mini-batch Sampler (CPU numpy / accelerator jit)      -> Stage "sample"
+  Feature Loader (host gather, thread knob)             -> Stage "load"
+  Data Transfer (host->device, per accelerator)         -> Stage "transfer"
+  GNN Trainers (CPU + n accelerators, unequal shares)   -> consumer
+  Synchronizer (weighted all-reduce, Listing-1 handshake)
+  Runtime + DRM (per-stage times -> next-iteration assignment)
+
+Ablation knobs reproduce Fig. 11 exactly:
+  * ``hybrid=False``                       -> the "baseline" (accel-only),
+  * ``hybrid=True,  use_drm=False``        -> "+hybrid" (static perf-model map),
+  * ``use_drm=True``                       -> "+DRM",
+  * ``tfp_depth>=1``                       -> "+TFP" (two-stage prefetch).
+
+On this container all logical devices are CPU cores; the protocol, queues and
+measurements are identical to a real multi-accelerator host — device kind
+only changes the programming layer underneath (paper Section III-C).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph import (FeatureLoader, GNNConfig, GraphDataset, MiniBatch,
+                         NumpySampler, init_params, loss_fn,
+                         sample_minibatch_jax)
+from repro.optim import (CompressionSpec, adamw, compress_grads,
+                         decompress_grads)
+from repro.optim.optimizers import apply_updates
+
+from .drm import Assignment, StageTimes
+from .perfmodel import PLATFORMS, initial_task_mapping
+from .pipeline import PipelineItem, PrefetchPipeline, Stage
+from .protocol import Runtime, Synchronizer, TrainerHandle
+
+__all__ = ["HybridConfig", "HybridGNNTrainer", "IterationMetrics"]
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridConfig:
+    total_batch: int = 1024
+    n_accel: int = 1
+    hybrid: bool = True               # CPU trainer participates
+    use_drm: bool = True
+    tfp_depth: int = 2                # 0 = sequential (no TFP)
+    use_accel_sampler: bool = True
+    compression: str = "none"         # sync-path gradient compression
+    feature_dtype: str = "float32"    # transfer-path compression ("bfloat16")
+    lr: float = 1e-3
+    share_quantum: int = 64
+    drm_damping: float = 0.25
+    seed: int = 0
+    host_platform: str = "epyc-7763"
+    accel_platform: str = "tpu-v5e"
+    ckpt_every: int = 0               # 0 = disabled
+    ckpt_dir: Optional[str] = None
+
+
+@dataclasses.dataclass
+class IterationMetrics:
+    iteration: int
+    loss: float
+    acc: float
+    times: StageTimes
+    t_sync: float
+    edges: int
+    assignment: Tuple[int, int]       # (cpu_batch, accel_batch_each)
+
+    @property
+    def iter_time(self) -> float:
+        return self.times.iteration_time()
+
+    @property
+    def mteps(self) -> float:
+        t = self.iter_time
+        return self.edges / t / 1e6 if t > 0 else 0.0
+
+
+class _TrainerFailure(RuntimeError):
+    pass
+
+
+class HybridGNNTrainer:
+    def __init__(self, dataset: GraphDataset, gnn_cfg: GNNConfig,
+                 cfg: HybridConfig):
+        self.dataset = dataset
+        self.gnn_cfg = gnn_cfg
+        self.cfg = cfg
+        self._rng = np.random.default_rng(cfg.seed)
+        self._epoch_perm = self._rng.permutation(dataset.num_nodes)
+        self._cursor = 0
+        self._failed: set = set()
+        self._fail_at: Dict[str, int] = {}
+
+        devices = jax.devices()
+        self.cpu_device = devices[0]
+        self.accel_devices = [devices[i % len(devices)]
+                              for i in range(1, 1 + cfg.n_accel)]
+
+        # --- parameters / optimizer (single authoritative copy) -------------
+        key = jax.random.PRNGKey(cfg.seed)
+        self.params = init_params(key, gnn_cfg)
+        self.optimizer = adamw(cfg.lr)
+        self.opt_state = self.optimizer.init(self.params)
+        self.compression = CompressionSpec(cfg.compression)
+
+        # --- samplers --------------------------------------------------------
+        self.cpu_sampler = NumpySampler(dataset.graph, gnn_cfg.fanouts,
+                                        seed=cfg.seed + 1)
+        self._dev_topology = None
+        if cfg.use_accel_sampler and dataset.graph.nbytes() < (1 << 30):
+            self._dev_topology = (jnp.asarray(dataset.graph.indptr),
+                                  jnp.asarray(dataset.graph.indices))
+            self._jax_sample = jax.jit(partial(sample_minibatch_jax,
+                                               fanouts=gnn_cfg.fanouts))
+        self._sample_key = jax.random.PRNGKey(cfg.seed + 2)
+
+        # --- feature loader ---------------------------------------------------
+        self.loader = FeatureLoader(dataset, transfer_dtype=cfg.feature_dtype)
+
+        # --- initial task mapping from the performance model (design time) ---
+        host = PLATFORMS[cfg.host_platform]
+        accel = PLATFORMS[cfg.accel_platform]
+        if cfg.hybrid:
+            mapping = initial_task_mapping(
+                host, accel, cfg.n_accel, cfg.total_batch,
+                gnn_cfg.fanouts, gnn_cfg.layer_dims, model=gnn_cfg.model)
+        else:
+            mapping = {"cpu": 0,
+                       "accel_each": cfg.total_batch // max(cfg.n_accel, 1)}
+        assignment = Assignment(
+            cpu_batch=mapping["cpu"], accel_batch=mapping["accel_each"],
+            n_accel=cfg.n_accel, sample_frac_accel=0.5 if self._dev_topology
+            else 0.0,
+            threads={"sample": 2, "load": 2, "train": 2})
+        self.runtime = Runtime(assignment, use_drm=cfg.use_drm,
+                               damping=cfg.drm_damping,
+                               share_quantum=cfg.share_quantum)
+
+        # --- jit'd gradient function (shared across trainers/devices) --------
+        def _grad(params, batch: MiniBatch, x0):
+            (loss, acc), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, gnn_cfg, batch, x0)
+            return grads, {"loss": loss, "acc": acc}
+
+        self._grad_jit = jax.jit(_grad)
+        self.history: List[IterationMetrics] = []
+        self._ckpt_cb: Optional[Callable[[int, PyTree, PyTree], None]] = None
+
+    # ------------------------------------------------------------ utilities
+
+    def inject_failure(self, trainer_name: str, at_iteration: int) -> None:
+        """Fault-tolerance test hook: trainer dies at the given iteration."""
+        self._fail_at[trainer_name] = at_iteration
+
+    def set_checkpoint_callback(self, cb) -> None:
+        self._ckpt_cb = cb
+
+    def _next_targets(self, n: int) -> np.ndarray:
+        if self._cursor + n > len(self._epoch_perm):
+            self._epoch_perm = self._rng.permutation(self.dataset.num_nodes)
+            self._cursor = 0
+        out = self._epoch_perm[self._cursor:self._cursor + n]
+        self._cursor += n
+        return out
+
+    def _active_trainers(self) -> List[Tuple[str, str]]:
+        """[(name, kind)] excluding failed trainers."""
+        out = []
+        cpu_b, accel_b = self.runtime.quantized_shares()
+        if cpu_b > 0 and "cpu" not in self._failed:
+            out.append(("cpu", "cpu"))
+        for i in range(self.cfg.n_accel):
+            name = f"accel{i}"
+            if name not in self._failed and accel_b > 0:
+                out.append((name, "accel"))
+        return out
+
+    # ------------------------------------------------------- pipeline stages
+
+    def _make_payload(self, it: int) -> PipelineItem:
+        cpu_b, accel_b = self.runtime.quantized_shares()
+        shares: Dict[str, int] = {}
+        for name, kind in self._active_trainers():
+            shares[name] = cpu_b if kind == "cpu" else accel_b
+        payload = {"iteration": it, "shares": shares, "targets": {},
+                   "minibatch": {}, "features": {}, "t": {}}
+        for name, n in shares.items():
+            payload["targets"][name] = self._next_targets(n)
+        return PipelineItem(seq=it, payload=payload)
+
+    def _stage_sample(self, item: PipelineItem) -> PipelineItem:
+        p = item.payload
+        frac = self.runtime.assignment.sample_frac_accel
+        names = list(p["targets"].keys())
+        n_accel_sampled = (int(round(frac * len(names)))
+                           if self._dev_topology is not None else 0)
+        t_sc = t_sa = 0.0
+        for i, name in enumerate(names):
+            tgt = p["targets"][name]
+            labels = self.dataset.labels[tgt]
+            t0 = time.perf_counter()
+            if i < n_accel_sampled:
+                self._sample_key, sub = jax.random.split(self._sample_key)
+                mb = self._jax_sample(sub, *self._dev_topology,
+                                      jnp.asarray(tgt), jnp.asarray(labels))
+                mb = jax.block_until_ready(mb)
+                t_sa += time.perf_counter() - t0
+            else:
+                mb = self.cpu_sampler.sample(tgt, labels)
+                t_sc += time.perf_counter() - t0
+            p["minibatch"][name] = mb
+        p["t"]["t_sc"], p["t"]["t_sa"] = t_sc, t_sa
+        return item
+
+    def _stage_load(self, item: PipelineItem) -> PipelineItem:
+        p = item.payload
+        self.loader.num_threads = self.runtime.assignment.threads.get("load", 1)
+        t0 = time.perf_counter()
+        for name, mb in p["minibatch"].items():
+            p["features"][name] = self.loader.load(mb)
+        p["t"]["t_load"] = time.perf_counter() - t0
+        return item
+
+    def _stage_transfer(self, item: PipelineItem) -> PipelineItem:
+        p = item.payload
+        t0 = time.perf_counter()
+        for i, (name, kind) in enumerate(self._active_trainers()):
+            if name not in p["features"]:
+                continue
+            dev = (self.cpu_device if kind == "cpu"
+                   else self.accel_devices[i % max(len(self.accel_devices), 1)])
+            x = jax.device_put(p["features"][name], dev)
+            mb = jax.device_put(p["minibatch"][name], dev)
+            p["features"][name] = x
+            p["minibatch"][name] = mb
+        jax.block_until_ready([p["features"][n] for n in p["features"]])
+        p["t"]["t_tran"] = time.perf_counter() - t0
+        return item
+
+    # ------------------------------------------------------------- training
+
+    def _run_trainers(self, item: PipelineItem
+                      ) -> Tuple[PyTree, Dict[str, float], Dict[str, float]]:
+        p = item.payload
+        active = [(n, k) for n, k in self._active_trainers()
+                  if n in p["minibatch"]]
+        sync = Synchronizer(len(active))
+        results: Dict[str, Dict[str, Any]] = {}
+
+        def work(idx: int, name: str, kind: str):
+            if self._fail_at.get(name) == p["iteration"]:
+                self._failed.add(name)
+                zero = jax.tree.map(jnp.zeros_like, self.params)
+                sync.submit(idx, zero, 0.0)     # dead trainer: zero weight
+                results[name] = {"loss": jnp.nan, "acc": jnp.nan,
+                                 "t_train": 0.0, "failed": True}
+                return
+            handle = TrainerHandle(name=name, kind=kind, device=None,
+                                   grad_fn=self._grad_jit, index=idx)
+            weight = float(p["shares"][name])
+            metrics = handle.run(sync, self.params, weight,
+                                 p["minibatch"][name], p["features"][name])
+            results[name] = metrics
+
+        threads = [threading.Thread(target=work, args=(i, n, k))
+                   for i, (n, k) in enumerate(active)]
+        for t in threads:
+            t.start()
+        avg = sync.all_reduce()
+        for t in threads:
+            t.join()
+
+        # stage-time bookkeeping for the DRM engine
+        t_tc = max((m["t_train"] for n, m in results.items()
+                    if n == "cpu"), default=0.0)
+        t_ta = max((m["t_train"] for n, m in results.items()
+                    if n != "cpu"), default=0.0)
+        ok = {n: m for n, m in results.items() if not m.get("failed")}
+        w = {n: float(p["shares"][n]) for n in ok}
+        wsum = max(sum(w.values()), 1e-9)
+        loss = float(sum(float(m["loss"]) * w[n] for n, m in ok.items()) / wsum)
+        acc = float(sum(float(m["acc"]) * w[n] for n, m in ok.items()) / wsum)
+        return avg, {"t_tc": t_tc, "t_ta": t_ta}, {"loss": loss, "acc": acc}
+
+    def _apply_update(self, grads: PyTree) -> float:
+        t0 = time.perf_counter()
+        if self.compression.method != "none":
+            comp = compress_grads(grads, self.compression)
+            grads = decompress_grads(comp, self.compression, self.params)
+        updates, self.opt_state = self.optimizer.update(
+            grads, self.opt_state, self.params)
+        self.params = apply_updates(self.params, updates)
+        jax.block_until_ready(self.params)
+        return time.perf_counter() - t0
+
+    # ----------------------------------------------------------------- train
+
+    def train(self, num_iterations: int) -> List[IterationMetrics]:
+        stages = [Stage("sample", self._stage_sample),
+                  Stage("load", self._stage_load),
+                  Stage("transfer", self._stage_transfer)]
+        pipe = PrefetchPipeline(stages, depth=self.cfg.tfp_depth)
+        payloads = (self._make_payload(i) for i in range(num_iterations))
+
+        for item in pipe.run(payloads):
+            p = item.payload
+            grads, ttimes, metrics = self._run_trainers(item)
+            t_sync = self._apply_update(grads)
+            times = StageTimes(
+                t_sa=p["t"].get("t_sa", 0.0), t_sc=p["t"].get("t_sc", 0.0),
+                t_load=p["t"].get("t_load", 0.0),
+                t_tran=p["t"].get("t_tran", 0.0),
+                t_tc=ttimes["t_tc"], t_ta=ttimes["t_ta"])
+            # account for failures: drop trainers, DRM rebalances the rest
+            if self._failed:
+                a = self.runtime.assignment
+                dead_accel = sum(1 for n in self._failed if n != "cpu")
+                if dead_accel and a.n_accel > self.cfg.n_accel - dead_accel:
+                    a.cpu_batch += a.accel_batch * dead_accel
+                    a.n_accel = self.cfg.n_accel - dead_accel
+            self.runtime.end_iteration(times)
+            edges = sum(mb.edges_traversed()
+                        for mb in p["minibatch"].values())
+            m = IterationMetrics(
+                iteration=p["iteration"], loss=metrics["loss"],
+                acc=metrics["acc"], times=times, t_sync=t_sync, edges=edges,
+                assignment=self.runtime.quantized_shares())
+            self.history.append(m)
+            if (self.cfg.ckpt_every and self._ckpt_cb
+                    and (p["iteration"] + 1) % self.cfg.ckpt_every == 0):
+                self._ckpt_cb(p["iteration"], self.params, self.opt_state)
+        return self.history
+
+    # ------------------------------------------------------------- reporting
+
+    def mean_mteps(self, skip: int = 2) -> float:
+        hist = self.history[skip:] or self.history
+        return float(np.mean([m.mteps for m in hist]))
+
+    def mean_iter_time(self, skip: int = 2) -> float:
+        hist = self.history[skip:] or self.history
+        return float(np.mean([m.iter_time for m in hist]))

@@ -1,0 +1,216 @@
+"""Performance model (paper Section V, Eqs. 5-13).
+
+Predicts per-stage times from algorithmic parameters (mini-batch edge/vertex
+counts, layer dims) and platform metadata (Table II + TPU v5e), and derives
+the *initial* coarse-grained task mapping (CPU vs accelerator mini-batch
+shares) used by the hybrid trainer at design time.  The DRM engine then
+fine-tunes that mapping at runtime.
+
+Throughput metric: MTEPS — million traversed edges per second (Eq. 5).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["PlatformSpec", "PLATFORMS", "WorkloadSpec", "StagePrediction",
+           "predict", "initial_task_mapping", "mteps",
+           "calibrate_sampling", "predict_epoch_time"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PlatformSpec:
+    """One compute device + its memory/interconnect (paper Table II rows)."""
+    name: str
+    peak_tflops: float          # fp32 for CPU/FPGA/GPU rows; bf16 for TPU
+    mem_bw_gbps: float          # device-local memory bandwidth (GB/s)
+    interconnect_gbps: float    # PCIe (accelerators) / n.a. for CPU
+    onchip_mb: float
+    mac_parallelism: int        # N in Eq. 12 (MACs per cycle)
+    freq_ghz: float
+    pipelined_agg_update: bool  # the ⊕ operator in Eq. 10: True -> max
+
+
+PLATFORMS: Dict[str, PlatformSpec] = {
+    # paper Table II (effective PCIe bandwidths: gen4 x16 burst ~16 GB/s)
+    "epyc-7763":  PlatformSpec("epyc-7763", 3.6, 205.0, 0.0, 256.0,
+                               1472, 2.45, False),
+    "rtx-a5000":  PlatformSpec("rtx-a5000", 27.8, 768.0, 16.0, 6.0,
+                               13900, 2.0, False),
+    "alveo-u250": PlatformSpec("alveo-u250", 0.6, 77.0, 16.0, 54.0,
+                               2048, 0.3, True),
+    # target hardware for the dry-run/roofline (TPU v5e per prompt constants)
+    "tpu-v5e":    PlatformSpec("tpu-v5e", 197.0, 819.0, 16.0, 128.0,
+                               4 * 128 * 128, 0.94, True),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadSpec:
+    """Algorithmic parameters of one training iteration (per trainer)."""
+    batch_size: int
+    fanouts: Tuple[int, ...]          # (25, 10)
+    layer_dims: Tuple[int, ...]       # (f0, f1, f2)
+    feat_bytes: int = 4               # S_feat
+    model: str = "sage"
+
+    def frontier_sizes(self) -> Tuple[int, ...]:
+        out = [self.batch_size]
+        cur = self.batch_size
+        for f in self.fanouts:
+            cur = cur * (1 + f)
+            out.append(cur)
+        return tuple(out)
+
+    def edges_per_layer(self) -> Tuple[int, ...]:
+        """|E^l| for hop l consumed by GNN layer L-l (sampled edge counts)."""
+        sizes = self.frontier_sizes()
+        return tuple(sizes[l] * self.fanouts[l] for l in range(len(self.fanouts)))
+
+    def total_edges(self) -> int:
+        return sum(self.edges_per_layer())
+
+    def loaded_rows(self) -> int:
+        return self.frontier_sizes()[-1]
+
+    def model_bytes(self) -> int:
+        """Σ_l f^{l-1} × f^l × S_feat (Eq. 13 numerator)."""
+        tot = 0
+        for fin, fout in zip(self.layer_dims[:-1], self.layer_dims[1:]):
+            fin_eff = 2 * fin if self.model == "sage" else fin
+            tot += fin_eff * fout
+        return tot * self.feat_bytes
+
+
+@dataclasses.dataclass
+class StagePrediction:
+    t_samp: float
+    t_load: float
+    t_trans: float
+    t_prop: float
+    t_sync: float
+
+    @property
+    def t_execution(self) -> float:       # Eq. 6
+        return max(self.t_samp, self.t_load, self.t_trans, self.t_prop)
+
+    def as_dict(self) -> Dict[str, float]:
+        return dataclasses.asdict(self) | {"t_execution": self.t_execution}
+
+
+def t_load(w: WorkloadSpec, host: PlatformSpec, n_trainers: int) -> float:
+    """Eq. 7 — all trainers' features gathered from host memory."""
+    num = n_trainers * w.loaded_rows() * w.layer_dims[0] * w.feat_bytes
+    return num / (host.mem_bw_gbps * 1e9)
+
+
+def t_trans(w: WorkloadSpec, accel: PlatformSpec) -> float:
+    """Eq. 8 — one accelerator's feature matrix over PCIe."""
+    num = w.loaded_rows() * w.layer_dims[0] * w.feat_bytes
+    return num / (accel.interconnect_gbps * 1e9)
+
+
+def t_aggregate(w: WorkloadSpec, dev: PlatformSpec, layer: int) -> float:
+    """Eq. 11 — |E^{l-1}| × f^l × S_feat / BW_mem  (hop edge traffic)."""
+    edges = w.edges_per_layer()[::-1]  # GNN layer l consumes hop L-l
+    f_in = w.layer_dims[layer - 1]
+    return edges[layer - 1] * f_in * w.feat_bytes / (dev.mem_bw_gbps * 1e9)
+
+
+def t_update(w: WorkloadSpec, dev: PlatformSpec, layer: int) -> float:
+    """Eq. 12 — |V^l| × f^l × f^{l+1} / (N × freq)."""
+    sizes = w.frontier_sizes()[::-1]   # V^l for GNN layer l output
+    v_l = sizes[layer]
+    f_in = w.layer_dims[layer - 1] * (2 if w.model == "sage" else 1)
+    f_out = w.layer_dims[layer]
+    return v_l * f_in * f_out / (dev.mac_parallelism * dev.freq_ghz * 1e9)
+
+
+def t_trainer(w: WorkloadSpec, dev: PlatformSpec) -> float:
+    """Eq. 10 — forward + backward over L layers; ⊕ = max when pipelined."""
+    L = len(w.layer_dims) - 1
+    op = max if dev.pipelined_agg_update else (lambda a, b: a + b)
+    fwd = sum(op(t_aggregate(w, dev, l), t_update(w, dev, l))
+              for l in range(1, L + 1))
+    bwd = t_update(w, dev, 1) + sum(op(t_aggregate(w, dev, l),
+                                       t_update(w, dev, l))
+                                    for l in range(2, L + 1))
+    return fwd + bwd
+
+
+def t_sync(w: WorkloadSpec, accel: PlatformSpec,
+           compression_ratio: float = 1.0) -> float:
+    """Eq. 13 — model gathered+scattered over PCIe (factor 2)."""
+    return 2 * w.model_bytes() * compression_ratio / (
+        accel.interconnect_gbps * 1e9)
+
+
+def predict(host: PlatformSpec, accel: PlatformSpec, n_accel: int,
+            w_cpu: WorkloadSpec, w_accel: WorkloadSpec,
+            t_samp: float = 0.0,
+            compression_ratio: float = 1.0) -> StagePrediction:
+    """Full-system prediction for one iteration (n_accel accelerator
+    trainers, each running ``w_accel``, plus one CPU trainer w/ ``w_cpu``)."""
+    n_trainers = n_accel + (1 if w_cpu.batch_size > 0 else 0)
+    tl = t_load(w_accel, host, n_trainers)
+    tt = t_trans(w_accel, accel) if n_accel else 0.0
+    prop_cpu = t_trainer(w_cpu, host) if w_cpu.batch_size > 0 else 0.0
+    prop_acc = t_trainer(w_accel, accel) if n_accel else 0.0
+    tp = max(prop_cpu, prop_acc) + t_sync(w_accel, accel, compression_ratio)
+    return StagePrediction(t_samp=t_samp, t_load=tl, t_trans=tt, t_prop=tp,
+                           t_sync=t_sync(w_accel, accel, compression_ratio))
+
+
+def mteps(total_edges: int, t_execution: float) -> float:
+    """Eq. 5 — million traversed edges per second."""
+    return total_edges / t_execution / 1e6
+
+
+def initial_task_mapping(host: PlatformSpec, accel: PlatformSpec,
+                         n_accel: int, total_batch: int,
+                         fanouts: Tuple[int, ...],
+                         layer_dims: Tuple[int, ...],
+                         model: str = "sage") -> Dict[str, int]:
+    """Coarse-grained design-time mapping (paper §IV-A first paragraph).
+
+    Chooses the CPU trainer's mini-batch share so the predicted CPU
+    propagation time matches the accelerators' bundled transfer+propagation
+    time; solved by scanning the (integer) share space with the performance
+    model — robust for any platform pair, no closed form needed.
+    """
+    best: Tuple[float, int] = (float("inf"), 0)
+    step = max(1, total_batch // 64)
+    for cpu_share in range(0, total_batch // 2 + 1, step):
+        accel_share = (total_batch - cpu_share) // max(n_accel, 1)
+        w_cpu = WorkloadSpec(cpu_share, fanouts, layer_dims, model=model)
+        w_acc = WorkloadSpec(accel_share, fanouts, layer_dims, model=model)
+        pred = predict(host, accel, n_accel, w_cpu, w_acc)
+        if pred.t_execution < best[0]:
+            best = (pred.t_execution, cpu_share)
+    cpu_share = best[1]
+    return {"cpu": cpu_share,
+            "accel_each": (total_batch - cpu_share) // max(n_accel, 1)}
+
+
+def calibrate_sampling(sampler_fn: Callable[[int], None],
+                       batch_sizes: Sequence[int],
+                       repeats: int = 3) -> Dict[int, float]:
+    """T_samp is measured, not modeled (paper §V): run the sampling
+    algorithm at each batch size during the design phase."""
+    table: Dict[int, float] = {}
+    for b in batch_sizes:
+        sampler_fn(b)  # warmup
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            sampler_fn(b)
+        table[b] = (time.perf_counter() - t0) / repeats
+    return table
+
+
+def predict_epoch_time(num_nodes: int, total_batch: int,
+                       pred: StagePrediction) -> float:
+    iters = int(np.ceil(num_nodes / total_batch))
+    return iters * pred.t_execution

@@ -1,0 +1,13 @@
+from .storage import (CSRGraph, GraphDataset, HashedFeatures, DATASET_STATS,
+                      make_dataset, synth_powerlaw_graph)
+from .sampler import MiniBatch, NumpySampler, sample_minibatch_jax, frontier_sizes
+from .featload import FeatureLoader, LoadStats
+from .models import GNNConfig, init_params, forward, loss_fn, param_count
+
+__all__ = [
+    "CSRGraph", "GraphDataset", "HashedFeatures", "DATASET_STATS",
+    "make_dataset", "synth_powerlaw_graph",
+    "MiniBatch", "NumpySampler", "sample_minibatch_jax", "frontier_sizes",
+    "FeatureLoader", "LoadStats",
+    "GNNConfig", "init_params", "forward", "loss_fn", "param_count",
+]

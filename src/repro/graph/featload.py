@@ -1,0 +1,70 @@
+"""Feature Loader (paper Section III-A).
+
+Runs on the host ("Feature Loading is only performed on the CPUs ... the
+feature matrix X is stored in the CPU memory").  Given a sampled MiniBatch it
+gathers the innermost frontier's feature rows from host storage into a
+contiguous buffer ready for the Data Transfer stage.
+
+Supports optional on-the-fly down-cast to bf16 ("data quantization to relieve
+the stress on the PCIe bandwidth" — the paper's §VIII future-work item) and
+reports bytes/rows statistics consumed by the DRM engine and the performance
+model.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from .sampler import MiniBatch
+from .storage import GraphDataset
+
+__all__ = ["FeatureLoader", "LoadStats"]
+
+_BF16 = jnp.bfloat16  # numpy-compatible via ml_dtypes under the hood
+
+
+@dataclasses.dataclass
+class LoadStats:
+    rows: int = 0
+    bytes: int = 0
+    seconds: float = 0.0
+
+    def merge(self, other: "LoadStats") -> None:
+        self.rows += other.rows
+        self.bytes += other.bytes
+        self.seconds += other.seconds
+
+
+class FeatureLoader:
+    def __init__(self, dataset: GraphDataset, transfer_dtype: str = "float32",
+                 num_threads: int = 1):
+        self.dataset = dataset
+        self.transfer_dtype = transfer_dtype
+        self.num_threads = max(1, int(num_threads))  # DRM's balance_thread knob
+        self.stats = LoadStats()
+
+    def _gather(self, rows: np.ndarray) -> np.ndarray:
+        if self.num_threads == 1:
+            return self.dataset.take_features(rows)
+        # chunked gather: with >1 OS threads numpy gathers overlap page faults
+        import concurrent.futures as cf
+        chunks = np.array_split(rows, self.num_threads)
+        with cf.ThreadPoolExecutor(self.num_threads) as pool:
+            parts = list(pool.map(self.dataset.take_features, chunks))
+        return np.concatenate(parts, axis=0)
+
+    def load(self, batch: MiniBatch) -> np.ndarray:
+        """Gather features for the innermost frontier (layer-0 inputs)."""
+        t0 = time.perf_counter()
+        frontier = np.asarray(batch.frontier(len(batch.fanouts)))
+        x = self._gather(frontier)
+        if self.transfer_dtype == "bfloat16":
+            x = x.astype(_BF16)
+        dt = time.perf_counter() - t0
+        self.stats.merge(LoadStats(rows=x.shape[0], bytes=x.nbytes, seconds=dt))
+        return x

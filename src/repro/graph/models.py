@@ -1,0 +1,183 @@
+"""GNN models in the aggregate-update paradigm (paper Section II-A).
+
+Two evaluation models, exactly as in the paper:
+
+* **GCN** (Eq. 3):  a_v = Σ h_u / sqrt(D̃(u) D̃(v));  h'_v = ReLU(a_v W + b)
+* **GraphSAGE** (Eq. 4): a_v = h_v ‖ Mean(h_u);       h'_v = ReLU(a_v W + b)
+
+Operating on the fixed-shape sampled ``MiniBatch`` blocks.  Because each dst
+has exactly ``fanout`` sampled neighbors, neighbor aggregation admits two
+equivalent layouts:
+
+* ``dense``  — reshape to [n_dst, fanout, f] and reduce axis 1 (regular,
+  MXU-friendly; the default on TPU),
+* ``segsum`` — flat edge list + ``jax.ops.segment_sum`` (the irregular path
+  the paper's FPGA kernel targets),
+* ``pallas`` — the fused gather-aggregate(+update) Pallas kernel
+  (``repro.kernels``), the TPU adaptation of the paper's scatter-gather PE +
+  systolic-array datapath.
+
+All three are allclose-tested against each other; the choice is a pure
+performance knob, matching the paper's claim that its optimizations do not
+alter training semantics.
+
+Neighbor sampling is with replacement, so GCN's Σ over the true neighborhood
+is estimated by ``(deg_v / fanout) * Σ_sampled`` (unbiased); GraphSAGE's Mean
+needs no correction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .sampler import MiniBatch, frontier_sizes
+
+__all__ = ["GNNConfig", "init_params", "forward", "loss_fn", "param_count"]
+
+Params = Dict[str, jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    model: str = "sage"                 # "sage" | "gcn"
+    layer_dims: Tuple[int, ...] = (100, 256, 47)   # (f0, f1, f2) Table III
+    fanouts: Tuple[int, ...] = (25, 10)
+    num_classes: int = 47
+    agg_impl: str = "dense"             # "dense" | "segsum" | "pallas"
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.layer_dims) - 1
+
+    def dims_in_out(self) -> Sequence[Tuple[int, int]]:
+        return list(zip(self.layer_dims[:-1], self.layer_dims[1:]))
+
+
+def param_count(params: Params) -> int:
+    return sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+
+
+def init_params(key: jax.Array, cfg: GNNConfig, dtype=jnp.float32) -> Params:
+    params: Params = {}
+    for l, (fin, fout) in enumerate(cfg.dims_in_out(), start=1):
+        key, k1 = jax.random.split(key)
+        fan_in = 2 * fin if cfg.model == "sage" else fin
+        w = jax.random.normal(k1, (fan_in, fout), dtype) / jnp.sqrt(fan_in)
+        params[f"w{l}"] = w
+        params[f"b{l}"] = jnp.zeros((fout,), dtype)
+    return params
+
+
+# ---------------------------------------------------------------- aggregation
+
+
+def _agg_dense(x_self: jax.Array, x_nbr: jax.Array, w_edge: jax.Array | None,
+               fanout: int) -> jax.Array:
+    """Regular layout reduce.  x_nbr: [n_dst*fanout, f] -> [n_dst, f]."""
+    n_dst = x_self.shape[0]
+    xn = x_nbr.reshape(n_dst, fanout, -1)
+    if w_edge is None:                       # SAGE mean
+        return xn.mean(axis=1)
+    we = w_edge.reshape(n_dst, fanout, 1)    # GCN weighted sum
+    return (xn * we).sum(axis=1)
+
+
+def _agg_segsum(x_self: jax.Array, x_nbr: jax.Array, w_edge: jax.Array | None,
+                fanout: int) -> jax.Array:
+    n_dst = x_self.shape[0]
+    seg = jnp.repeat(jnp.arange(n_dst), fanout, total_repeat_length=n_dst * fanout)
+    contrib = x_nbr if w_edge is None else x_nbr * w_edge[:, None]
+    s = jax.ops.segment_sum(contrib, seg, num_segments=n_dst)
+    return s / fanout if w_edge is None else s
+
+
+def _aggregate(cfg: GNNConfig, x_self, x_nbr, w_edge, fanout):
+    if cfg.agg_impl == "dense":
+        return _agg_dense(x_self, x_nbr, w_edge, fanout)
+    if cfg.agg_impl == "segsum":
+        return _agg_segsum(x_self, x_nbr, w_edge, fanout)
+    if cfg.agg_impl == "pallas":
+        from repro.kernels import ops as kops
+        we = (jnp.full((x_nbr.shape[0],), 1.0 / fanout, x_nbr.dtype)
+              if w_edge is None else w_edge)
+        return kops.segment_weighted_sum_regular(x_nbr, we, fanout)
+    raise ValueError(cfg.agg_impl)
+
+
+def _fused_layer(params: Params, cfg: GNNConfig, layer: int, x_self, x_nbr,
+                 w_edge, self_scale, fanout: int) -> jax.Array:
+    """Whole GNN layer through the fused Pallas kernel (agg never hits HBM)."""
+    from repro.kernels import ops as kops
+    w = params[f"w{layer}"]
+    b = params[f"b{layer}"]
+    fin = x_self.shape[-1]
+    if cfg.model == "sage":
+        # concat(x_self, mean_nbrs) @ W == x_self @ W[:fin] + mean @ W[fin:]
+        we = jnp.full((x_nbr.shape[0],), 1.0 / fanout, x_nbr.dtype)
+        ones = jnp.ones((x_self.shape[0],), x_self.dtype)
+        return kops.fused_gnn_update(x_self, x_nbr, we, ones,
+                                     w[:fin], w[fin:], b, fanout)
+    # gcn: (agg + self_scale*x_self) @ W  — same W on both terms
+    return kops.fused_gnn_update(x_self, x_nbr, w_edge, self_scale,
+                                 w, w, b, fanout)
+
+
+# ------------------------------------------------------------------- forward
+
+
+def forward(params: Params, cfg: GNNConfig, batch: MiniBatch,
+            x0: jax.Array) -> jax.Array:
+    """Returns logits/embeddings for the batch targets [B, f_L].
+
+    ``x0``: features of the innermost frontier (layer-0 inputs),
+    shape [frontier_sizes(B, fanouts)[-1], f0].
+    """
+    L = cfg.num_layers
+    assert L == len(batch.fanouts), (L, batch.fanouts)
+    sizes = frontier_sizes(batch.batch_size, batch.fanouts)
+    x = x0.astype(params["w1"].dtype)
+    # layer 1 consumes hop L (innermost), layer L consumes hop 1
+    for layer in range(1, L + 1):
+        hop = L - layer          # 0-based hop index whose edges we consume
+        n_dst = sizes[hop]
+        fanout = batch.fanouts[hop]
+        x_self = x[:n_dst]
+        x_nbr = x[n_dst:]
+        if cfg.model == "gcn":
+            sdeg = batch.hop_src_deg[hop].astype(x.dtype)
+            ddeg = batch.hop_dst_deg[hop].astype(x.dtype)
+            norm = 1.0 / jnp.sqrt((sdeg + 1.0) * (ddeg + 1.0))
+            # unbiased estimate of the true-neighborhood sum
+            w_edge = norm * (ddeg / fanout)
+            self_w = 1.0 / (ddeg.reshape(n_dst, fanout)[:, 0] + 1.0)
+        else:
+            w_edge = None
+            self_w = None
+        if cfg.agg_impl == "pallas_fused":
+            h = _fused_layer(params, cfg, layer, x_self, x_nbr, w_edge,
+                             self_w, fanout)
+        else:
+            if cfg.model == "gcn":
+                agg = _aggregate(cfg, x_self, x_nbr, w_edge, fanout)
+                a = agg + x_self * self_w[:, None]
+            else:  # sage
+                agg = _aggregate(cfg, x_self, x_nbr, None, fanout)
+                a = jnp.concatenate([x_self, agg], axis=-1)
+            h = a @ params[f"w{layer}"] + params[f"b{layer}"]
+        x = jax.nn.relu(h) if layer < L else h
+    return x  # [B, f_L]
+
+
+def loss_fn(params: Params, cfg: GNNConfig, batch: MiniBatch,
+            x0: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    logits = forward(params, cfg, batch, x0)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, batch.labels[:, None].astype(jnp.int32),
+                               axis=-1).mean()
+    acc = (logits.argmax(-1) == batch.labels).mean()
+    return nll, acc

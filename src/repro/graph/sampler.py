@@ -1,0 +1,165 @@
+"""Mini-batch Sampler (paper Section III-A).
+
+Implements the GraphSAGE neighbor sampler (fanouts default (25, 10), batch
+1024 — the paper's evaluation setup).  Two interchangeable backends:
+
+* ``NumpySampler`` — host-side, vectorized numpy.  This is the paper's
+  "Sampling on CPU" stage and the default for large graphs whose topology
+  lives in host memory.
+* ``sample_minibatch_jax`` — jit-able fixed-shape sampler for graphs whose
+  topology fits in device memory; this is the paper's "Sampling on
+  Accelerator" option.  Both produce identical ``MiniBatch`` pytrees.
+
+Shape discipline: every array in a ``MiniBatch`` has a size that depends only
+on (batch_size, fanouts), never on the sampled data — a requirement both for
+jit and for the fixed-latency pipeline stages of the training protocol.
+Sampling is *with replacement* (as in PyG's NeighborSampler fast path);
+zero-degree vertices fall back to self-loops.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .storage import CSRGraph
+
+__all__ = ["MiniBatch", "NumpySampler", "sample_minibatch_jax",
+           "frontier_sizes"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class MiniBatch:
+    """A fixed-shape L-hop sampled block structure.
+
+    frontiers[l] (global vertex ids) for l = 0..L; frontier 0 is the batch
+    targets, frontier ``l`` = concat(frontier l-1, sampled srcs of hop l) —
+    so a vertex's own entry is always present (needed by GraphSAGE's
+    self-concat and GCN's self-loop).
+
+    hop ``l`` (1-based) has exactly ``len(frontier[l-1]) * fanout[l-1]``
+    edges: ``dst local index = i // fanout``, src local index = position in
+    frontier ``l`` = ``len(frontier[l-1]) + i``.  We store only the sampled
+    source *global ids* plus per-hop degree vectors; everything else is
+    implied by the regular layout.
+    """
+
+    targets: jax.Array          # [B] int
+    labels: jax.Array           # [B] int
+    hop_src: Tuple[jax.Array, ...]     # hop l: [B * prod(fanouts[:l])] global ids
+    hop_src_deg: Tuple[jax.Array, ...]  # same shape: true degree of each *dst* (for GCN norm)
+    hop_dst_deg: Tuple[jax.Array, ...]
+    fanouts: Tuple[int, ...] = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def batch_size(self) -> int:
+        return int(self.targets.shape[0])
+
+    def frontier(self, l: int) -> jax.Array:
+        """Global ids of frontier ``l`` (0 = targets), concatenated layout."""
+        parts = [self.targets]
+        for h in range(l):
+            parts.append(self.hop_src[h])
+        return jnp.concatenate(parts) if len(parts) > 1 else self.targets
+
+    def num_frontier(self, l: int) -> int:
+        return frontier_sizes(self.batch_size, self.fanouts)[l]
+
+    def edges_traversed(self) -> int:
+        """Total sampled edges (the paper's MTEPS numerator, Eq. 5)."""
+        return sum(int(s.shape[0]) for s in self.hop_src)
+
+
+def frontier_sizes(batch: int, fanouts: Sequence[int]) -> Tuple[int, ...]:
+    sizes = [batch]
+    for f in fanouts:
+        sizes.append(sizes[-1] + sizes[-1] * f)
+    # frontier l size = batch * prod_{h<l}(1 + f_h)
+    out = [batch]
+    cur = batch
+    for f in fanouts:
+        cur = cur * (1 + f)
+        out.append(cur)
+    return tuple(out)
+
+
+class NumpySampler:
+    """Host-side vectorized neighbor sampler (paper's CPU Sampler thread)."""
+
+    def __init__(self, graph: CSRGraph, fanouts: Sequence[int] = (25, 10),
+                 seed: int = 0):
+        self.graph = graph
+        self.fanouts = tuple(int(f) for f in fanouts)
+        self._rng = np.random.default_rng(seed)
+        self._deg = np.diff(graph.indptr)
+
+    def _sample_hop(self, frontier: np.ndarray, fanout: int
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+        deg = self._deg[frontier]
+        safe_deg = np.maximum(deg, 1)
+        r = self._rng.integers(0, 1 << 31,
+                               size=(frontier.shape[0], fanout))
+        offs = (r % safe_deg[:, None]) + self.graph.indptr[frontier][:, None]
+        src = self.graph.indices[offs].astype(np.int64)
+        # zero-degree fallback: self loop
+        src = np.where(deg[:, None] == 0, frontier[:, None], src)
+        return src.reshape(-1), deg
+
+    def sample(self, targets: np.ndarray, labels: np.ndarray) -> MiniBatch:
+        frontier = np.asarray(targets, dtype=np.int64)
+        hop_src, hop_sdeg, hop_ddeg = [], [], []
+        for f in self.fanouts:
+            src, dst_deg = self._sample_hop(frontier, f)
+            hop_src.append(src)
+            hop_ddeg.append(np.repeat(dst_deg, f))
+            hop_sdeg.append(self._deg[src])
+            frontier = np.concatenate([frontier, src])
+        return MiniBatch(
+            targets=jnp.asarray(np.asarray(targets, np.int64)),
+            labels=jnp.asarray(np.asarray(labels, np.int32)),
+            hop_src=tuple(jnp.asarray(s) for s in hop_src),
+            hop_src_deg=tuple(jnp.asarray(d) for d in hop_sdeg),
+            hop_dst_deg=tuple(jnp.asarray(d) for d in hop_ddeg),
+            fanouts=self.fanouts,
+        )
+
+
+def sample_minibatch_jax(key: jax.Array, indptr: jax.Array,
+                         indices: jax.Array, targets: jax.Array,
+                         labels: jax.Array,
+                         fanouts: Tuple[int, ...]) -> MiniBatch:
+    """jit-able sampler — the paper's "Sampling on Accelerator" path.
+
+    Requires the CSR topology on device.  Identical semantics to
+    ``NumpySampler`` (uniform with replacement, self-loop fallback).
+    """
+    deg_all = jnp.diff(indptr)
+
+    def hop(carry, fanout):
+        key, frontier = carry
+        key, sub = jax.random.split(key)
+        deg = deg_all[frontier]
+        safe = jnp.maximum(deg, 1)
+        r = jax.random.randint(sub, (frontier.shape[0], fanout), 0, 1 << 30)
+        offs = (r % safe[:, None]) + indptr[frontier][:, None]
+        src = indices[offs]
+        src = jnp.where(deg[:, None] == 0, frontier[:, None], src)
+        src = src.reshape(-1)
+        return (key, jnp.concatenate([frontier, src])), (src, deg_all[src],
+                                                         jnp.repeat(deg, fanout))
+
+    carry = (key, jnp.asarray(targets))
+    hop_src, hop_sdeg, hop_ddeg = [], [], []
+    for f in fanouts:  # python loop: fanouts are static, frontier grows
+        carry, (src, sdeg, ddeg) = hop(carry, f)
+        hop_src.append(src)
+        hop_sdeg.append(sdeg)
+        hop_ddeg.append(ddeg)
+    return MiniBatch(targets=jnp.asarray(targets),
+                     labels=jnp.asarray(labels),
+                     hop_src=tuple(hop_src), hop_src_deg=tuple(hop_sdeg),
+                     hop_dst_deg=tuple(hop_ddeg), fanouts=tuple(fanouts))

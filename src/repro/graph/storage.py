@@ -1,0 +1,190 @@
+"""Graph storage substrate.
+
+The paper stores the input graph topology + feature matrix in *CPU (host)
+memory* (Section III-B): device memory (16-64 GB) cannot hold graphs like
+MAG240M (202 GB of features).  Everything in this module is therefore
+host-side numpy; device code only ever sees gathered mini-batch tensors.
+
+Datasets are synthetic, size-parameterized power-law graphs standing in for
+ogbn-products / ogbn-papers100M / MAG240M (homo).  The *full* Table-III stats
+are kept in the registry; smoke/bench runs instantiate scaled-down versions
+with the same degree-distribution shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+__all__ = [
+    "CSRGraph",
+    "HashedFeatures",
+    "GraphDataset",
+    "synth_powerlaw_graph",
+    "make_dataset",
+    "DATASET_STATS",
+]
+
+
+@dataclasses.dataclass
+class CSRGraph:
+    """Compressed-sparse-row adjacency (out-neighbors), host resident."""
+
+    indptr: np.ndarray   # int64 [num_nodes + 1]
+    indices: np.ndarray  # int32/int64 [num_edges]
+
+    @property
+    def num_nodes(self) -> int:
+        return int(self.indptr.shape[0] - 1)
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.indices.shape[0])
+
+    def degrees(self) -> np.ndarray:
+        return np.diff(self.indptr)
+
+    def neighbors(self, v: int) -> np.ndarray:
+        return self.indices[self.indptr[v]:self.indptr[v + 1]]
+
+    def nbytes(self) -> int:
+        return self.indptr.nbytes + self.indices.nbytes
+
+
+class HashedFeatures:
+    """Deterministic lazily-computed node features.
+
+    For graphs whose feature matrix would not fit in this container's RAM we
+    never materialize X; rows are computed on demand from the node id with a
+    cheap integer hash.  This keeps the system honest about the paper's
+    central constraint (features are fetched row-by-row from host storage)
+    while staying runnable at papers100M scale on a laptop.
+    """
+
+    def __init__(self, num_nodes: int, feat_dim: int, seed: int = 0,
+                 dtype=np.float32):
+        self.shape = (num_nodes, feat_dim)
+        self.dtype = np.dtype(dtype)
+        self._seed = np.uint64(seed * 0x9E3779B97F4A7C15 + 0xDEADBEEF)
+        self._cols = np.arange(feat_dim, dtype=np.uint64)
+
+    @property
+    def nbytes_virtual(self) -> int:
+        return self.shape[0] * self.shape[1] * self.dtype.itemsize
+
+    def take(self, rows: np.ndarray) -> np.ndarray:
+        """Gather feature rows (vectorized splitmix-style hash -> [-1, 1])."""
+        rows = np.asarray(rows, dtype=np.uint64)
+        x = (rows[:, None] * np.uint64(0x9E3779B97F4A7C15)
+             + self._cols[None, :] * np.uint64(0xBF58476D1CE4E5B9)
+             + self._seed)
+        x ^= x >> np.uint64(31)
+        x *= np.uint64(0x94D049BB133111EB)
+        x ^= x >> np.uint64(29)
+        # map to [-1, 1)
+        return ((x >> np.uint64(11)).astype(np.float64)
+                / float(1 << 53) * 2.0 - 1.0).astype(self.dtype)
+
+    def __getitem__(self, rows):
+        return self.take(np.atleast_1d(rows))
+
+
+@dataclasses.dataclass
+class GraphDataset:
+    name: str
+    graph: CSRGraph
+    features: "HashedFeatures | np.ndarray"
+    labels: np.ndarray          # int32 [num_nodes]
+    num_classes: int
+    feat_dim: int
+    # GNN-layer dims straight from Table III: (f0, f1, f2)
+    layer_dims: Tuple[int, int, int]
+
+    @property
+    def num_nodes(self) -> int:
+        return self.graph.num_nodes
+
+    @property
+    def num_edges(self) -> int:
+        return self.graph.num_edges
+
+    def take_features(self, rows: np.ndarray) -> np.ndarray:
+        if isinstance(self.features, np.ndarray):
+            return np.take(self.features, rows, axis=0)
+        return self.features.take(rows)
+
+
+def synth_powerlaw_graph(num_nodes: int, avg_degree: float,
+                         seed: int = 0, hub_exponent: float = 2.5,
+                         ) -> CSRGraph:
+    """Vectorized synthetic power-law multigraph.
+
+    Out-degrees are ~Zipf-shaped (clipped); destination endpoints are drawn
+    with preference toward "hub" nodes via the inverse-CDF trick
+    ``dst = floor(N * u**hub_exponent)`` mapped through a random permutation,
+    giving the heavy-tailed in-degree distribution characteristic of
+    ogbn-style graphs.  O(E) time and memory.
+    """
+    rng = np.random.default_rng(seed)
+    n = int(num_nodes)
+    target_edges = int(round(n * avg_degree))
+    # Zipf-ish out-degree: pareto + 1, rescaled to hit the target edge count.
+    raw = rng.pareto(1.3, size=n) + 1.0
+    deg = np.maximum(1, np.round(raw * (target_edges / raw.sum()))
+                     ).astype(np.int64)
+    # clamp extreme hubs to keep sampler buffers sane
+    np.minimum(deg, max(8, n // 4), out=deg)
+    m = int(deg.sum())
+    u = rng.random(m)
+    hub_rank = np.minimum((u ** hub_exponent * n).astype(np.int64), n - 1)
+    perm = rng.permutation(n).astype(np.int64)
+    dst = perm[hub_rank]
+    indptr = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(deg, out=indptr[1:])
+    idx_dtype = np.int32 if n < 2**31 else np.int64
+    return CSRGraph(indptr=indptr, indices=dst.astype(idx_dtype))
+
+
+# name -> (num_nodes, num_edges, f0, f1, f2, num_classes)   [Table III]
+DATASET_STATS: Dict[str, Tuple[int, int, int, int, int, int]] = {
+    "ogbn-products":    (2_449_029,    61_859_140,   100, 256,  47,  47),
+    "ogbn-papers100M":  (111_059_956,  1_615_685_872, 128, 256, 172, 172),
+    "mag240m-homo":     (121_751_666,  1_297_748_926, 756, 256, 153, 153),
+}
+
+# training-split sizes (OGB official splits; an "epoch" iterates these)
+TRAIN_SPLIT: Dict[str, int] = {
+    "ogbn-products": 196_615,
+    "ogbn-papers100M": 1_207_179,
+    "mag240m-homo": 1_112_392,
+}
+
+
+def make_dataset(name: str, scale: float = 1.0, seed: int = 0,
+                 materialize_features: Optional[bool] = None) -> GraphDataset:
+    """Instantiate a (possibly scaled-down) Table-III dataset.
+
+    ``scale`` shrinks |V| while preserving avg degree and feature dims, so a
+    ``scale=1e-3`` papers100M has ~111k nodes / ~1.6M edges but identical
+    per-row feature traffic — the quantity the paper's performance model
+    (Eq. 7/8) depends on.
+    """
+    if name not in DATASET_STATS:
+        raise KeyError(f"unknown dataset {name!r}; have {list(DATASET_STATS)}")
+    nv, ne, f0, f1, f2, ncls = DATASET_STATS[name]
+    n = max(1000, int(nv * scale))
+    avg_deg = ne / nv
+    graph = synth_powerlaw_graph(n, avg_deg, seed=seed)
+    if materialize_features is None:
+        materialize_features = n * f0 * 4 <= 2 * 2**30  # <= 2 GiB
+    if materialize_features:
+        feats: "HashedFeatures | np.ndarray" = (
+            HashedFeatures(n, f0, seed=seed).take(np.arange(n)))
+    else:
+        feats = HashedFeatures(n, f0, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    labels = rng.integers(0, ncls, size=n, dtype=np.int32)
+    return GraphDataset(name=name, graph=graph, features=feats,
+                        labels=labels, num_classes=ncls, feat_dim=f0,
+                        layer_dims=(f0, f1, f2))

@@ -1,0 +1,6 @@
+# Pallas TPU kernels for the paper's compute hot-spot (Section IV-C):
+# fused scatter-gather aggregation + systolic update.  ops.py = jit'd
+# wrappers; ref.py = pure-jnp oracles; gather_scatter_mm.py = pallas_call.
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,97 @@
+"""Flash-attention (fwd) Pallas TPU kernel — online-softmax attention whose
+score matrix never leaves VMEM (Dao et al., arXiv:2205.14135, adapted to
+the TPU memory hierarchy: q/k/v tiles DMA'd HBM->VMEM, MXU matmuls, f32
+running (m, l, acc) in VMEM scratch).
+
+Grid: (B, Hkv, G, S/qb); each step owns one grouped-query block and loops
+over kv tiles with ``jax.lax.fori_loop``, masking causally by global
+position.  HBM traffic is exactly q+k+v read + o written — which is what
+``launch/costmodel.py`` charges for it (pallas_call operands/outputs),
+versus the blocked-jnp path whose [qb, S] score tensors are materialized
+by XLA between the two matmuls.
+
+Backward runs as recompute through the reference path (``ops.py`` defines
+the custom VJP) — a bwd kernel is a further perf iteration.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_call"]
+
+_NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  kv_tile: int, n_kv_tiles: int, qb: int, pos0: int):
+    # q_ref: [qb, D]; k_ref/v_ref: [S, D] (full kv stream for this head);
+    # o_ref: [qb, D]; scratch: acc [qb, D] f32, m/l [qb, 1] f32
+    iq = pl.program_id(3)
+    q = q_ref[...].astype(jnp.float32)
+    d = q.shape[-1]
+    scale = 1.0 / (d ** 0.5)
+    q_pos = pos0 + iq * qb + jax.lax.broadcasted_iota(jnp.int32, (qb, 1), 0)
+
+    m_ref[...] = jnp.full_like(m_ref, _NEG)
+    l_ref[...] = jnp.zeros_like(l_ref)
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def body(t, _):
+        start = t * kv_tile
+        k = k_ref[pl.ds(start, kv_tile), :].astype(jnp.float32)
+        v = v_ref[pl.ds(start, kv_tile), :].astype(jnp.float32)
+        kv_pos = pos0 + start + jax.lax.broadcasted_iota(
+            jnp.int32, (1, kv_tile), 1)
+        s = (q @ k.T) * scale                         # [qb, kv_tile]
+        s = jnp.where(kv_pos <= q_pos, s, _NEG)       # causal
+        m_new = jnp.maximum(m_ref[...], s.max(-1, keepdims=True))
+        alpha = jnp.exp(m_ref[...] - m_new)
+        p = jnp.exp(s - m_new)                        # [qb, kv_tile]
+        l_ref[...] = l_ref[...] * alpha + p.sum(-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + p @ v
+        m_ref[...] = m_new
+        return ()
+
+    # only kv tiles at or before this q block contribute (causal)
+    n_live = jnp.minimum((iq + 1) * qb + kv_tile - 1, n_kv_tiles * kv_tile
+                         ) // kv_tile
+    jax.lax.fori_loop(0, n_live, body, ())
+    o_ref[...] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                  ).astype(o_ref.dtype)
+
+
+def flash_attention_call(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                         q_block: int = 512, kv_tile: int = 512,
+                         pos0: int = 0, interpret: bool = True) -> jax.Array:
+    """q: [B, S, Hkv, G, D]; k/v: [B, S, Hkv, D] -> [B, S, Hkv, G, D]."""
+    b, s, hkv, g, d = q.shape
+    qb = min(q_block, s)
+    kvt = min(kv_tile, s)
+    assert s % qb == 0 and s % kvt == 0
+    grid = (b, hkv, g, s // qb)
+    kernel = functools.partial(_flash_kernel, kv_tile=kvt,
+                               n_kv_tiles=s // kvt, qb=qb, pos0=pos0)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, qb, None, None, d),
+                         lambda ib, ih, ig, iq: (ib, iq, ih, ig, 0)),
+            pl.BlockSpec((None, s, None, d),
+                         lambda ib, ih, ig, iq: (ib, 0, ih, 0)),
+            pl.BlockSpec((None, s, None, d),
+                         lambda ib, ih, ig, iq: (ib, 0, ih, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, qb, None, None, d),
+                               lambda ib, ih, ig, iq: (ib, iq, ih, ig, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[pltpu.VMEM((qb, d), jnp.float32),
+                        pltpu.VMEM((qb, 1), jnp.float32),
+                        pltpu.VMEM((qb, 1), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v)

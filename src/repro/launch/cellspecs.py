@@ -1,0 +1,207 @@
+"""Per-cell (arch × shape) step functions, abstract arguments and sharding
+specs for the dry-run and roofline harnesses.
+
+Nothing here touches real device memory: parameters, optimizer state and
+decode caches are ``jax.eval_shape`` trees; data inputs are
+``ShapeDtypeStruct`` stand-ins from ``configs.input_specs``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ShapeSpec, input_specs
+from repro.dist import (current_policy, params_shardings, pspec, use_mesh,
+                        use_policy)
+from repro.models import (ModelConfig, init_decode_cache, init_params,
+                          make_prefill_step, make_serve_step,
+                          make_train_step)
+from repro.optim import adamw
+
+__all__ = ["build_cell", "Cell"]
+
+
+def _batch_shardable(global_batch: int, mesh: Mesh) -> bool:
+    dp = 1
+    for ax in ("pod", "data"):
+        if ax in mesh.axis_names:
+            dp *= mesh.shape[ax]
+    return global_batch % dp == 0
+
+
+def _model_size(mesh: Mesh) -> int:
+    return mesh.shape.get("model", 1)
+
+
+def _batch_pspecs(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                  batch_tree) -> Dict[str, P]:
+    bshard = _batch_shardable(shape.global_batch, mesh)
+    bdim = ("pod", "data") if bshard else None
+    with use_mesh(mesh):
+        out = {}
+        for k, v in batch_tree.items():
+            dims = [bdim] + [None] * (v.ndim - 1)
+            out[k] = pspec(*dims)
+        return out
+
+
+def _cache_pspec(path, leaf, cfg: ModelConfig, shape: ShapeSpec,
+                 mesh: Mesh) -> P:
+    """Sharding rule for decode-cache leaves (see DESIGN.md §5)."""
+    keys = [str(getattr(p, "key", getattr(p, "name", ""))) for p in path]
+    name = keys[-1] if keys else ""
+    bshard = _batch_shardable(shape.global_batch, mesh)
+    msize = _model_size(mesh)
+    nd = leaf.ndim
+    b_ax = ("pod", "data") if bshard else None
+    seq_ax = None if bshard else ("pod", "data")
+
+    def spec(*tail):
+        lead = nd - len(tail)
+        return pspec(*([None] * lead), *tail)
+
+    if name in ("k", "v"):            # [..., B, C, Hkv, hd]
+        h_ax = "model" if leaf.shape[-2] % msize == 0 else None
+        c_ax = None
+        if not bshard and leaf.shape[-3] % 32 == 0:
+            c_ax = seq_ax            # long_500k: batch=1, split the stream
+        elif h_ax is None and leaf.shape[-3] % msize == 0:
+            # kv heads don't divide |model|: split the cache LENGTH over
+            # the model axis instead (flash-decoding-style split-KV) —
+            # without this, 32k-token caches replicate 16x and blow HBM.
+            c_ax = "model"
+        if current_policy() == "serve2d":
+            # batch keeps only 'pod'; the freed 'data' axis splits the
+            # cache length together with 'model' (256-way split-KV)
+            c_ax = (("data", c_ax) if isinstance(c_ax, str)
+                    else ("data",) if c_ax is None else c_ax)
+        return spec(b_ax, c_ax, h_ax, None)
+    if name == "conv":                # [..., B, conv_dim, K]
+        c_ax = "model" if leaf.shape[-2] % msize == 0 else None
+        return spec(b_ax, c_ax, None)
+    if name == "h":                   # [..., B, H, P, N]
+        h_ax = "model" if leaf.shape[-3] % msize == 0 else None
+        return spec(b_ax, h_ax, None, None)
+    if name == "s":                   # [..., B, H, K, V]
+        h_ax = "model" if leaf.shape[-3] % msize == 0 else None
+        return spec(b_ax, h_ax, None, None)
+    if name in ("tm_x", "cm_x"):      # [..., B, d]
+        d_ax = "model" if leaf.shape[-1] % msize == 0 else None
+        return spec(b_ax, d_ax)
+    return pspec(*([None] * nd))      # slot_pos, pos: replicated
+
+
+def _prefill_out_pspec(path, leaf, cfg, shape, mesh) -> P:
+    keys = [str(getattr(p, "key", getattr(p, "name", ""))) for p in path]
+    bshard = _batch_shardable(shape.global_batch, mesh)
+    b_ax = ("pod", "data") if bshard else None
+    msize = _model_size(mesh)
+    nd = leaf.ndim
+    if "attn_kv" in keys and nd >= 4:   # [L?, B, S, Hkv, hd]
+        h_ax = "model" if leaf.shape[-2] % msize == 0 else None
+        # split-KV: when kv heads don't divide |model|, shard the sequence
+        # dim instead — otherwise 32k prefill caches replicate 16x
+        s_ax = ("model" if h_ax is None and leaf.shape[-3] % msize == 0
+                else None)
+        lead = nd - 4
+        return pspec(*([None] * lead), b_ax, s_ax, h_ax, None)
+    return pspec(*([None] * nd))
+
+
+class Cell:
+    """A lowered-compile-ready (arch × shape × mesh) cell."""
+
+    def __init__(self, cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                 microbatches: int = 1, policy: str = "tp2d"):
+        self.cfg, self.shape, self.mesh = cfg, shape, mesh
+        self.microbatches = microbatches
+        self.policy = policy
+        key = jax.random.PRNGKey(0)
+        self.batch = input_specs(cfg, shape)
+        with use_mesh(mesh), use_policy(policy):
+            params_shape = jax.eval_shape(
+                functools.partial(init_params, cfg=cfg), key)
+            self.p_shard = params_shardings(params_shape, mesh)
+            bspec = _batch_pspecs(cfg, shape, mesh, self.batch)
+            self.b_shard = {k: NamedSharding(mesh, s)
+                            for k, s in bspec.items()}
+
+            if shape.step == "train":
+                opt = adamw(3e-4)
+                opt_shape = jax.eval_shape(opt.init, params_shape)
+                self.o_shard = params_shardings(opt_shape, mesh)
+                # scalar 'step' leaf: replicated
+                self.o_shard = jax.tree.map(
+                    lambda s, l: (NamedSharding(mesh, P())
+                                  if l.ndim == 0 else s),
+                    self.o_shard, opt_shape)
+                self.fn = make_train_step(cfg, opt,
+                                          microbatches=microbatches)
+                self.args = (params_shape, opt_shape, self.batch)
+                self.in_shardings = (self.p_shard, self.o_shard, self.b_shard)
+                self.out_shardings = (self.p_shard, self.o_shard, None)
+                self.donate = (0, 1)
+            elif shape.step == "prefill":
+                self.fn = make_prefill_step(cfg)
+                self.args = (params_shape, self.batch)
+                self.in_shardings = (self.p_shard, self.b_shard)
+                out_shape = jax.eval_shape(self.fn, params_shape, self.batch)
+                logits_spec = NamedSharding(mesh, pspec(
+                    ("pod", "data") if _batch_shardable(shape.global_batch,
+                                                        mesh) else None,
+                    None, "model"))
+                cache_spec = (jax.tree_util.tree_map_with_path(
+                    lambda p, l: NamedSharding(mesh, _prefill_out_pspec(
+                        p, l, cfg, shape, mesh)), out_shape[1])
+                    if out_shape[1] is not None else None)
+                self.out_shardings = (logits_spec, cache_spec)
+                self.donate = ()
+            else:  # decode
+                cache_shape = jax.eval_shape(
+                    lambda: init_decode_cache(cfg, shape.global_batch,
+                                              shape.seq_len))
+                self.c_shard = jax.tree_util.tree_map_with_path(
+                    lambda p, l: NamedSharding(mesh, _cache_pspec(
+                        p, l, cfg, shape, mesh)), cache_shape)
+                self.fn = make_serve_step(cfg)
+                self.args = (params_shape, cache_shape, self.batch)
+                logits_spec = NamedSharding(mesh, pspec(
+                    ("pod", "data") if _batch_shardable(shape.global_batch,
+                                                        mesh) else None,
+                    None, "model"))
+                self.in_shardings = (self.p_shard, self.c_shard, self.b_shard)
+                self.out_shardings = (logits_spec, self.c_shard)
+                self.donate = (1,)
+
+    def lower(self):
+        with use_mesh(self.mesh), use_policy(self.policy):
+            jitted = jax.jit(self.fn, in_shardings=self.in_shardings,
+                             out_shardings=self.out_shardings,
+                             donate_argnums=self.donate)
+            return jitted.lower(*self.args)
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+               microbatches: int = 1, policy: str = "tp2d") -> Cell:
+    return Cell(cfg, shape, mesh, microbatches=microbatches, policy=policy)
+
+
+def microbatch_ladder(shape: ShapeSpec, mesh: Mesh):
+    """Valid gradient-accumulation factors for a train cell: n must divide
+    the global batch and keep the per-microbatch batch shardable."""
+    if shape.step != "train":
+        return [1]
+    dp = 1
+    for ax in ("pod", "data"):
+        if ax in mesh.axis_names:
+            dp *= mesh.shape[ax]
+    out = []
+    for n in (1, 2, 4, 8, 16):
+        b = shape.global_batch
+        if b % n == 0 and (b // n) % dp == 0:
+            out.append(n)
+    return out or [1]

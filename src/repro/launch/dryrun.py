@@ -1,0 +1,204 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count on first init).  The 512 placeholder host devices exist ONLY for the
+# dry-run: they let jax.make_mesh build the production meshes so every
+# (architecture × input-shape × mesh) combination can be lowered + compiled
+# and its memory/cost/collective schedule extracted — without TPU hardware.
+
+import argparse       # noqa: E402
+import json           # noqa: E402
+import time           # noqa: E402
+import traceback      # noqa: E402
+
+import jax            # noqa: E402
+
+from repro.configs import ARCHS, SHAPES, cell_applicable, get_arch  # noqa: E402
+from repro.launch.analysis import (Roofline, collective_bytes,       # noqa: E402
+                                   model_flops_total)
+from repro.launch.cellspecs import build_cell, microbatch_ladder     # noqa: E402
+from repro.launch.costmodel import count_fn_cost                     # noqa: E402
+from repro.launch.mesh import make_production_mesh                   # noqa: E402
+
+_FIT_BYTES = 16 * 2**30   # v5e HBM
+
+
+def resolve_policy(cfg, shape, n_chips: int) -> tuple[str, str]:
+    """Design-time task mapping (the paper's performance-model idea applied
+    to parallelism selection): returns (policy, attn_impl).
+
+      * decode of dense/MoE archs -> 'serve2d' (weight-stationary
+        partial-sum decoding; kills per-token FSDP weight gathers),
+      * small archs (<= 2B active) whose global batch divides the chip
+        count -> 'dp' (16-way TP only buys all-reduces at this scale) +
+        the Pallas flash kernel for full-attention archs,
+      * otherwise -> 'tp2d' (FSDP x TP x sequence-sharded activations).
+    """
+    from repro.models import active_param_count
+    if shape.step == "decode" and cfg.kind in ("dense", "moe"):
+        return "serve2d", cfg.attn_impl
+    if (active_param_count(cfg) <= 2e9
+            and shape.global_batch % n_chips == 0):
+        attn = ("flash" if cfg.window == 0 and cfg.kind in ("dense", "moe")
+                else cfg.attn_impl)
+        return "dp", attn
+    if cfg.kind == "moe" and cfg.moe_experts % 16 == 0:
+        return "ep", cfg.attn_impl   # exact expert parallelism (llama4)
+    return "tp2d", cfg.attn_impl
+
+
+def run_cell(arch: str, shape_name: str, mesh, *, verbose: bool = True,
+             save_hlo: str | None = None, microbatches: int | None = None,
+             policy: str = "tp2d") -> dict:
+    """Lower+compile one cell.  For train shapes that exceed 16 GB/device,
+    walk the gradient-accumulation ladder until the cell fits."""
+    import dataclasses
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    if policy == "auto":
+        policy, attn = resolve_policy(cfg, shape, mesh.size)
+        if attn != cfg.attn_impl:
+            cfg = dataclasses.replace(cfg, attn_impl=attn)
+    ok, reason = cell_applicable(cfg, shape)
+    if not ok:
+        if verbose:
+            print(f"[skip] {arch} × {shape_name}: {reason}")
+        return {"arch": arch, "shape": shape_name,
+                "mesh": list(mesh.shape.values()), "chips": mesh.size,
+                "status": "skipped", "reason": reason}
+    ladder = ([microbatches] if microbatches
+              else microbatch_ladder(shape, mesh))
+    attempts = []
+    result = {}
+    for n_mb in ladder:
+        result = _compile_cell(arch, cfg, shape, mesh, n_mb, policy,
+                               verbose=verbose, save_hlo=save_hlo)
+        attempts.append({"microbatches": n_mb,
+                         "status": result["status"],
+                         "bytes_per_device": result.get("bytes_per_device")})
+        if result["status"] != "ok" or result["fits_16gb"]:
+            break
+    result["microbatch_ladder"] = attempts
+    return result
+
+
+def _compile_cell(arch, cfg, shape, mesh, n_mb, policy="tp2d", *,
+                  verbose=True, save_hlo=None) -> dict:
+    n_chips = mesh.size
+    result = {"arch": arch, "shape": shape.name,
+              "mesh": list(mesh.shape.values()), "chips": n_chips,
+              "microbatches": n_mb, "policy": policy,
+              "status": "skipped", "reason": ""}
+    t0 = time.time()
+    try:
+        cell = build_cell(cfg, shape, mesh, microbatches=n_mb,
+                          policy=policy)
+        lowered = cell.lower()
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0] if cost else {}
+        hlo = compiled.as_text()
+        if save_hlo:
+            with open(save_hlo, "w") as f:
+                f.write(hlo)
+        # analytic (trip-count-exact) FLOPs/bytes; XLA's cost_analysis
+        # counts while bodies once, so it is kept only as a reference.
+        analytic = count_fn_cost(cell.fn, *cell.args)
+        coll = collective_bytes(hlo)
+        roof = Roofline(flops=analytic.flops / n_chips,
+                        hbm_bytes=analytic.bytes / n_chips,
+                        coll_bytes=float(coll["total"]),
+                        model_flops=model_flops_total(cfg, shape) / n_chips)
+        mem_dict = {}
+        for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                     "output_size_in_bytes", "alias_size_in_bytes",
+                     "generated_code_size_in_bytes"):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                mem_dict[attr] = int(v)
+        # per-device steady-state bytes: args (params+opt+cache) + temps
+        live = (mem_dict.get("argument_size_in_bytes", 0)
+                + mem_dict.get("temp_size_in_bytes", 0)
+                + mem_dict.get("output_size_in_bytes", 0)
+                - mem_dict.get("alias_size_in_bytes", 0))
+        result.update({
+            "status": "ok",
+            "t_lower_s": round(t_lower, 2), "t_compile_s": round(t_compile, 2),
+            "memory_analysis": mem_dict,
+            "bytes_per_device": int(live),
+            "fits_16gb": bool(live < _FIT_BYTES),
+            "cost_analysis_raw": {k: float(v) for k, v in cost.items()
+                                  if isinstance(v, (int, float))
+                                  and k in ("flops", "bytes accessed",
+                                            "transcendentals")},
+            "collectives": {k: int(v) for k, v in coll.items()},
+            "roofline": roof.as_dict(),
+        })
+        if verbose:
+            print(f"[ok]   {arch} × {shape.name} × {tuple(mesh.shape.values())} "
+                  f"mb={n_mb} lower={t_lower:.1f}s compile={t_compile:.1f}s")
+            print(f"       memory_analysis: {mem_dict} "
+                  f"-> {live/2**30:.2f} GiB/device (fits 16GB: {live < _FIT_BYTES})")
+            print(f"       cost_analysis: flops={roof.flops:.3e} "
+                  f"bytes={roof.hbm_bytes:.3e} coll_bytes={roof.coll_bytes:.3e}")
+            print(f"       roofline: compute={roof.t_compute*1e3:.2f}ms "
+                  f"memory={roof.t_memory*1e3:.2f}ms "
+                  f"collective={roof.t_collective*1e3:.2f}ms "
+                  f"bottleneck={roof.bottleneck} "
+                  f"useful={roof.useful_ratio:.2f} "
+                  f"roofline_frac={roof.roofline_fraction:.3f}")
+    except Exception as e:  # a failing cell is a bug in the system
+        result.update({"status": "error", "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-2000:]})
+        if verbose:
+            print(f"[FAIL] {arch} × {shape.name}: {type(e).__name__}: {e}")
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default="all",
+                    help="arch id or 'all' (see repro.configs.ARCHS)")
+    ap.add_argument("--shape", default="all",
+                    help="shape id or 'all' (train_4k/prefill_32k/...)")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--policy", default="tp2d",
+                    choices=["tp2d", "dp", "serve2d", "auto"])
+    ap.add_argument("--out", default=None, help="write results JSON here")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args()
+
+    archs = list(ARCHS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    results = []
+    for multi_pod in meshes:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        for arch in archs:
+            for shape in shapes:
+                results.append(run_cell(arch, shape, mesh,
+                                        verbose=not args.quiet,
+                                        policy=args.policy))
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"\ndry-run summary: {n_ok} ok, {n_skip} skipped, {n_err} failed "
+          f"of {len(results)} cells")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"results -> {args.out}")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Batched serving driver: prefill a batch of prompts, then decode tokens
+step by step against the per-layer cache.
+
+``python -m repro.launch.serve --arch smollm-135m --reduced --batch 4
+--prompt-len 32 --gen 16``
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.models import (init_decode_cache, init_params, make_serve_step)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch, reduced=args.reduced)
+    key = jax.random.PRNGKey(args.seed)
+    params = init_params(key, cfg)
+    step = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
+
+    total = args.prompt_len + args.gen
+    cache = init_decode_cache(cfg, args.batch, seq_len=total)
+    rng = np.random.default_rng(args.seed)
+    prompts = rng.integers(0, cfg.vocab, (args.batch, args.prompt_len),
+                           dtype=np.int32)
+
+    # prefill by stepping the decode cache (prompt tokens are "forced")
+    t0 = time.perf_counter()
+    logits = None
+    for t in range(args.prompt_len):
+        logits, cache = step(params, cache,
+                             {"tokens": jnp.asarray(prompts[:, t:t + 1])})
+    jax.block_until_ready(logits)
+    t_prefill = time.perf_counter() - t0
+
+    out_tokens = []
+    t0 = time.perf_counter()
+    tok = None
+    for i in range(args.gen):
+        key, sub = jax.random.split(key)
+        lg = logits[:, -1, :cfg.vocab].astype(jnp.float32)
+        if args.temperature > 0:
+            tok = jax.random.categorical(sub, lg / args.temperature, axis=-1)
+        else:
+            tok = lg.argmax(-1)
+        tok = tok[:, None].astype(jnp.int32)
+        out_tokens.append(np.asarray(tok))
+        logits, cache = step(params, cache, {"tokens": tok})
+    jax.block_until_ready(logits)
+    t_decode = time.perf_counter() - t0
+
+    gen = np.concatenate(out_tokens, axis=1)
+    print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len} "
+          f"gen={args.gen}")
+    print(f"prefill: {t_prefill*1e3:.1f} ms "
+          f"({args.batch*args.prompt_len/t_prefill:.0f} tok/s)")
+    print(f"decode:  {t_decode*1e3:.1f} ms "
+          f"({args.batch*args.gen/t_decode:.0f} tok/s)")
+    print("sampled token ids (first row):", gen[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+from .lm import (ModelConfig, forward, init_decode_cache, init_params,
+                 loss_fn, make_prefill_step, make_serve_step,
+                 make_train_step, model_flops_per_token, active_param_count,
+                 param_count)
+from .layers import KVCache, attention, decode_attention, rms_norm, rope
+
+__all__ = [
+    "ModelConfig", "forward", "init_decode_cache", "init_params", "loss_fn",
+    "make_prefill_step", "make_serve_step", "make_train_step",
+    "model_flops_per_token", "active_param_count", "param_count",
+    "KVCache", "attention", "decode_attention", "rms_norm", "rope",
+]

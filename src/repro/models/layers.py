@@ -1,0 +1,242 @@
+"""Transformer building blocks (pure JAX, pytree params).
+
+Attention is implemented as a q-block scan with a statically-sized KV view
+per block:
+
+* full attention   — KV view = whole sequence (quadratic, memory bounded by
+  ``q_block × S`` per step instead of ``S × S``),
+* sliding window   — KV view = ``window + q_block`` slice positioned under
+  the query block (sub-quadratic FLOPs, the Mixtral-style SWA used for the
+  ``long_500k`` shapes).
+
+Decode runs against a KV cache with an explicit per-slot position array, so
+the same masking logic covers linear caches and ring buffers (SWA).
+GQA never materializes repeated KV heads (grouped einsum).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import constrain
+
+__all__ = ["rms_norm", "rope", "attention", "decode_attention", "KVCache",
+           "swiglu", "gelu_mlp", "init_linear", "init_rms"]
+
+Params = Dict[str, jax.Array]
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    scale = jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (x32 * scale).astype(x.dtype) * gamma
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 1e4) -> jax.Array:
+    """Rotary embedding, split-half convention.  x: [..., S, H, D]."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(theta) * jnp.arange(half, dtype=jnp.float32)
+                    / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs      # [..., S, half]
+    cos = jnp.cos(ang)[..., None, :]                            # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+# ------------------------------------------------------------------ attention
+
+
+def _block_attend(q: jax.Array, k: jax.Array, v: jax.Array,
+                  q_pos: jax.Array, kv_pos: jax.Array,
+                  window: int, kv_valid: Optional[jax.Array] = None
+                  ) -> jax.Array:
+    """Grouped-query attention over one q block and its KV view.
+
+    q: [B, Sq, Hkv, G, D]; k/v: [B, Skv, Hkv, D];
+    q_pos: [Sq]; kv_pos: [Skv] (slot positions, -1 = empty slot).
+    """
+    dh = q.shape[-1]
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", q, k,
+                        preferred_element_type=jnp.float32)
+    scores *= 1.0 / jnp.sqrt(dh)
+    mask = kv_pos[None, :] <= q_pos[:, None]            # causal
+    mask &= kv_pos[None, :] >= 0                        # slot written
+    if window > 0:
+        mask &= (q_pos[:, None] - kv_pos[None, :]) < window
+    if kv_valid is not None:
+        mask &= kv_valid[None, :]
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v)
+    return out
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              window: int = 0, q_block: int = 512,
+              pos0: int = 0, impl: str = "blocked") -> jax.Array:
+    """Causal (optionally sliding-window) attention over a full sequence.
+
+    q: [B, S, Hq, D]; k/v: [B, S, Hkv, D] -> [B, S, Hq, D].
+    impl='blocked': q-block scan with statically-shaped KV views — the
+    full sequence (window=0) or a ``window + q_block`` slice (SWA), which
+    is what makes long_500k prefill sub-quadratic for SWA models.
+    impl='flash' (window=0 only): the Pallas online-softmax kernel — the
+    score matrix never leaves VMEM (see kernels/flash_attention.py).
+    """
+    b, s, hq, dh = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    if impl == "flash" and window == 0 and s > 1:
+        from repro.kernels import ops as kops
+        from repro.dist import current_mesh, pspec
+        qg = q.reshape(b, s, hkv, g, dh)
+        qb_ = min(q_block, s)
+        mesh = current_mesh()
+        if mesh is not None and mesh.size > 1:
+            # pallas_call is opaque to the SPMD partitioner — without
+            # shard_map XLA replicates the operands across the mesh.
+            # Shard batch (and kv heads when they divide |model|).
+            h_ax = ("model" if hkv % mesh.shape.get("model", 1) == 0
+                    else None)
+            qs = pspec(("pod", "data"), None, h_ax, None, None)
+            ks = pspec(("pod", "data"), None, h_ax, None)
+            fn = jax.shard_map(
+                lambda q_, k_, v_: kops.flash_attention(q_, k_, v_, qb_,
+                                                        pos0),
+                mesh=mesh, in_specs=(qs, ks, ks), out_specs=qs,
+                check_vma=False)
+            out = fn(qg, k, v)
+        else:
+            out = kops.flash_attention(qg, k, v, qb_, pos0)
+        return out.reshape(b, s, hq, dh)
+    qb = min(q_block, s)
+    n_blocks = s // qb
+    assert s % qb == 0, (s, qb)
+    qg = q.reshape(b, s, hkv, g, dh)
+
+    if window > 0 and window + qb < s:
+        kv_len = window + qb
+    else:
+        kv_len = s
+
+    @jax.checkpoint
+    def body(carry, i):
+        # rematerialized: the [B,H,qb,kv] score/softmax tensors are
+        # recomputed in the backward pass instead of being saved per block
+        # (without this, residuals are n_blocks × B×H×qb×kv floats).
+        q_start = i * qb
+        qi = jax.lax.dynamic_slice_in_dim(qg, q_start, qb, axis=1)
+        q_pos = pos0 + q_start + jnp.arange(qb)
+        if kv_len == s:
+            ki, vi = k, v
+            kv_pos = pos0 + jnp.arange(s)
+        else:
+            start = jnp.clip(q_start + qb - kv_len, 0, s - kv_len)
+            ki = jax.lax.dynamic_slice_in_dim(k, start, kv_len, axis=1)
+            vi = jax.lax.dynamic_slice_in_dim(v, start, kv_len, axis=1)
+            kv_pos = pos0 + start + jnp.arange(kv_len)
+        oi = _block_attend(qi, ki, vi, q_pos, kv_pos, window)
+        return carry, oi
+
+    _, outs = jax.lax.scan(body, None, jnp.arange(n_blocks))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, n_blocks * qb, hkv, g, dh)
+    return out.reshape(b, s, hq, dh)
+
+
+# ------------------------------------------------------------------ KV cache
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class KVCache:
+    """Linear or ring-buffer KV cache with explicit slot positions."""
+    k: jax.Array          # [B, C, Hkv, D]
+    v: jax.Array          # [B, C, Hkv, D]
+    slot_pos: jax.Array   # [C] int32, -1 = empty
+    pos: jax.Array        # scalar int32: number of tokens seen
+
+    @classmethod
+    def init(cls, batch: int, capacity: int, n_kv: int, head_dim: int,
+             dtype=jnp.bfloat16, prefix: Tuple[int, ...] = ()) -> "KVCache":
+        shape = (*prefix, batch, capacity, n_kv, head_dim)
+        return cls(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+                   slot_pos=jnp.full((*prefix, capacity), -1, jnp.int32),
+                   pos=jnp.zeros(prefix, jnp.int32))
+
+    @property
+    def capacity(self) -> int:
+        return self.k.shape[-3]
+
+
+def decode_attention(q: jax.Array, k_new: jax.Array, v_new: jax.Array,
+                     cache: KVCache, *, window: int = 0
+                     ) -> Tuple[jax.Array, KVCache]:
+    """One-token decode: write (k_new, v_new) into the cache (ring-buffer
+    write when the cache is smaller than the stream), attend over it.
+
+    q: [B, 1, Hq, D]; k_new/v_new: [B, 1, Hkv, D].
+    """
+    b, _, hq, dh = q.shape
+    hkv = k_new.shape[2]
+    g = hq // hkv
+    write = cache.pos % cache.capacity
+    k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new.astype(cache.k.dtype),
+                                            write, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new.astype(cache.v.dtype),
+                                            write, axis=1)
+    slot_pos = jax.lax.dynamic_update_slice_in_dim(
+        cache.slot_pos, cache.pos[None], write, axis=0)
+    qg = q.reshape(b, 1, hkv, g, dh)
+    q_pos = cache.pos[None]
+    out = _block_attend(qg, k, v, q_pos, slot_pos, window)
+    new_cache = KVCache(k=k, v=v, slot_pos=slot_pos, pos=cache.pos + 1)
+    return out.reshape(b, 1, hq, dh), new_cache
+
+
+def prefill_into_cache(k: jax.Array, v: jax.Array, cache: KVCache
+                       ) -> KVCache:
+    """Write a full prefill's K/V into a fresh cache (capacity >= S)."""
+    s = k.shape[1]
+    cap = cache.capacity
+    kk = cache.k.at[:, :s].set(k.astype(cache.k.dtype))
+    vv = cache.v.at[:, :s].set(v.astype(cache.v.dtype))
+    slot_pos = cache.slot_pos.at[:s].set(jnp.arange(s, dtype=jnp.int32))
+    return KVCache(k=kk, v=vv, slot_pos=slot_pos,
+                   pos=jnp.asarray(s, jnp.int32))
+
+
+# ----------------------------------------------------------------------- MLP
+
+
+def swiglu(x: jax.Array, w1: jax.Array, w3: jax.Array, w2: jax.Array
+           ) -> jax.Array:
+    h = jax.nn.silu(x @ w1) * (x @ w3)
+    h = constrain(h, ("pod", "data"), None, "model")
+    return h @ w2
+
+
+def gelu_mlp(x: jax.Array, w1: jax.Array, w2: jax.Array) -> jax.Array:
+    h = jax.nn.gelu(x @ w1)
+    h = constrain(h, ("pod", "data"), None, "model")
+    return h @ w2
+
+
+# ---------------------------------------------------------------------- init
+
+
+def init_linear(key: jax.Array, fan_in: int, fan_out: int,
+                dtype=jnp.float32, std: Optional[float] = None) -> jax.Array:
+    std = std if std is not None else fan_in ** -0.5
+    return (jax.random.normal(key, (fan_in, fan_out), jnp.float32) * std
+            ).astype(dtype)
+
+
+def init_rms(dim: int, dtype=jnp.float32) -> jax.Array:
+    return jnp.ones((dim,), dtype)

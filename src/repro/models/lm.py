@@ -1,0 +1,561 @@
+"""Unified LM substrate: one ``ModelConfig`` covers all 10 assigned
+architectures (dense / MoE / SWA / hybrid-SSM / RWKV / audio / VLM stubs).
+
+Layers are stacked ([L, ...] leading axis on every weight) and iterated with
+``jax.lax.scan`` so the lowered HLO contains a single layer body — essential
+for the 512-device dry-run compile times.  Zamba-style hybrids scan over
+"super-blocks" (``mamba_per_attn`` Mamba-2 layers + one application of the
+*shared* attention block) with the shared weights closed over.
+
+Entry points (all pure functions, pjit-able):
+  * ``init_params(key, cfg)``          — real init (smoke tests)
+  * ``forward(params, cfg, batch)``    — training/prefill logits (+caches)
+  * ``loss_fn`` / ``make_train_step``  — next-token CE + AdamW update
+  * ``init_decode_cache`` / ``make_serve_step`` — one-token decode against
+    stacked per-layer caches (KV ring-buffer for SWA, SSM/RWKV states).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist import (constrain, constrain_act, constrain_act_serve,
+                        constrain_proj)
+from repro.optim.optimizers import Optimizer, apply_updates
+
+from . import moe as moe_lib
+from . import rwkv as rwkv_lib
+from . import ssm as ssm_lib
+from .layers import (KVCache, attention, decode_attention, gelu_mlp,
+                     init_linear, init_rms, prefill_into_cache, rms_norm,
+                     rope, swiglu)
+
+Params = Dict[str, Any]
+
+__all__ = ["ModelConfig", "init_params", "forward", "loss_fn",
+           "make_train_step", "make_serve_step", "init_decode_cache",
+           "param_count", "model_flops_per_token"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    kind: str                   # 'dense' | 'moe' | 'rwkv' | 'zamba'
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0
+    moe_experts: int = 0
+    moe_top_k: int = 0
+    capacity_factor: float = 1.25
+    window: int = 0             # sliding-window size (0 = full attention)
+    ssm_state: int = 64
+    ssm_head_dim: int = 64
+    mamba_per_attn: int = 6     # zamba: mamba layers per shared-attn site
+    mlp: str = "swiglu"         # 'swiglu' | 'gelu'
+    rope_theta: float = 1e4
+    norm_eps: float = 1e-5
+    dtype: str = "bfloat16"
+    frontend: str = "none"      # 'none' | 'audio_stub' | 'vision_stub'
+    vision_tokens: int = 256    # prefix length for the vision stub
+    remat: bool = True
+    q_block: int = 512
+    attn_impl: str = "blocked"   # 'blocked' | 'flash' (Pallas kernel)
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def vocab_padded(self) -> int:
+        return -(-self.vocab // 128) * 128
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Can this arch run long_500k? (SSM/hybrid/linear-attn or SWA)."""
+        return self.kind in ("rwkv", "zamba") or self.window > 0
+
+    def zamba_structure(self) -> Tuple[int, int, int]:
+        """(n_sites, mamba_per_site, n_tail) with all layers Mamba except
+        the shared attention applied after every ``mamba_per_attn``."""
+        per = self.mamba_per_attn
+        sites = self.n_layers // per
+        tail = self.n_layers - sites * per
+        return sites, per, tail
+
+
+def param_count(params: Params) -> int:
+    return sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+
+
+def model_flops_per_token(cfg: ModelConfig) -> float:
+    """6·N_active per token (the §Roofline MODEL_FLOPS convention)."""
+    n = active_param_count(cfg)
+    return 6.0 * n
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Parameters touched per token (MoE counts top_k experts only)."""
+    d, hd = cfg.d_model, cfg.hd
+    attn = d * hd * (cfg.n_heads * 2 + cfg.n_kv * 2)
+    if cfg.mlp == "swiglu":
+        ffn = 3 * d * cfg.d_ff
+    else:
+        ffn = 2 * d * cfg.d_ff
+    if cfg.kind == "moe":
+        per_layer = attn + cfg.moe_top_k * ffn + d * cfg.moe_experts
+    elif cfg.kind == "dense":
+        per_layer = attn + ffn
+    elif cfg.kind == "rwkv":
+        # time-mix: w_r/w_k/w_v/w_g/w_o (5·d²) + decay LoRA; channel-mix:
+        # c_k [d,ff] + c_v [ff,d] + c_r [d,d]
+        per_layer = 6 * d * d + 2 * d * cfg.d_ff + 2 * d * 64
+    elif cfg.kind == "zamba":
+        d_inner = 2 * d
+        mamba = d * (2 * d_inner + 2 * cfg.ssm_state +
+                     d_inner // cfg.ssm_head_dim) + d_inner * d
+        sites, per, tail = cfg.zamba_structure()
+        total = (sites * per + tail) * mamba + sites * 0
+        shared = attn + 3 * d * cfg.d_ff
+        return total + shared + 2 * cfg.vocab * d
+    else:
+        raise ValueError(cfg.kind)
+    return cfg.n_layers * per_layer + 2 * cfg.vocab * d
+
+
+# ====================================================================== init
+
+
+def _init_attn(key, cfg: ModelConfig, dtype) -> Params:
+    ks = jax.random.split(key, 4)
+    d, hd = cfg.d_model, cfg.hd
+    return {
+        "ln1": init_rms(d, dtype),
+        "wq": init_linear(ks[0], d, cfg.n_heads * hd, dtype),
+        "wk": init_linear(ks[1], d, cfg.n_kv * hd, dtype),
+        "wv": init_linear(ks[2], d, cfg.n_kv * hd, dtype),
+        "wo": init_linear(ks[3], cfg.n_heads * hd, d, dtype),
+    }
+
+
+def _init_ffn(key, cfg: ModelConfig, dtype) -> Params:
+    ks = jax.random.split(key, 3)
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.mlp == "swiglu":
+        return {"ln2": init_rms(d, dtype),
+                "w1": init_linear(ks[0], d, f, dtype),
+                "w3": init_linear(ks[1], d, f, dtype),
+                "w2": init_linear(ks[2], f, d, dtype)}
+    return {"ln2": init_rms(d, dtype),
+            "w1": init_linear(ks[0], d, f, dtype),
+            "w2": init_linear(ks[1], f, d, dtype)}
+
+
+def _init_layer(key, cfg: ModelConfig, dtype) -> Params:
+    k1, k2 = jax.random.split(key)
+    if cfg.kind == "dense":
+        return {**_init_attn(k1, cfg, dtype), **_init_ffn(k2, cfg, dtype)}
+    if cfg.kind == "moe":
+        p = _init_attn(k1, cfg, dtype)
+        p["ln2"] = init_rms(cfg.d_model, dtype)
+        p["moe"] = moe_lib.init_moe_params(k2, cfg.d_model, cfg.d_ff,
+                                           cfg.moe_experts, dtype)
+        return p
+    if cfg.kind == "rwkv":
+        p = rwkv_lib.init_rwkv_params(k1, cfg.d_model, cfg.d_ff,
+                                      head_dim=cfg.hd, dtype=dtype)
+        p["ln1"] = init_rms(cfg.d_model, dtype)
+        p["ln2"] = init_rms(cfg.d_model, dtype)
+        return p
+    if cfg.kind == "zamba":  # one mamba layer
+        p = ssm_lib.init_mamba_params(k1, cfg.d_model, cfg.ssm_state,
+                                      head_dim=cfg.ssm_head_dim, dtype=dtype)
+        p["ln"] = init_rms(cfg.d_model, dtype)
+        return p
+    raise ValueError(cfg.kind)
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> Params:
+    dtype = cfg.jdtype
+    k_embed, k_head, k_layers, k_shared = jax.random.split(key, 4)
+    params: Params = {
+        "embed": init_linear(k_embed, cfg.vocab_padded, cfg.d_model, dtype,
+                             std=0.02),
+        "final_norm": init_rms(cfg.d_model, dtype),
+        "lm_head": init_linear(k_head, cfg.d_model, cfg.vocab_padded, dtype),
+    }
+    if cfg.kind == "zamba":
+        sites, per, tail = cfg.zamba_structure()
+        keys = jax.random.split(k_layers, sites * per)
+        stacked = jax.vmap(lambda k: _init_layer(k, cfg, dtype))(keys)
+        params["layers"] = jax.tree.map(
+            lambda p: p.reshape(sites, per, *p.shape[1:]), stacked)
+        if tail:
+            tkeys = jax.random.split(jax.random.fold_in(k_layers, 7), tail)
+            params["tail"] = jax.vmap(
+                lambda k: _init_layer(k, cfg, dtype))(tkeys)
+        ka, kf = jax.random.split(k_shared)
+        params["shared_attn"] = {**_init_attn(ka, cfg, dtype),
+                                 **_init_ffn(kf, cfg, dtype)}
+    else:
+        keys = jax.random.split(k_layers, cfg.n_layers)
+        params["layers"] = jax.vmap(
+            lambda k: _init_layer(k, cfg, dtype))(keys)
+    return params
+
+
+# ================================================================= block fwd
+
+
+def _attn_apply(cfg: ModelConfig, lp: Params, x: jax.Array, pos0: int,
+                collect_kv: bool):
+    b, s, d = x.shape
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    q = constrain_proj(h @ lp["wq"], cfg.n_heads
+                       ).reshape(b, s, cfg.n_heads, cfg.hd)
+    k = constrain_proj(h @ lp["wk"], cfg.n_kv
+                       ).reshape(b, s, cfg.n_kv, cfg.hd)
+    v = constrain_proj(h @ lp["wv"], cfg.n_kv
+                       ).reshape(b, s, cfg.n_kv, cfg.hd)
+    positions = pos0 + jnp.arange(s)
+    q = rope(q, positions[None], cfg.rope_theta)
+    k = rope(k, positions[None], cfg.rope_theta)
+    o = attention(q, k, v, window=cfg.window, q_block=cfg.q_block,
+                  pos0=pos0, impl=cfg.attn_impl)
+    o = o.reshape(b, s, cfg.n_heads * cfg.hd)
+    o = constrain(o, ("pod", "data"), None, "model")
+    x = x + o @ lp["wo"]
+    return (x, (k, v)) if collect_kv else (x, None)
+
+
+def _ffn_apply(cfg: ModelConfig, lp: Params, x: jax.Array):
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.kind == "moe":
+        y, aux = moe_lib.moe_ffn(h, lp["moe"], top_k=cfg.moe_top_k,
+                                 capacity_factor=cfg.capacity_factor)
+        return x + y, aux
+    if cfg.mlp == "swiglu":
+        return x + swiglu(h, lp["w1"], lp["w3"], lp["w2"]), 0.0
+    return x + gelu_mlp(h, lp["w1"], lp["w2"]), 0.0
+
+
+def _block_fwd(cfg: ModelConfig, lp: Params, x: jax.Array, pos0: int,
+               collect_kv: bool = False):
+    """One layer forward; returns (x, aux, kv-or-None).
+
+    Block boundaries carry a sequence-sharded activation constraint
+    (``constrain_act``): the [B,S,d] tensors the scan backward saves per
+    layer are sharded over batch AND (seq × model), keeping remat
+    residuals at 1/(dp·tp) of global size.
+    """
+    if cfg.kind in ("dense", "moe"):
+        x, kv = _attn_apply(cfg, lp, x, pos0, collect_kv)
+        x, aux = _ffn_apply(cfg, lp, x)
+        return constrain_act(x), aux, kv
+    if cfg.kind == "rwkv":
+        x = rwkv_lib.rwkv_forward(lp, x, lp["ln1"], lp["ln2"], cfg.hd)
+        return constrain_act(x), 0.0, None
+    if cfg.kind == "zamba":  # single mamba layer
+        y = ssm_lib.mamba_forward(lp, rms_norm(x, lp["ln"], cfg.norm_eps),
+                                  d_state=cfg.ssm_state,
+                                  head_dim=cfg.ssm_head_dim)
+        return constrain_act(x + y), 0.0, None
+    raise ValueError(cfg.kind)
+
+
+# ==================================================================== forward
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _grad_cast(x, dtype):
+    """Identity whose COTANGENT is cast to ``dtype``.
+
+    The loss computes in f32, so ``d_logits @ lm_head.T`` promotes the
+    backward activation stream to f32, which then flows f32 through every
+    layer of the scan — doubling backward collective/HBM traffic.  This
+    barrier keeps the backward stream in the forward compute dtype (bf16),
+    i.e. standard mixed-precision backward.
+    """
+    return x
+
+
+def _grad_cast_fwd(x, dtype):
+    return x, None
+
+
+def _grad_cast_bwd(dtype, _, g):
+    return (g.astype(dtype),)
+
+
+_grad_cast.defvjp(_grad_cast_fwd, _grad_cast_bwd)
+
+
+def _embed_inputs(params: Params, cfg: ModelConfig, batch: Dict[str, Any]
+                  ) -> jax.Array:
+    if "embeds" in batch:                       # audio stub: frame embeddings
+        x = batch["embeds"].astype(cfg.jdtype)
+    else:
+        tokens = batch["tokens"]
+        x = params["embed"][tokens]
+    if cfg.frontend == "vision_stub" and "vision_embeds" in batch:
+        x = jnp.concatenate(
+            [batch["vision_embeds"].astype(cfg.jdtype), x], axis=1)
+    return constrain_act(x)
+
+
+def forward(params: Params, cfg: ModelConfig, batch: Dict[str, Any],
+            return_cache: bool = False):
+    """Training / prefill forward.  Returns (logits, aux, caches|None)."""
+    x = _embed_inputs(params, cfg, batch)
+
+    def dense_body(x, lp):
+        xo, aux, kv = _block_fwd(cfg, lp, x, 0, collect_kv=return_cache)
+        return xo, (aux, kv)
+
+    body = jax.checkpoint(dense_body) if (cfg.remat and not return_cache) \
+        else dense_body
+
+    caches = None
+    if cfg.kind == "zamba":
+        sites, per, tail = cfg.zamba_structure()
+
+        def super_body(x, lp_site):
+            def inner(xc, lp):
+                xo, _, _ = _block_fwd(cfg, lp, xc, 0)
+                return xo, None
+            x, _ = jax.lax.scan(inner, x, lp_site)
+            x, kv = _attn_apply(cfg, params["shared_attn"], x, 0,
+                                return_cache)
+            x, _ = _ffn_apply(cfg, params["shared_attn"], x)
+            return constrain_act(x), kv
+        sbody = jax.checkpoint(super_body) if (cfg.remat and not return_cache
+                                               ) else super_body
+        x, kvs = jax.lax.scan(sbody, x, params["layers"])
+        if tail:
+            def tail_body(xc, lp):
+                xo, _, _ = _block_fwd(cfg, lp, xc, 0)
+                return xo, None
+            x, _ = jax.lax.scan(tail_body, x, params["tail"])
+        aux = jnp.zeros((), jnp.float32)
+        if return_cache:
+            caches = {"attn_kv": kvs}
+    else:
+        x, (auxs, kvs) = jax.lax.scan(body, x, params["layers"])
+        aux = jnp.sum(auxs) if cfg.kind == "moe" else jnp.zeros((), jnp.float32)
+        if return_cache and cfg.kind in ("dense", "moe"):
+            caches = {"attn_kv": kvs}
+
+    x = _grad_cast(x, cfg.jdtype)   # keep the backward stream in bf16
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["lm_head"]
+    logits = constrain(logits, ("pod", "data"), None, "model")
+    return logits, aux, caches
+
+
+def _mask_padded(logits: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.vocab_padded == cfg.vocab:
+        return logits
+    neg = jnp.full((cfg.vocab_padded - cfg.vocab,), -1e30, logits.dtype)
+    return logits.at[..., cfg.vocab:].set(neg)
+
+
+def loss_fn(params: Params, cfg: ModelConfig, batch: Dict[str, Any]
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    logits, aux, _ = forward(params, cfg, batch)
+    labels = batch["labels"]
+    if cfg.frontend == "vision_stub" and "vision_embeds" in batch:
+        # prefix positions carry no labels
+        nvis = batch["vision_embeds"].shape[1]
+        logits = logits[:, nvis:]
+    logits = _mask_padded(logits, cfg).astype(jnp.float32)
+    shift_logits = logits[:, :-1]
+    shift_labels = labels[:, 1:]
+    logz = jax.nn.logsumexp(shift_logits, axis=-1)
+    gold = jnp.take_along_axis(shift_logits,
+                               shift_labels[..., None].astype(jnp.int32),
+                               axis=-1)[..., 0]
+    mask = (shift_labels >= 0).astype(jnp.float32)
+    nll = ((logz - gold) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    loss = nll + 0.01 * aux
+    return loss, {"nll": nll, "aux": aux,
+                  "tokens": mask.sum()}
+
+
+def make_train_step(cfg: ModelConfig, optimizer: Optimizer,
+                    microbatches: int = 1):
+    """Build the jit-able train step.
+
+    ``microbatches > 1`` enables gradient accumulation: the global batch is
+    split on the leading axis and scanned, so only one microbatch's
+    activations are live at a time (this is what fits the biggest
+    (arch × shape) cells into 16 GB/chip).  Gradients accumulate in f32;
+    semantics are identical to the single-shot step (property-tested).
+    """
+
+    def single(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, cfg, batch)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        metrics = dict(metrics, loss=loss)
+        return params, opt_state, metrics
+
+    if microbatches <= 1:
+        return single
+
+    def accumulated(params, opt_state, batch):
+        n = microbatches
+        mb = jax.tree.map(
+            lambda a: a.reshape(n, a.shape[0] // n, *a.shape[1:]), batch)
+
+        def body(acc, one):
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, cfg, one)
+            acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32), acc, grads)
+            return acc, dict(metrics, loss=loss)
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        gsum, ms = jax.lax.scan(body, zeros, mb)
+        grads = jax.tree.map(lambda g: (g / n), gsum)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        metrics = jax.tree.map(lambda m: m.mean(), ms)
+        return params, opt_state, metrics
+
+    return accumulated
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        logits, _, caches = forward(params, cfg, batch, return_cache=True)
+        return _mask_padded(logits[:, -1:], cfg), caches
+    return prefill_step
+
+
+# ===================================================================== decode
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    """Stacked per-layer cache pytree for one-token decode.
+
+    Attention layers: KV ring buffer of min(seq_len, window or inf);
+    Mamba layers: (conv, state); RWKV: (shift, wkv state).
+    """
+    dtype = cfg.jdtype
+    cap = min(seq_len, cfg.window) if cfg.window else seq_len
+    if cfg.kind in ("dense", "moe"):
+        return {"attn": KVCache.init(batch, cap, cfg.n_kv, cfg.hd, dtype,
+                                     prefix=(cfg.n_layers,))}
+    if cfg.kind == "rwkv":
+        c = rwkv_lib.init_rwkv_cache(batch, cfg.d_model, cfg.hd, dtype)
+        return {"rwkv": jax.tree.map(
+            lambda l: jnp.broadcast_to(l, (cfg.n_layers, *l.shape)), c)}
+    if cfg.kind == "zamba":
+        sites, per, tail = cfg.zamba_structure()
+        mc = ssm_lib.init_mamba_cache(batch, cfg.d_model, cfg.ssm_state,
+                                      cfg.ssm_head_dim, dtype=dtype)
+        out = {"mamba": jax.tree.map(
+            lambda l: jnp.broadcast_to(l, (sites, per, *l.shape)), mc),
+            "attn": KVCache.init(batch, cap, cfg.n_kv, cfg.hd, dtype,
+                                 prefix=(sites,))}
+        if tail:
+            out["mamba_tail"] = jax.tree.map(
+                lambda l: jnp.broadcast_to(l, (tail, *l.shape)), mc)
+        return out
+    raise ValueError(cfg.kind)
+
+
+def _attn_step(cfg: ModelConfig, lp: Params, cache: KVCache, x: jax.Array):
+    b, s, d = x.shape
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    q = (h @ lp["wq"]).reshape(b, s, cfg.n_heads, cfg.hd)
+    k = (h @ lp["wk"]).reshape(b, s, cfg.n_kv, cfg.hd)
+    v = (h @ lp["wv"]).reshape(b, s, cfg.n_kv, cfg.hd)
+    pos = cache.pos[None, None]
+    q = rope(q, pos, cfg.rope_theta)
+    k = rope(k, pos, cfg.rope_theta)
+    o, cache = decode_attention(q, k, v, cache, window=cfg.window)
+    x = x + o.reshape(b, s, cfg.n_heads * cfg.hd) @ lp["wo"]
+    return x, cache
+
+
+def make_serve_step(cfg: ModelConfig):
+    """Returns serve_step(params, cache, tokens[B,1]) -> (logits, cache)."""
+
+    def serve_step(params, cache, batch):
+        tokens = batch["tokens"]
+        x = constrain_act_serve(params["embed"][tokens])
+
+        if cfg.kind in ("dense", "moe"):
+            def body(x, xs):
+                lp, c = xs
+                x, c = _attn_step(cfg, lp, c, x)
+                x, _ = _ffn_apply(cfg, lp, x)
+                return constrain_act_serve(x), c
+            x, new_attn = jax.lax.scan(body, x,
+                                       (params["layers"], cache["attn"]))
+            new_cache = {"attn": new_attn}
+        elif cfg.kind == "rwkv":
+            def body(x, xs):
+                lp, c = xs
+                x, c = rwkv_lib.rwkv_step(lp, c, x, lp["ln1"], lp["ln2"],
+                                          cfg.hd)
+                return x, c
+            x, new_rwkv = jax.lax.scan(body, x,
+                                       (params["layers"], cache["rwkv"]))
+            new_cache = {"rwkv": new_rwkv}
+        elif cfg.kind == "zamba":
+            sites, per, tail = cfg.zamba_structure()
+
+            def super_body(x, xs):
+                lp_site, mcache, acache = xs
+
+                def inner(carry, xs2):
+                    xc = carry
+                    lp, mc = xs2
+                    y, mc = ssm_lib.mamba_step(
+                        lp, mc, rms_norm(xc, lp["ln"], cfg.norm_eps),
+                        d_state=cfg.ssm_state, head_dim=cfg.ssm_head_dim)
+                    return xc + y, mc
+                x, mcache = jax.lax.scan(inner, x, (lp_site, mcache))
+                x, acache = _attn_step(cfg, params["shared_attn"], acache, x)
+                x, _ = _ffn_apply(cfg, params["shared_attn"], x)
+                return x, (mcache, acache)
+            x, (new_m, new_a) = jax.lax.scan(
+                super_body, x,
+                (params["layers"], cache["mamba"], cache["attn"]))
+            new_cache = {"mamba": new_m, "attn": new_a}
+            if tail:
+                def tail_body(x, xs):
+                    lp, mc = xs
+                    y, mc = ssm_lib.mamba_step(
+                        lp, mc, rms_norm(x, lp["ln"], cfg.norm_eps),
+                        d_state=cfg.ssm_state, head_dim=cfg.ssm_head_dim)
+                    return x + y, mc
+                x, new_t = jax.lax.scan(tail_body, x,
+                                        (params["tail"],
+                                         cache["mamba_tail"]))
+                new_cache["mamba_tail"] = new_t
+        else:
+            raise ValueError(cfg.kind)
+
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = _mask_padded(x @ params["lm_head"], cfg)
+        return logits, new_cache
+
+    return serve_step

@@ -1,0 +1,237 @@
+"""RWKV-6 "Finch" block (arXiv:2404.05892) — attention-free token mixing
+with data-dependent per-channel decay.
+
+Time-mix (WKV6), per head of size K=V=64:
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    y_t = r_t · (S_{t-1} + diag(u) k_t^T v_t)
+with w_t ∈ (0,1) produced from the token stream via a low-rank projection
+(the "data-dependent decay" that distinguishes RWKV-6 from RWKV-5), plus the
+usual token-shift interpolation on every projection input.  Channel-mix is
+the squared-ReLU gated FFN.
+
+Training runs a ``lax.scan`` over time on the [B,H,K,V] state (O(1) memory
+in S); decode is the same body on one token.  The state recurrence makes the
+``long_500k`` decode shape run at constant memory — no KV cache at all.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["init_rwkv_params", "rwkv_forward", "rwkv_step", "RWKVCache",
+           "init_rwkv_cache"]
+
+Params = Dict[str, jax.Array]
+
+_LORA = 64  # low-rank width of the decay projection
+
+
+def init_rwkv_params(key: jax.Array, d_model: int, d_ff: int,
+                     head_dim: int = 64, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 10)
+    s = d_model ** -0.5
+    n_heads = d_model // head_dim
+
+    def lin(k, din, dout, scale=None):
+        return (jax.random.normal(k, (din, dout), jnp.float32)
+                * (scale if scale is not None else din ** -0.5)).astype(dtype)
+
+    return {
+        # time-mix
+        "mix": (jax.random.uniform(ks[0], (5, d_model), jnp.float32)
+                ).astype(dtype),                     # lerp weights r,k,v,w,g
+        "w_r": lin(ks[1], d_model, d_model),
+        "w_k": lin(ks[2], d_model, d_model),
+        "w_v": lin(ks[3], d_model, d_model),
+        "w_g": lin(ks[4], d_model, d_model),
+        "w0": jnp.full((d_model,), -4.0, jnp.float32),
+        "w_lora_a": lin(ks[5], d_model, _LORA, 0.01),
+        "w_lora_b": lin(ks[6], _LORA, d_model, 0.01),
+        "u": (jax.random.normal(ks[7], (n_heads, head_dim), jnp.float32)
+              * 0.1).astype(jnp.float32),
+        "ln_g": jnp.ones((d_model,), dtype),
+        "w_o": lin(ks[8], d_model, d_model),
+        # channel-mix
+        "mix_c": (jax.random.uniform(ks[9], (2, d_model), jnp.float32)
+                  ).astype(dtype),
+        "c_k": lin(ks[0], d_model, d_ff),
+        "c_v": lin(ks[1], d_ff, d_model),
+        "c_r": lin(ks[2], d_model, d_model),
+    }
+
+
+def _token_shift(x: jax.Array, x_prev: jax.Array) -> jax.Array:
+    """[B,S,D] -> previous-token tensor; x_prev is the t=-1 row [B,D]."""
+    return jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+
+
+def _wkv_inputs(params: Params, x: jax.Array, xp: jax.Array, head_dim: int):
+    """Shared projection math for scan/step.  x, xp: [B,T,D]."""
+    b, t, d = x.shape
+    h = d // head_dim
+    mix = params["mix"].astype(x.dtype)
+    lerp = lambda i: x + (xp - x) * mix[i][None, None]
+    r = (lerp(0) @ params["w_r"].astype(x.dtype)).reshape(b, t, h, head_dim)
+    k = (lerp(1) @ params["w_k"].astype(x.dtype)).reshape(b, t, h, head_dim)
+    v = (lerp(2) @ params["w_v"].astype(x.dtype)).reshape(b, t, h, head_dim)
+    g = jax.nn.silu(lerp(4) @ params["w_g"].astype(x.dtype))
+    # data-dependent decay (low-rank)
+    wx = lerp(3)
+    w = (params["w0"][None, None]
+         + jnp.tanh(wx.astype(jnp.float32) @ params["w_lora_a"].astype(jnp.float32))
+         @ params["w_lora_b"].astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(w)).reshape(b, t, h, head_dim)   # decay in (0,1)
+    return r, k, v, g, w
+
+
+def _wkv_scan(r, k, v, w, u, s0):
+    """Sequential WKV (reference / decode path).
+
+    r,k,v,w: [B,T,H,K]; u: [H,K]; s0: [B,H,K,V] -> y [B,T,H,V], s_T.
+    """
+
+    def body(s, inp):
+        rt, kt, vt, wt = inp    # [B,H,K] / [B,H,V]
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
+        s = wt[..., None] * s + kv
+        return s, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0).astype(jnp.float32)
+               for t in (r, k, v, w))
+    s_t, ys = jax.lax.scan(body, s0, xs)
+    return jnp.moveaxis(ys, 0, 1), s_t
+
+
+def _wkv_chunked(r, k, v, w, u, s0, chunk: int = 128):
+    """Chunked WKV (GLA-style block decomposition) — the training path.
+
+    Equivalent to ``_wkv_scan`` (property-tested) but scans over T/chunk
+    chunks instead of T steps, so the backward pass stores T/chunk states
+    instead of T — the linear-attention analogue of Mamba-2's SSD chunking.
+
+    Inside a chunk (log-space cumulative decay L_t = Σ_{i<=t} log w_i):
+      y_t = (r_t ⊙ e^{L_{t-1}})·S_0                       (inter)
+          + Σ_{i<t} (r_t ⊙ e^{L_{t-1}-L_i})·k_i · v_i      (intra)
+          + (r_t·(u ⊙ k_t)) v_t                            (bonus diag)
+      S' = e^{L_Q} ⊙ S_0 + Σ_i (k_i ⊙ e^{L_Q-L_i}) v_iᵀ
+    """
+    b, t, h, dk = r.shape
+    q = min(chunk, t)
+    if t % q:
+        return _wkv_scan(r, k, v, w, u, s0)   # ragged fallback
+    nc = t // q
+
+    def rs(x):
+        return jnp.moveaxis(
+            x.reshape(b, nc, q, h, dk).astype(jnp.float32), 1, 0)
+
+    rc, kc, vc, wc = rs(r), rs(k), rs(v), rs(w)
+
+    @jax.checkpoint
+    def body(s, inp):
+        rt, kt, vt, wt = inp                       # [B,Q,H,K]
+        logw = jnp.log(jnp.maximum(wt, 1e-38))
+        L = jnp.cumsum(logw, axis=1)               # [B,Q,H,K]
+        Lprev = L - logw                           # L_{t-1}
+        q_dec = rt * jnp.exp(Lprev)                # r_t ⊙ e^{L_{t-1}}
+        k_dec = kt * jnp.exp(-L)                   # k_i ⊙ e^{-L_i}
+        # intra-chunk scores (strictly lower-triangular) + bonus diagonal
+        scores = jnp.einsum("bqhk,bihk->bhqi", q_dec, k_dec)
+        tri = jnp.tril(jnp.ones((q, q), bool), k=-1)
+        scores = jnp.where(tri[None, None], scores, 0.0)
+        diag = jnp.einsum("bqhk,hk,bqhk->bqh", rt, u, kt)
+        y = (jnp.einsum("bhqi,bihv->bqhv", scores, vt)
+             + diag[..., None] * vt
+             + jnp.einsum("bqhk,bhkv->bqhv", q_dec, s))
+        # chunk-final state
+        k_tail = kt * jnp.exp(L[:, -1:, :, :] - L)
+        s = (jnp.exp(L[:, -1])[..., None] * s
+             + jnp.einsum("bihk,bihv->bhkv", k_tail, vt))
+        return s, y
+
+    s_t, ys = jax.lax.scan(body, s0, (rc, kc, vc, wc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, t, h, dk)
+    return y, s_t
+
+
+def _group_norm(y: jax.Array, gamma: jax.Array, head_dim: int) -> jax.Array:
+    """Per-head LayerNorm on [B,T,H,V], flattened back to [B,T,D]."""
+    mu = y.mean(-1, keepdims=True)
+    var = y.var(-1, keepdims=True)
+    yn = (y - mu) * jax.lax.rsqrt(var + 1e-5)
+    b, t, h, v = y.shape
+    return yn.reshape(b, t, h * v) * gamma.astype(jnp.float32)
+
+
+def rwkv_time_mix(params: Params, x: jax.Array, x_prev: jax.Array,
+                  s0: jax.Array, head_dim: int = 64, chunk: int = 128
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x: [B,S,D]; returns (out, last_x, s_T)."""
+    xp = _token_shift(x, x_prev)
+    r, k, v, g, w = _wkv_inputs(params, x, xp, head_dim)
+    if x.shape[1] > 1:
+        y, s_t = _wkv_chunked(r, k, v, w, params["u"], s0, chunk)
+    else:
+        y, s_t = _wkv_scan(r, k, v, w, params["u"], s0)
+    y = _group_norm(y, params["ln_g"], head_dim).astype(x.dtype)
+    out = (y * g) @ params["w_o"].astype(x.dtype)
+    return out, x[:, -1], s_t
+
+
+def rwkv_channel_mix(params: Params, x: jax.Array, x_prev: jax.Array
+                     ) -> Tuple[jax.Array, jax.Array]:
+    xp = _token_shift(x, x_prev)
+    mix = params["mix_c"].astype(x.dtype)
+    xk = x + (xp - x) * mix[0][None, None]
+    xr = x + (xp - x) * mix[1][None, None]
+    kk = jnp.square(jax.nn.relu(xk @ params["c_k"].astype(x.dtype)))
+    out = jax.nn.sigmoid(xr @ params["c_r"].astype(x.dtype)) \
+        * (kk @ params["c_v"].astype(x.dtype))
+    return out, x[:, -1]
+
+
+class RWKVCache(NamedTuple):
+    tm_x: jax.Array     # [B, D] last token seen by time-mix
+    cm_x: jax.Array     # [B, D] last token seen by channel-mix
+    s: jax.Array        # [B, H, K, V] wkv state (f32)
+
+
+def init_rwkv_cache(batch: int, d_model: int, head_dim: int = 64,
+                    dtype=jnp.bfloat16) -> RWKVCache:
+    h = d_model // head_dim
+    return RWKVCache(tm_x=jnp.zeros((batch, d_model), dtype),
+                     cm_x=jnp.zeros((batch, d_model), dtype),
+                     s=jnp.zeros((batch, h, head_dim, head_dim), jnp.float32))
+
+
+def rwkv_forward(params: Params, x: jax.Array, ln1: jax.Array,
+                 ln2: jax.Array, head_dim: int = 64) -> jax.Array:
+    """Full RWKV block (time-mix + channel-mix, pre-RMSNorm residual)."""
+    from .layers import rms_norm
+    b, s, d = x.shape
+    h = d // head_dim
+    s0 = jnp.zeros((b, h, head_dim, head_dim), jnp.float32)
+    zero = jnp.zeros((b, d), x.dtype)
+    tm, _, _ = rwkv_time_mix(params, rms_norm(x, ln1), zero, s0, head_dim)
+    x = x + tm
+    cm, _ = rwkv_channel_mix(params, rms_norm(x, ln2), zero)
+    return x + cm
+
+
+def rwkv_step(params: Params, cache: RWKVCache, x: jax.Array,
+              ln1: jax.Array, ln2: jax.Array, head_dim: int = 64
+              ) -> Tuple[jax.Array, RWKVCache]:
+    """One-token step.  x: [B, 1, D]."""
+    from .layers import rms_norm
+    xn = rms_norm(x, ln1)
+    tm, tm_x, s_t = rwkv_time_mix(params, xn, cache.tm_x.astype(x.dtype),
+                                  cache.s, head_dim)
+    x = x + tm
+    xn = rms_norm(x, ln2)
+    cm, cm_x = rwkv_channel_mix(params, xn, cache.cm_x.astype(x.dtype))
+    x = x + cm
+    return x, RWKVCache(tm_x=tm_x.astype(cache.tm_x.dtype),
+                        cm_x=cm_x.astype(cache.cm_x.dtype), s=s_t)

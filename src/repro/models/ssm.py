@@ -1,0 +1,179 @@
+"""Mamba-2 (SSD) block — the state-space half of Zamba2 (arXiv:2411.15242,
+arXiv:2405.21060).
+
+Scalar-per-head decay ``a_t = exp(-exp(A_log)·dt_t)``; state update
+``h_t = a_t h_{t-1} + (dt_t B_t) x_t``; output ``y_t = C_t·h_t + D x_t``.
+
+Training uses the chunked SSD decomposition (chunk length Q): intra-chunk
+attention-like term + inter-chunk state carried by a ``lax.scan`` over
+chunks, so peak memory is O(S·Q) per head instead of O(S·state) per step —
+matching how Mamba-2 is actually trained.  ``mamba_step`` is the O(1)
+recurrent form used for decode (``long_500k`` runs at constant memory).
+Equivalence chunked == sequential is property-tested.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import rms_norm
+
+__all__ = ["MambaParams", "init_mamba_params", "mamba_forward", "mamba_step",
+           "MambaCache", "init_mamba_cache"]
+
+Params = Dict[str, jax.Array]
+
+_CONV_K = 4  # depthwise causal conv width
+
+
+def init_mamba_params(key: jax.Array, d_model: int, d_state: int,
+                      head_dim: int = 64, expand: int = 2,
+                      dtype=jnp.float32) -> Params:
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    conv_dim = d_inner + 2 * d_state
+    ks = jax.random.split(key, 4)
+    s_in = d_model ** -0.5
+    proj_out = 2 * d_inner + 2 * d_state + n_heads   # z, x, B, C, dt
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d_model, proj_out), jnp.float32)
+                    * s_in).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (conv_dim, _CONV_K), jnp.float32)
+                   * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)).astype(jnp.float32),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "norm": jnp.ones((d_inner,), dtype),
+        "out_proj": (jax.random.normal(ks[2], (d_inner, d_model), jnp.float32)
+                     * (d_inner ** -0.5)).astype(dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv, width 4, via shifted adds.  x: [B, S, C]."""
+    out = x * w[None, None, :, -1]
+    for i in range(1, _CONV_K):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :-i or None][:, :x.shape[1]]
+        out = out + shifted * w[None, None, :, -1 - i]
+    return out + b
+
+
+def _split_proj(zxbcdt: jax.Array, d_inner: int, d_state: int, n_heads: int):
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner:d_inner + d_inner + 2 * d_state]
+    dt = zxbcdt[..., -n_heads:]
+    return z, xbc, dt
+
+
+def mamba_forward(params: Params, x: jax.Array, *, d_state: int,
+                  head_dim: int = 64, chunk: int = 128) -> jax.Array:
+    """x: [B, S, D] -> [B, S, D] (training / prefill path, chunked SSD)."""
+    b, s, d = x.shape
+    d_inner = params["out_proj"].shape[0]
+    n_heads = d_inner // head_dim
+
+    zxbcdt = x @ params["in_proj"].astype(x.dtype)
+    z, xbc, dt = _split_proj(zxbcdt, d_inner, d_state, n_heads)
+    xbc = jax.nn.silu(_causal_conv(xbc, params["conv_w"].astype(x.dtype),
+                                   params["conv_b"].astype(x.dtype)))
+    xs = xbc[..., :d_inner].reshape(b, s, n_heads, head_dim)
+    Bm = xbc[..., d_inner:d_inner + d_state]                    # [B,S,N]
+    Cm = xbc[..., d_inner + d_state:]                           # [B,S,N]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"][None, None])       # [B,S,H]
+    a_log = -jnp.exp(params["A_log"])[None, None] * dt          # log a_t <= 0
+
+    q = min(chunk, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+
+    def rs(t, *extra):  # [B, S, ...] -> [nc, B, Q, ...]
+        return jnp.moveaxis(t.reshape(b, nc, q, *t.shape[2:]), 0, 1)
+
+    xs_c, b_c, c_c = rs(xs), rs(Bm), rs(Cm)
+    dt_c, al_c = rs(dt), rs(a_log)
+
+    @jax.checkpoint
+    def chunk_body(h_in, inputs):
+        xck, bck, cck, dtk, alk = inputs          # [B,Q,...]
+        l = jnp.cumsum(alk, axis=1)               # [B,Q,H] cumulative log a
+        # intra-chunk: scores[q_,t] = C_q·B_t · exp(l_q - l_t) · dt_t, t<=q_
+        cb = jnp.einsum("bqn,btn->bqt", cck.astype(jnp.float32),
+                        bck.astype(jnp.float32))
+        causal = jnp.tril(jnp.ones((q, q), bool))[None, :, :, None]
+        # mask BEFORE exp: the upper triangle would overflow (l decreasing)
+        ldiff = jnp.where(causal, l[:, :, None] - l[:, None, :], -jnp.inf)
+        decay = jnp.exp(ldiff)                                  # [B,Q,Q,H]
+        scores = cb[..., None] * decay * dtk[:, None, :, :]     # [B,Q,Q,H]
+        y_intra = jnp.einsum("bqth,bthp->bqhp", scores,
+                             xs_f := xck.astype(jnp.float32))
+        # inter-chunk: y += C_t · exp(l_t) h_in
+        y_inter = jnp.einsum("bqn,bqh,bhpn->bqhp", cck.astype(jnp.float32),
+                             jnp.exp(l), h_in)
+        # next chunk's incoming state
+        tail = jnp.exp(l[:, -1:, :] - l)                        # [B,Q,H]
+        s_chunk = jnp.einsum("bth,bth,btn,bthp->bhpn", tail, dtk,
+                             bck.astype(jnp.float32), xs_f)
+        h_out = jnp.exp(l[:, -1])[:, :, None, None] * h_in + s_chunk
+        return h_out, y_intra + y_inter
+
+    h0 = jnp.zeros((b, n_heads, head_dim, d_state), jnp.float32)
+    _, ys = jax.lax.scan(chunk_body, h0, (xs_c, b_c, c_c, dt_c, al_c))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, n_heads, head_dim)
+    y = y + params["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, s, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"])
+    return y @ params["out_proj"].astype(x.dtype)
+
+
+class MambaCache(NamedTuple):
+    conv: jax.Array   # [B, conv_dim, K-1] last inputs
+    h: jax.Array      # [B, H, P, N] ssm state (f32)
+
+
+def init_mamba_cache(batch: int, d_model: int, d_state: int,
+                     head_dim: int = 64, expand: int = 2,
+                     dtype=jnp.bfloat16) -> MambaCache:
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    conv_dim = d_inner + 2 * d_state
+    return MambaCache(conv=jnp.zeros((batch, conv_dim, _CONV_K - 1), dtype),
+                      h=jnp.zeros((batch, n_heads, head_dim, d_state),
+                                  jnp.float32))
+
+
+def mamba_step(params: Params, cache: MambaCache, x: jax.Array, *,
+               d_state: int, head_dim: int = 64
+               ) -> Tuple[jax.Array, MambaCache]:
+    """One-token recurrent step.  x: [B, 1, D]."""
+    b, _, d = x.shape
+    d_inner = params["out_proj"].shape[0]
+    n_heads = d_inner // head_dim
+
+    zxbcdt = x[:, 0] @ params["in_proj"].astype(x.dtype)
+    z, xbc, dt = _split_proj(zxbcdt, d_inner, d_state, n_heads)
+    # conv over (cached K-1 inputs, current)
+    window = jnp.concatenate([cache.conv.astype(x.dtype),
+                              xbc[:, :, None]], axis=-1)   # [B,C,K]
+    conv_out = (window * params["conv_w"][None].astype(x.dtype)).sum(-1)
+    xbc = jax.nn.silu(conv_out + params["conv_b"].astype(x.dtype))
+    xs = xbc[..., :d_inner].reshape(b, n_heads, head_dim)
+    Bm = xbc[..., d_inner:d_inner + d_state]
+    Cm = xbc[..., d_inner + d_state:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"][None])
+    a = jnp.exp(-jnp.exp(params["A_log"])[None] * dt)          # [B,H]
+    h = (a[:, :, None, None] * cache.h
+         + jnp.einsum("bh,bhp,bn->bhpn", dt, xs.astype(jnp.float32),
+                      Bm.astype(jnp.float32)))
+    y = jnp.einsum("bhpn,bn->bhp", h, Cm.astype(jnp.float32))
+    y = y + params["D"][None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"])
+    out = (y @ params["out_proj"].astype(x.dtype))[:, None]
+    new_cache = MambaCache(conv=window[:, :, 1:], h=h)
+    return out, new_cache

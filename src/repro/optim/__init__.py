@@ -1,0 +1,7 @@
+from .optimizers import (Optimizer, sgd, adam, adamw, clip_by_global_norm,
+                         cosine_warmup_schedule)
+from .compression import (compress_grads, decompress_grads, CompressionSpec)
+
+__all__ = ["Optimizer", "sgd", "adam", "adamw", "clip_by_global_norm",
+           "cosine_warmup_schedule", "compress_grads", "decompress_grads",
+           "CompressionSpec"]

@@ -1,0 +1,63 @@
+"""Gradient / feature compression for the synchronization and transfer paths.
+
+The paper (§VIII) names "data quantization to relieve the stress on the PCIe
+bandwidth" as the remedy for Data-Transfer-bound configurations; we implement
+it: int8 (per-tensor absmax scale) and bf16 compression usable on
+
+* the Synchronizer's gradient all-reduce path (halves/quarters Eq. 13's
+  numerator), and
+* the Feature Loader -> Data Transfer path (halves Eq. 8's numerator).
+
+Compression is lossy; it is therefore OFF by default (the paper's headline
+claim is that its optimizations do not alter training semantics) and is
+reported separately in benchmarks as a beyond-paper option.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionSpec:
+    method: str = "none"          # "none" | "bf16" | "int8"
+
+    @property
+    def ratio(self) -> float:
+        """Compression ratio vs fp32 (for the performance model)."""
+        return {"none": 1.0, "bf16": 0.5, "int8": 0.25}[self.method]
+
+
+def _q_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32))), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127
+                 ).astype(jnp.int8)
+    return q, scale
+
+
+def compress_grads(grads: PyTree, spec: CompressionSpec) -> PyTree:
+    if spec.method == "none":
+        return grads
+    if spec.method == "bf16":
+        return jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+    if spec.method == "int8":
+        return jax.tree.map(_q_int8, grads)
+    raise ValueError(spec.method)
+
+
+def decompress_grads(comp: PyTree, spec: CompressionSpec,
+                     like: PyTree) -> PyTree:
+    if spec.method == "none":
+        return comp
+    if spec.method == "bf16":
+        return jax.tree.map(lambda g, l: g.astype(l.dtype), comp, like)
+    if spec.method == "int8":
+        return jax.tree.map(
+            lambda ql, l: (ql[0].astype(jnp.float32) * ql[1]).astype(l.dtype),
+            comp, like, is_leaf=lambda x: isinstance(x, tuple))
+    raise ValueError(spec.method)

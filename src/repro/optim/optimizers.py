@@ -1,0 +1,110 @@
+"""Minimal pure-JAX optimizers (no optax in this environment).
+
+API mirrors optax: ``opt = adamw(...); state = opt.init(params);
+updates, state = opt.update(grads, state, params); params = apply(params,
+updates)`` — kept as plain pytrees so they shard transparently under pjit
+(optimizer state inherits the parameter sharding rules in ``repro.dist``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, Optional[PyTree]], Tuple[PyTree, PyTree]]
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def _to_schedule(lr) -> Callable[[jax.Array], jax.Array]:
+    if callable(lr):
+        return lr
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def sgd(lr, momentum: float = 0.0) -> Optimizer:
+    sched = _to_schedule(lr)
+
+    def init(params):
+        mu = (jax.tree.map(jnp.zeros_like, params) if momentum else None)
+        return {"step": jnp.zeros((), jnp.int32), "mu": mu}
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        lr_t = sched(step)
+        if momentum:
+            mu = jax.tree.map(lambda m, g: momentum * m + g, state["mu"], grads)
+            upd = jax.tree.map(lambda m: -lr_t * m, mu)
+            return upd, {"step": step, "mu": mu}
+        upd = jax.tree.map(lambda g: -lr_t * g, grads)
+        return upd, {"step": step, "mu": None}
+
+    return Optimizer(init, update)
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+    return adamw(lr, b1=b1, b2=b2, eps=eps, weight_decay=0.0)
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    sched = _to_schedule(lr)
+
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        }
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        lr_t = sched(step)
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], g32)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], g32)
+        c1 = 1 - b1 ** step.astype(jnp.float32)
+        c2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd_leaf(m_, v_, p):
+            u = -lr_t * (m_ / c1) / (jnp.sqrt(v_ / c2) + eps)
+            if weight_decay and p is not None:
+                u = u - lr_t * weight_decay * p.astype(jnp.float32)
+            return u
+
+        if params is None:
+            upd = jax.tree.map(lambda m_, v_: upd_leaf(m_, v_, None), m, v)
+        else:
+            upd = jax.tree.map(upd_leaf, m, v, params)
+        return upd, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> Tuple[PyTree, jax.Array]:
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-12))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), gnorm
+
+
+def cosine_warmup_schedule(peak_lr: float, warmup_steps: int,
+                           total_steps: int, min_ratio: float = 0.1):
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = step / jnp.maximum(1.0, warmup_steps)
+        prog = jnp.clip((step - warmup_steps)
+                        / jnp.maximum(1.0, total_steps - warmup_steps), 0, 1)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return peak_lr * jnp.minimum(warm, cos)
+    return sched

@@ -1,0 +1,92 @@
+"""Per-architecture smoke tests: instantiate the REDUCED config of each
+assigned arch family and run one forward/train step (and one decode step)
+on CPU, asserting output shapes and the absence of NaNs.
+
+The FULL configs are exercised only via the dry-run (ShapeDtypeStruct,
+no allocation) — see launch/dryrun.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_arch
+from repro.models import (init_decode_cache, init_params, loss_fn,
+                          make_serve_step, make_train_step)
+from repro.optim import adamw
+
+B, S = 2, 32
+
+
+def _batch(cfg, key):
+    if cfg.frontend == "audio_stub":
+        emb = jax.random.normal(key, (B, S, cfg.d_model), jnp.float32)
+        labels = jax.random.randint(key, (B, S), 0, cfg.vocab)
+        return {"embeds": emb.astype(cfg.jdtype), "labels": labels}
+    if cfg.frontend == "vision_stub":
+        nv = cfg.vision_tokens
+        toks = jax.random.randint(key, (B, S - nv), 0, cfg.vocab)
+        vis = jax.random.normal(key, (B, nv, cfg.d_model), jnp.float32)
+        return {"tokens": toks, "vision_embeds": vis.astype(cfg.jdtype),
+                "labels": toks}
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    return {"tokens": toks, "labels": toks}
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_train_step_smoke(arch):
+    cfg = get_arch(arch, reduced=True)
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg)
+    opt = adamw(1e-3)
+    opt_state = opt.init(params)
+    step = jax.jit(make_train_step(cfg, opt))
+    batch = _batch(cfg, key)
+    params2, opt_state2, metrics = step(params, opt_state, batch)
+    loss = float(metrics["loss"])
+    assert np.isfinite(loss), f"{arch}: non-finite loss {loss}"
+    assert loss > 0
+    # params actually changed and stayed finite
+    for p_old, p_new in zip(jax.tree.leaves(params), jax.tree.leaves(params2)):
+        assert p_new.shape == p_old.shape
+        assert bool(jnp.isfinite(p_new).all()), f"{arch}: NaN in params"
+    changed = any(bool(jnp.any(a != b)) for a, b in
+                  zip(jax.tree.leaves(params), jax.tree.leaves(params2)))
+    assert changed, f"{arch}: train step did not update params"
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_serve_step_smoke(arch):
+    cfg = get_arch(arch, reduced=True)
+    key = jax.random.PRNGKey(1)
+    params = init_params(key, cfg)
+    step = jax.jit(make_serve_step(cfg))
+    cache = init_decode_cache(cfg, B, seq_len=64)
+    toks = jax.random.randint(key, (B, 1), 0, cfg.vocab)
+    logits, cache2 = step(params, cache, {"tokens": toks})
+    assert logits.shape == (B, 1, cfg.vocab_padded)
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: NaN logits"
+    # a second step must also work (cache threading)
+    logits2, _ = step(params, cache2, {"tokens": toks})
+    assert bool(jnp.isfinite(logits2).all())
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_full_config_matches_assignment(arch):
+    """The FULL configs carry the exact assigned hyperparameters."""
+    spec = {
+        "mixtral-8x22b": (56, 6144, 48, 8, 16384, 32768),
+        "llama4-scout-17b-a16e": (48, 5120, 40, 8, 8192, 202048),
+        "zamba2-7b": (81, 3584, 32, 32, 14336, 32000),
+        "musicgen-medium": (48, 1536, 24, 24, 6144, 2048),
+        "smollm-135m": (30, 576, 9, 3, 1536, 49152),
+        "smollm-360m": (32, 960, 15, 5, 2560, 49152),
+        "minitron-4b": (32, 3072, 24, 8, 9216, 256000),
+        "llama3.2-1b": (16, 2048, 32, 8, 8192, 128256),
+        "rwkv6-1.6b": (24, 2048, 32, 32, 7168, 65536),
+        "internvl2-1b": (24, 896, 14, 2, 4864, 151655),
+    }[arch]
+    cfg = get_arch(arch)
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.d_ff,
+           cfg.vocab)
+    assert got == spec, f"{arch}: {got} != {spec}"

@@ -1,0 +1,78 @@
+"""Checkpoint: roundtrip, integrity, rotation, async, resume."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointManager, latest_step, restore, save,
+                              save_async, wait_for_async)
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"params": {"w1": jax.random.normal(k, (8, 16)),
+                       "b1": jnp.zeros(16, jnp.bfloat16)},
+            "opt": {"step": jnp.asarray(7, jnp.int32),
+                    "m": {"w1": jnp.ones((8, 16)),
+                          "b1": jnp.ones(16, jnp.float32)}}}
+
+
+def test_roundtrip(tmp_path):
+    tree = _tree()
+    save(str(tmp_path), 42, tree, meta={"note": "x"})
+    step, restored = restore(str(tmp_path), None, tree)
+    assert step == 42
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert a.dtype == b.dtype  # bf16 round-trips
+
+
+def test_integrity_detects_corruption(tmp_path):
+    save(str(tmp_path), 1, _tree())
+    ckpt = os.path.join(str(tmp_path), "step_00000001")
+    victim = [f for f in os.listdir(ckpt) if f.endswith(".bin")][0]
+    path = os.path.join(ckpt, victim)
+    raw = bytearray(open(path, "rb").read())
+    raw[0] ^= 0xFF
+    open(path, "wb").write(bytes(raw))
+    with pytest.raises(IOError, match="sha256"):
+        restore(str(tmp_path), 1, _tree())
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    save(str(tmp_path), 1, _tree())
+    bad = _tree()
+    bad["params"]["w1"] = jnp.zeros((4, 4))
+    with pytest.raises(ValueError, match="shape"):
+        restore(str(tmp_path), 1, bad)
+
+
+def test_rotation_keeps_last_k(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _tree(s))
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(str(tmp_path)))
+    assert steps == [3, 4]
+
+
+def test_async_save_then_restore(tmp_path):
+    save_async(str(tmp_path), 9, _tree(3))
+    wait_for_async()
+    assert latest_step(str(tmp_path)) == 9
+    step, restored = restore(str(tmp_path), None, _tree())
+    assert step == 9
+
+
+def test_restore_latest_resumes(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=True)
+    t = _tree(1)
+    mgr.save(5, t)
+    mgr.finalize()
+    got = mgr.restore_latest(_tree(0))
+    assert got is not None
+    step, tree = got
+    assert step == 5
+    np.testing.assert_array_equal(np.asarray(tree["params"]["w1"]),
+                                  np.asarray(t["params"]["w1"]))

@@ -1,0 +1,99 @@
+"""DRM engine (Algorithm 1) unit + property tests."""
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core import Assignment, DRMEngine, StageTimes
+
+
+def _mk(cpu=256, accel=256, n=2, frac=0.5, threads=None):
+    return Assignment(cpu_batch=cpu, accel_batch=accel, n_accel=n,
+                      sample_frac_accel=frac,
+                      threads=dict(threads or {"sample": 2, "load": 2,
+                                               "train": 2}))
+
+
+times_strategy = st.builds(
+    StageTimes,
+    t_sa=st.floats(0.0, 1.0), t_sc=st.floats(0.001, 1.0),
+    t_load=st.floats(0.001, 1.0), t_tran=st.floats(0.0, 1.0),
+    t_tc=st.floats(0.001, 1.0), t_ta=st.floats(0.0, 1.0))
+
+
+@given(times_strategy, st.integers(0, 512), st.integers(1, 512),
+       st.integers(1, 4))
+@settings(max_examples=100, deadline=None)
+def test_total_batch_conserved(times, cpu, accel, n_accel):
+    a = _mk(cpu=cpu, accel=accel, n=n_accel)
+    total = a.total_batch
+    engine = DRMEngine(a)
+    for _ in range(5):
+        a = engine.step(times)
+        assert a.total_batch == total, "balance_work must conserve batch"
+        assert a.cpu_batch >= 0 and a.accel_batch >= 0
+
+
+@given(times_strategy)
+@settings(max_examples=100, deadline=None)
+def test_threads_conserved_and_positive(times):
+    a = _mk()
+    total_threads = sum(a.threads.values())
+    engine = DRMEngine(a)
+    for _ in range(5):
+        a = engine.step(times)
+        assert sum(a.threads.values()) == total_threads
+        assert all(v >= 1 for v in a.threads.values())
+
+
+@given(times_strategy)
+@settings(max_examples=50, deadline=None)
+def test_sample_frac_in_bounds(times):
+    engine = DRMEngine(_mk())
+    for _ in range(8):
+        a = engine.step(times)
+        assert 0.0 <= a.sample_frac_accel <= 1.0
+
+
+def test_bottleneck_accel_moves_work_to_cpu():
+    """Algorithm 1 line 13: T_Accel bottleneck -> balance_work."""
+    engine = DRMEngine(_mk(cpu=100, accel=100))
+    t = StageTimes(t_sa=0.01, t_sc=0.01, t_load=0.01, t_tran=0.02,
+                   t_tc=0.05, t_ta=0.5)
+    a = engine.step(t)
+    assert a.accel_batch < 100 and a.cpu_batch > 100
+
+
+def test_bottleneck_cpu_trainer_moves_work_to_accel():
+    """Algorithm 1 line 25 + fastest==T_Accel -> balance_work."""
+    engine = DRMEngine(_mk(cpu=100, accel=100))
+    t = StageTimes(t_sa=0.03, t_sc=0.03, t_load=0.04, t_tran=0.001,
+                   t_tc=0.5, t_ta=0.001)
+    a = engine.step(t)
+    assert a.cpu_batch < 100
+
+
+def test_bottleneck_loader_moves_threads():
+    """Algorithm 1 line 15: T_Load bottleneck -> balance_thread."""
+    engine = DRMEngine(_mk())
+    t = StageTimes(t_sa=0.1, t_sc=0.01, t_load=0.5, t_tran=0.1,
+                   t_tc=0.2, t_ta=0.1)
+    a = engine.step(t)
+    assert a.threads["load"] == 3
+    assert a.threads["sample"] == 1  # fastest CPU task donated
+
+
+def test_drm_converges_on_synthetic_imbalance():
+    """Feedback loop in a realistic regime (sampling/loading costs are
+    comparable to training, as in the paper's pipeline): times
+    proportional to shares -> DRM equalizes the trainer shares."""
+    a = _mk(cpu=480, accel=16, n=1)
+    engine = DRMEngine(a, damping=0.5)
+    for _ in range(60):
+        total = a.total_batch
+        t = StageTimes(t_sa=0.0,
+                       t_sc=0.3 * total,          # CPU sampling
+                       t_load=0.4 * total,        # feature loading
+                       t_tran=0.2 * a.accel_batch,
+                       t_tc=1.0 * a.cpu_batch,
+                       t_ta=1.0 * a.accel_batch)
+        a = engine.step(t)
+    assert abs(a.cpu_batch - a.accel_batch) < 0.2 * a.total_batch

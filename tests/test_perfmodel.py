@@ -1,0 +1,79 @@
+"""Performance model (Eqs. 5-13) sanity and invariants."""
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core import (PLATFORMS, WorkloadSpec, initial_task_mapping,
+                        mteps, predict, predict_epoch_time)
+from repro.core.perfmodel import (t_aggregate, t_load, t_sync, t_trainer,
+                                  t_trans, t_update)
+
+W = WorkloadSpec(batch_size=1024, fanouts=(25, 10), layer_dims=(100, 256, 47))
+HOST = PLATFORMS["epyc-7763"]
+GPU = PLATFORMS["rtx-a5000"]
+FPGA = PLATFORMS["alveo-u250"]
+
+
+def test_frontier_math_matches_paper_setup():
+    # batch 1024, fanouts (25,10): |V0| = 1024*26*11
+    assert W.frontier_sizes() == (1024, 1024 * 26, 1024 * 26 * 11)
+    assert W.loaded_rows() == 1024 * 286
+    assert W.total_edges() == 1024 * 25 + 1024 * 26 * 10
+
+
+def test_eq7_eq8_load_transfer_scaling():
+    t1 = t_load(W, HOST, n_trainers=1)
+    t4 = t_load(W, HOST, n_trainers=4)
+    assert abs(t4 / t1 - 4.0) < 1e-9       # Eq. 7 linear in n
+    assert t_trans(W, GPU) > 0
+    # PCIe slower than host RAM -> transfer slower than a 1-trainer load
+    assert t_trans(W, GPU) > t_load(W, HOST, 1)
+
+
+def test_eq10_pipelined_faster_or_equal():
+    """⊕ = max (FPGA, pipelined) <= ⊕ = sum (CPU/GPU style)."""
+    w = W
+    t_pipe = t_trainer(w, FPGA)
+    unpipelined = FPGA.__class__(**{**FPGA.__dict__,
+                                    "pipelined_agg_update": False})
+    assert t_pipe <= t_trainer(w, unpipelined)
+
+
+def test_eq13_sync_counts_model_twice():
+    one = t_sync(W, GPU, compression_ratio=1.0)
+    half = t_sync(W, GPU, compression_ratio=0.5)
+    assert abs(one / half - 2.0) < 1e-9
+
+
+@given(st.integers(64, 4096))
+@settings(max_examples=20, deadline=None)
+def test_trainer_time_monotonic_in_batch(batch):
+    w1 = WorkloadSpec(batch, (25, 10), (100, 256, 47))
+    w2 = WorkloadSpec(batch * 2, (25, 10), (100, 256, 47))
+    for dev in (HOST, GPU, FPGA):
+        assert t_trainer(w2, dev) > t_trainer(w1, dev)
+
+
+def test_initial_task_mapping_conserves_batch():
+    m = initial_task_mapping(HOST, FPGA, n_accel=4, total_batch=1024,
+                             fanouts=(25, 10), layer_dims=(100, 256, 47))
+    assert m["cpu"] + 4 * m["accel_each"] <= 1024
+    assert m["cpu"] >= 0 and m["accel_each"] >= 0
+    # hybrid must not be slower than accel-only per the model itself
+    w_cpu = WorkloadSpec(m["cpu"], (25, 10), (100, 256, 47))
+    w_acc = WorkloadSpec(m["accel_each"], (25, 10), (100, 256, 47))
+    hybrid = predict(HOST, FPGA, 4, w_cpu, w_acc).t_execution
+    w0 = WorkloadSpec(0, (25, 10), (100, 256, 47))
+    wall = WorkloadSpec(1024 // 4, (25, 10), (100, 256, 47))
+    accel_only = predict(HOST, FPGA, 4, w0, wall).t_execution
+    assert hybrid <= accel_only * (1 + 1e-9)
+
+
+def test_mteps_and_epoch_time():
+    pred = predict(HOST, FPGA, 4,
+                   WorkloadSpec(0, (25, 10), (100, 256, 47)),
+                   WorkloadSpec(256, (25, 10), (100, 256, 47)))
+    assert pred.t_execution > 0
+    assert mteps(1_000_000, 0.5) == 2.0
+    epoch = predict_epoch_time(2_449_029, 1024, pred)
+    assert epoch > pred.t_execution

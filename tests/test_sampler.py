@@ -1,0 +1,90 @@
+"""Property tests for the mini-batch sampler (hypothesis)."""
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.graph import (NumpySampler, frontier_sizes, make_dataset,
+                         synth_powerlaw_graph)
+
+
+@st.composite
+def graph_and_batch(draw):
+    n = draw(st.integers(50, 400))
+    deg = draw(st.floats(1.0, 8.0))
+    seed = draw(st.integers(0, 100))
+    batch = draw(st.integers(1, 16))
+    fanouts = draw(st.sampled_from([(2,), (3, 2), (4, 3, 2)]))
+    return n, deg, seed, batch, fanouts
+
+
+@given(graph_and_batch())
+@settings(max_examples=25, deadline=None)
+def test_sampled_edges_exist_in_graph(params):
+    n, deg, seed, batch, fanouts = params
+    g = synth_powerlaw_graph(n, deg, seed=seed)
+    s = NumpySampler(g, fanouts=fanouts, seed=seed)
+    rng = np.random.default_rng(seed)
+    targets = rng.integers(0, n, batch)
+    mb = s.sample(targets, np.zeros(batch, np.int32))
+
+    sizes = frontier_sizes(batch, fanouts)
+    degs = np.diff(g.indptr)
+    frontier = np.asarray(targets, np.int64)
+    for hop, fan in enumerate(fanouts):
+        src = np.asarray(mb.hop_src[hop])
+        assert src.shape == (sizes[hop] * fan,)
+        dst = np.repeat(frontier, fan)
+        for u, v in zip(src, dst):
+            if degs[v] == 0:
+                assert u == v, "deg-0 vertex must self-loop"
+            else:
+                nbrs = g.indices[g.indptr[v]:g.indptr[v + 1]]
+                assert u in nbrs, f"sampled edge ({u}<-{v}) not in graph"
+        frontier = np.concatenate([frontier, src])
+    assert frontier.shape[0] == sizes[len(fanouts)]
+
+
+@given(graph_and_batch())
+@settings(max_examples=15, deadline=None)
+def test_frontier_and_edge_counts(params):
+    n, deg, seed, batch, fanouts = params
+    g = synth_powerlaw_graph(n, deg, seed=seed)
+    s = NumpySampler(g, fanouts=fanouts, seed=seed)
+    targets = np.arange(min(batch, n))
+    mb = s.sample(targets, np.zeros(len(targets), np.int32))
+    sizes = frontier_sizes(len(targets), fanouts)
+    # MTEPS numerator (Eq. 5): total sampled edges
+    expect = sum(sizes[h] * f for h, f in enumerate(fanouts))
+    assert mb.edges_traversed() == expect
+    for l in range(len(fanouts) + 1):
+        assert mb.frontier(l).shape[0] == sizes[l]
+
+
+def test_jax_sampler_matches_shapes():
+    import jax
+    import jax.numpy as jnp
+    from repro.graph import sample_minibatch_jax
+    g = synth_powerlaw_graph(200, 4.0, seed=1)
+    targets = np.arange(8)
+    mb = sample_minibatch_jax(jax.random.PRNGKey(0),
+                              jnp.asarray(g.indptr), jnp.asarray(g.indices),
+                              jnp.asarray(targets),
+                              jnp.zeros(8, jnp.int32), fanouts=(3, 2))
+    sizes = frontier_sizes(8, (3, 2))
+    assert mb.frontier(2).shape[0] == sizes[2]
+    # all sampled vertices are valid ids
+    for hop in range(2):
+        src = np.asarray(mb.hop_src[hop])
+        assert (src >= 0).all() and (src < 200).all()
+
+
+def test_dataset_scaling_preserves_dims():
+    ds = make_dataset("ogbn-papers100M", scale=1e-4, seed=0)
+    assert ds.layer_dims == (128, 256, 172)
+    assert ds.feat_dim == 128
+    x = ds.take_features(np.array([0, 5, 7]))
+    assert x.shape == (3, 128)
+    # deterministic features
+    x2 = ds.take_features(np.array([0, 5, 7]))
+    np.testing.assert_array_equal(x, x2)

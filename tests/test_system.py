@@ -1,0 +1,61 @@
+"""System-level behaviour checks crossing module boundaries."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import (ARCHS, SHAPES, all_cells, cell_applicable,
+                           get_arch, input_specs)
+from repro.models import init_decode_cache, init_params
+
+
+def test_cell_matrix_counts():
+    cells = list(all_cells())
+    assert len(cells) == 40  # 10 archs x 4 shapes
+    runnable = [c for c in cells if c[3]]
+    skipped = [c for c in cells if not c[3]]
+    assert len(runnable) == 33
+    # exactly the sub-quadratic archs run long_500k
+    long_ok = {c[0] for c in runnable if c[2].name == "long_500k"}
+    assert long_ok == {"mixtral-8x22b", "zamba2-7b", "rwkv6-1.6b"}
+    for _, _, shape, _, reason in skipped:
+        assert shape.name == "long_500k" and "sub-quadratic" in reason
+
+
+def test_input_specs_shapes():
+    for name in ARCHS:
+        cfg = get_arch(name)
+        for shape in SHAPES.values():
+            ok, _ = cell_applicable(cfg, shape)
+            if not ok:
+                continue
+            spec = input_specs(cfg, shape)
+            if shape.step == "decode":
+                assert spec["tokens"].shape == (shape.global_batch, 1)
+            else:
+                total = sum(v.shape[1] for k, v in spec.items()
+                            if k in ("tokens", "embeds", "vision_embeds"))
+                assert total == shape.seq_len, (name, shape.name)
+
+
+def test_decode_cache_abstract_sizes():
+    """Cache pytrees build abstractly (no allocation) for every decode
+    cell, and SWA caches are capped at the window size."""
+    for name in ARCHS:
+        cfg = get_arch(name)
+        shape = SHAPES["decode_32k"]
+        cache = jax.eval_shape(
+            lambda: init_decode_cache(cfg, shape.global_batch,
+                                      shape.seq_len))
+        leaves = jax.tree.leaves(cache)
+        assert leaves, name
+        if cfg.window:
+            kv = cache["attn"].k
+            assert kv.shape[-3] == min(cfg.window, shape.seq_len)
+
+
+def test_reduced_configs_are_small():
+    for name in ARCHS:
+        red = get_arch(name, reduced=True)
+        p = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), red))
+        n = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(p))
+        assert n < 20e6, f"{name} reduced config too large ({n/1e6:.1f}M)"
