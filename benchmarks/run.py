@@ -7,12 +7,13 @@
 #   table6 epoch-time comparison vs PaGraph / P^3 / DistDGLv2
 #   table7 TFLOPS-normalized epoch-time comparison
 #   fig11  optimization ablation (baseline/+hybrid/+DRM/+TFP), measured
+#   cache  device feature-cache ablation (fraction x dataset), measured
 #   roofline  per-(arch x shape x mesh) terms from the dry-run JSON
 def main() -> None:
     print("name,us_per_call,derived")
     from . import (fig8_perfmodel, fig9_scalability, fig10_crossplatform,
-                   fig11_ablation, roofline, table6_epoch_time,
-                   table7_normalized)
+                   fig11_ablation, fig_cache_ablation, roofline,
+                   table6_epoch_time, table7_normalized)
     fig8_perfmodel.run()
     fig9_scalability.run()
     fig10_crossplatform.run()
@@ -20,6 +21,7 @@ def main() -> None:
     table7_normalized.run()
     fig11_ablation.run()
     fig11_ablation.run_projected()
+    fig_cache_ablation.run()
     roofline.run()
 
 if __name__ == '__main__':

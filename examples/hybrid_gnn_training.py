@@ -28,13 +28,19 @@ def main():
     ap.add_argument("--n-accel", type=int, default=2)
     ap.add_argument("--agg-impl", default="dense",
                     choices=["dense", "segsum", "pallas", "pallas_fused"])
+    ap.add_argument("--cache-fraction", type=float, default=0.0,
+                    help="pin this fraction of the hottest node features "
+                         "on each accelerator (0 = off)")
+    ap.add_argument("--feature-backend", default="auto",
+                    choices=["auto", "dense", "hashed", "partitioned"])
     ap.add_argument("--inject-failure", type=int, default=0,
                     help="kill accel0 at this iteration (0 = off)")
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args()
 
     fanouts = tuple(int(x) for x in args.fanouts.split(","))
-    ds = make_dataset(args.dataset, scale=args.scale, seed=0)
+    ds = make_dataset(args.dataset, scale=args.scale, seed=0,
+                      feature_backend=args.feature_backend)
     print(f"{ds.name}: |V|={ds.num_nodes:,} |E|={ds.num_edges:,} "
           f"dims={ds.layer_dims}")
     gnn = GNNConfig(model=args.model, layer_dims=ds.layer_dims,
@@ -42,6 +48,7 @@ def main():
                     agg_impl=args.agg_impl)
     hcfg = HybridConfig(total_batch=args.batch, n_accel=args.n_accel,
                         hybrid=True, use_drm=True, tfp_depth=2, lr=3e-3,
+                        cache_fraction=args.cache_fraction,
                         ckpt_every=50 if args.ckpt_dir else 0)
     tr = HybridGNNTrainer(ds, gnn, hcfg)
     if args.ckpt_dir:
@@ -63,6 +70,13 @@ def main():
     accs = [m.acc for m in hist[-20:]]
     print(f"\nfinal: loss {hist[-1].loss:.3f}  acc(last20) "
           f"{np.mean(accs):.3f}  mean {tr.mean_mteps():.2f} MTEPS")
+    if tr.cache is not None:
+        tf = tr.feature_traffic()
+        print(f"feature cache: hit {tf['hit_rate']:.3f} "
+              f"(model {tr.cache.expected_hit_rate:.3f}), shipped "
+              f"{tf['shipped_bytes']/1e6:.1f} MB, saved "
+              f"{tf['saved_bytes']/1e6:.1f} MB "
+              f"({tf['reduction']:.2f}x reduction)")
     if tr._failed:
         print(f"survived failures: {sorted(tr._failed)}")
 

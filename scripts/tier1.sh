@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# Tier-1 verification: the full test suite plus a ~30 s cache-ablation
+# smoke bench (asserts the >= 2x feature-byte reduction at a 20% cache
+# fraction and cached/uncached loss equivalence).
+#
+#   ./scripts/tier1.sh            # everything
+#   ./scripts/tier1.sh --fast     # skip the 'slow' subprocess-compile tests
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+MARK=()
+if [[ "${1:-}" == "--fast" ]]; then
+    MARK=(-m "not slow")
+fi
+
+python -m pytest -x -q "${MARK[@]}"
+python -m benchmarks.fig_cache_ablation --smoke
+echo "tier1: OK"

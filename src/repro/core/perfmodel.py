@@ -56,6 +56,10 @@ class WorkloadSpec:
     layer_dims: Tuple[int, ...]       # (f0, f1, f2)
     feat_bytes: int = 4               # S_feat
     model: str = "sage"
+    # fraction of loaded rows served by the device-resident feature cache
+    # (featcache.FeatureCache): scales the Eq. 7/8 gather/transfer traffic
+    # by (1 - h).  0 reproduces the paper's uncached equations exactly.
+    cache_hit_rate: float = 0.0
 
     def frontier_sizes(self) -> Tuple[int, ...]:
         out = [self.batch_size]
@@ -75,6 +79,10 @@ class WorkloadSpec:
 
     def loaded_rows(self) -> int:
         return self.frontier_sizes()[-1]
+
+    def miss_rows(self) -> float:
+        """Expected rows actually gathered+shipped after cache hits."""
+        return self.loaded_rows() * (1.0 - self.cache_hit_rate)
 
     def model_bytes(self) -> int:
         """Σ_l f^{l-1} × f^l × S_feat (Eq. 13 numerator)."""
@@ -102,14 +110,15 @@ class StagePrediction:
 
 
 def t_load(w: WorkloadSpec, host: PlatformSpec, n_trainers: int) -> float:
-    """Eq. 7 — all trainers' features gathered from host memory."""
-    num = n_trainers * w.loaded_rows() * w.layer_dims[0] * w.feat_bytes
+    """Eq. 7 extended with the cache term: only the expected cache-miss
+    rows are gathered from host memory (hit rows live on-device)."""
+    num = n_trainers * w.miss_rows() * w.layer_dims[0] * w.feat_bytes
     return num / (host.mem_bw_gbps * 1e9)
 
 
 def t_trans(w: WorkloadSpec, accel: PlatformSpec) -> float:
-    """Eq. 8 — one accelerator's feature matrix over PCIe."""
-    num = w.loaded_rows() * w.layer_dims[0] * w.feat_bytes
+    """Eq. 8 extended with the cache term: only miss rows cross PCIe."""
+    num = w.miss_rows() * w.layer_dims[0] * w.feat_bytes
     return num / (accel.interconnect_gbps * 1e9)
 
 
@@ -154,8 +163,11 @@ def predict(host: PlatformSpec, accel: PlatformSpec, n_accel: int,
             compression_ratio: float = 1.0) -> StagePrediction:
     """Full-system prediction for one iteration (n_accel accelerator
     trainers, each running ``w_accel``, plus one CPU trainer w/ ``w_cpu``)."""
-    n_trainers = n_accel + (1 if w_cpu.batch_size > 0 else 0)
-    tl = t_load(w_accel, host, n_trainers)
+    # the CPU trainer reads host memory directly and never benefits from
+    # the device cache, so its load term is priced with its own workload
+    # (cache_hit_rate belongs to w_accel only)
+    tl = (t_load(w_accel, host, n_accel)
+          + t_load(w_cpu, host, 1 if w_cpu.batch_size > 0 else 0))
     tt = t_trans(w_accel, accel) if n_accel else 0.0
     prop_cpu = t_trainer(w_cpu, host) if w_cpu.batch_size > 0 else 0.0
     prop_acc = t_trainer(w_accel, accel) if n_accel else 0.0
@@ -173,20 +185,28 @@ def initial_task_mapping(host: PlatformSpec, accel: PlatformSpec,
                          n_accel: int, total_batch: int,
                          fanouts: Tuple[int, ...],
                          layer_dims: Tuple[int, ...],
-                         model: str = "sage") -> Dict[str, int]:
+                         model: str = "sage",
+                         cache_hit_rate: float = 0.0) -> Dict[str, int]:
     """Coarse-grained design-time mapping (paper §IV-A first paragraph).
 
     Chooses the CPU trainer's mini-batch share so the predicted CPU
     propagation time matches the accelerators' bundled transfer+propagation
     time; solved by scanning the (integer) share space with the performance
     model — robust for any platform pair, no closed form needed.
+
+    ``cache_hit_rate`` is the device cache's design-time hit estimate
+    (``FeatureCache.expected_hit_rate``): it shrinks the accelerators'
+    load/transfer terms, which shifts the optimum toward larger
+    accelerator shares.  The CPU trainer reads host memory directly and
+    never benefits from the device cache.
     """
     best: Tuple[float, int] = (float("inf"), 0)
     step = max(1, total_batch // 64)
     for cpu_share in range(0, total_batch // 2 + 1, step):
         accel_share = (total_batch - cpu_share) // max(n_accel, 1)
         w_cpu = WorkloadSpec(cpu_share, fanouts, layer_dims, model=model)
-        w_acc = WorkloadSpec(accel_share, fanouts, layer_dims, model=model)
+        w_acc = WorkloadSpec(accel_share, fanouts, layer_dims, model=model,
+                             cache_hit_rate=cache_hit_rate)
         pred = predict(host, accel, n_accel, w_cpu, w_acc)
         if pred.t_execution < best[0]:
             best = (pred.t_execution, cpu_share)

@@ -1,0 +1,64 @@
+"""Hierarchical gradient-mean collective schedule.
+
+A flat ``psum`` over every device sends whole-gradient traffic across the
+slow pod interconnect.  The hierarchical schedule does the classic three
+phases instead:
+
+  1. reduce-scatter *within* each pod (over the fast local axes), so each
+     device owns a 1/k shard of the local sum,
+  2. all-reduce the shards *across* pods (only 1/k of the bytes cross the
+     slow links),
+  3. all-gather within the pod to rebuild the full mean.
+
+Leaves whose leading dim the local axes do not divide (scalars, small
+biases) fall back to a flat psum — same result, negligible bytes.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import current_mesh, shard_map_compat
+
+__all__ = ["hierarchical_psum_mean"]
+
+
+def hierarchical_psum_mean(tree: Any) -> Any:
+    """Mean of the per-device values of ``tree`` (replicated in, replicated
+    out), scheduled reduce-scatter -> cross-pod all-reduce -> all-gather.
+
+    Must run under ``use_mesh`` (jit-traced against the ambient mesh).
+    """
+    mesh = current_mesh()
+    if mesh is None or mesh.size == 1:
+        return tree
+    local = tuple(n for n in mesh.axis_names if n != "pod")
+    pod = "pod" if "pod" in mesh.axis_names else None
+    local_size = 1
+    for n in local:
+        local_size *= mesh.shape[n]
+    n_total = mesh.size
+
+    def body(*leaves):
+        out = []
+        for v in leaves:
+            if (local and local_size > 1 and v.ndim >= 1
+                    and v.shape[0] % local_size == 0):
+                s = jax.lax.psum_scatter(v, local, scatter_dimension=0,
+                                         tiled=True)
+                if pod is not None:
+                    s = jax.lax.psum(s, pod)
+                s = jax.lax.all_gather(s, local, axis=0, tiled=True)
+            else:
+                axes = local + ((pod,) if pod is not None else ())
+                s = jax.lax.psum(v, axes)
+            out.append((s / n_total).astype(v.dtype))
+        return tuple(out)
+
+    leaves, treedef = jax.tree.flatten(tree)
+    specs = tuple(P() for _ in leaves)
+    fn = shard_map_compat(body, mesh, in_specs=specs, out_specs=specs)
+    return jax.tree.unflatten(treedef, fn(*leaves))

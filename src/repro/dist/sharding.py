@@ -1,0 +1,57 @@
+"""Parameter-sharding rule table (FSDP x TP).
+
+``param_pspec(path, leaf)`` maps one parameter (or optimizer-state) leaf to
+a ``PartitionSpec`` against the ambient mesh:
+
+  * norm scales / biases / 0-1D leaves: replicated,
+  * >=2-D weights: last dim over ``model`` (tensor parallelism), the
+    second-to-last dim over the data-parallel axes (FSDP) — each only when
+    the dim size divides the axis product,
+  * under the 'dp' policy everything is replicated (classic DP),
+  * with no ambient mesh every spec degrades to fully-replicated ``None``s
+    (the rule table itself is exercised in the multi-device dry-run).
+
+Stacked-layer leading dims ([L, ...] from the per-layer vmap) are never
+sharded: the layer scan iterates that axis, so sharding it would gather a
+layer per step.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+from jax.sharding import PartitionSpec as P
+
+from . import current_mesh, current_policy
+
+__all__ = ["param_pspec"]
+
+_REPLICATED_NAMES = ("ln", "norm", "scale", "bias", "step", "count")
+
+
+def _path_keys(path) -> Tuple[str, ...]:
+    return tuple(str(getattr(p, "key", getattr(p, "name", p))) for p in path)
+
+
+def param_pspec(path: Any, leaf: Any) -> P:
+    nd = int(leaf.ndim)
+    mesh = current_mesh()
+    if mesh is None or mesh.size == 1 or nd < 2 \
+            or current_policy() == "dp":
+        return P(*([None] * nd))
+    keys = _path_keys(path)
+    name = keys[-1] if keys else ""
+    if any(name.startswith(r) or r in name for r in _REPLICATED_NAMES):
+        return P(*([None] * nd))
+
+    dims: list = [None] * nd
+    shape = getattr(leaf, "shape", None)
+    msize = mesh.shape.get("model", 1)
+    dp_axes = tuple(n for n in ("pod", "data") if n in mesh.axis_names)
+    dp_size = 1
+    for n in dp_axes:
+        dp_size *= mesh.shape[n]
+    if msize > 1 and (shape is None or shape[-1] % msize == 0):
+        dims[-1] = "model"
+    if dp_size > 1 and (shape is None or shape[-2] % dp_size == 0):
+        dims[-2] = dp_axes[0] if len(dp_axes) == 1 else dp_axes
+    return P(*dims)

@@ -1,13 +1,30 @@
-from .storage import (CSRGraph, GraphDataset, HashedFeatures, DATASET_STATS,
-                      make_dataset, synth_powerlaw_graph)
+# Graph data layer — architecture note
+#
+# storage.py   FeatureSource protocol + backends (dense / hashed /
+#              partitioned); host-resident, gather-only interface.
+# featcache.py device-resident top-K hot-row cache over any FeatureSource
+#              (static, hotness-ordered; vectorized id->slot lookup).
+# featload.py  host gather stage: full-frontier loads for CPU trainers,
+#              miss-only loads for cache-backed accelerator trainers.
+# sampler.py   fixed-shape neighbor sampling (numpy host / jit device).
+# models.py    GCN / GraphSAGE on sampled blocks (dense/segsum/pallas agg).
+#
+# Data flows sampler -> loader -> transfer -> (on-device cache combine) ->
+# model; only miss rows ever cross the host->device interconnect.
+from .storage import (CSRGraph, DenseFeatures, FeatureSource, GraphDataset,
+                      HashedFeatures, PartitionedFeatures, DATASET_STATS,
+                      as_feature_source, make_dataset, synth_powerlaw_graph)
 from .sampler import MiniBatch, NumpySampler, sample_minibatch_jax, frontier_sizes
-from .featload import FeatureLoader, LoadStats
+from .featcache import CacheLookup, CacheStats, FeatureCache, build_cache
+from .featload import FeatureLoader, LoadStats, MissBlock
 from .models import GNNConfig, init_params, forward, loss_fn, param_count
 
 __all__ = [
-    "CSRGraph", "GraphDataset", "HashedFeatures", "DATASET_STATS",
-    "make_dataset", "synth_powerlaw_graph",
+    "CSRGraph", "GraphDataset", "HashedFeatures", "DenseFeatures",
+    "PartitionedFeatures", "FeatureSource", "as_feature_source",
+    "DATASET_STATS", "make_dataset", "synth_powerlaw_graph",
     "MiniBatch", "NumpySampler", "sample_minibatch_jax", "frontier_sizes",
-    "FeatureLoader", "LoadStats",
+    "CacheLookup", "CacheStats", "FeatureCache", "build_cache",
+    "FeatureLoader", "LoadStats", "MissBlock",
     "GNNConfig", "init_params", "forward", "loss_fn", "param_count",
 ]

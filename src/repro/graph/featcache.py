@@ -1,0 +1,180 @@
+"""Device-resident hot-feature cache (static, degree-ordered).
+
+HyScale-GNN hides host->device feature traffic behind prefetching; the
+complementary lever (DistDGL-style hybrid systems, and the dominant one on
+feature-traffic-bound workloads) is to *not send* the hottest rows at all:
+power-law frontiers are dominated by hub nodes, so pinning the top-K
+hottest node features in device memory converts most of each iteration's
+gather into a device-local lookup.
+
+The cache is static: hotness is the expected gather frequency under
+neighbor sampling (``GraphDataset.feature_hotness`` — in-edge mass + 1),
+known at dataset-build time, so there is no invalidation protocol and the
+id->slot table never changes during training.  A dynamic refresh policy is
+future work (see ROADMAP).
+
+Components:
+
+  * ``slot_of``  — vectorized id->slot lookup, one int32 per node, -1 for
+    uncached.  4 B/node of host memory buys O(1) batch partitioning
+    (papers100M scale: ~440 MB, far below the feature matrix it indexes).
+  * ``data_on(device)`` — the [K, F] hot-row block, placed once per
+    trainer device and reused every iteration.
+  * ``lookup(ids)`` — splits a frontier into (slots, miss_index, miss_ids)
+    and accounts hit/miss rows and bytes saved.
+
+The loader (``featload.FeatureLoader``) gathers only ``miss_ids`` on the
+host; the transfer stage ships the misses and a combine step (Pallas
+``cache_combine`` kernel or its jnp reference) assembles the dense layer-0
+input on device.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+
+from .storage import FeatureSource, as_feature_source
+
+__all__ = ["CacheLookup", "CacheStats", "FeatureCache", "build_cache"]
+
+
+@dataclasses.dataclass
+class CacheLookup:
+    """Result of partitioning one frontier against the cache."""
+    ids: np.ndarray         # int64 [N] the queried node ids
+    slots: np.ndarray       # int32 [N] cache slot per row, -1 = miss
+    miss_index: np.ndarray  # int32 [N] row into the miss block (0 for hits)
+    miss_ids: np.ndarray    # int64 [M] node ids to gather on the host
+
+    @property
+    def num_rows(self) -> int:
+        return int(self.ids.shape[0])
+
+    @property
+    def num_miss(self) -> int:
+        return int(self.miss_ids.shape[0])
+
+    @property
+    def num_hit(self) -> int:
+        return self.num_rows - self.num_miss
+
+    @property
+    def hit_rate(self) -> float:
+        return self.num_hit / max(self.num_rows, 1)
+
+
+@dataclasses.dataclass
+class CacheStats:
+    lookups: int = 0
+    hit_rows: int = 0
+    miss_rows: int = 0
+    saved_bytes: int = 0     # host->device bytes avoided by cache hits
+
+    @property
+    def total_rows(self) -> int:
+        return self.hit_rows + self.miss_rows
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hit_rows / max(self.total_rows, 1)
+
+    def merge(self, other: "CacheStats") -> None:
+        self.lookups += other.lookups
+        self.hit_rows += other.hit_rows
+        self.miss_rows += other.miss_rows
+        self.saved_bytes += other.saved_bytes
+
+
+class FeatureCache:
+    """Static top-K hot-row cache over any ``FeatureSource``.
+
+    ``capacity`` rows are chosen by descending ``hotness``; the hot block
+    is materialized once on the host (in ``transfer_dtype``) and placed
+    per device on first use.
+    """
+
+    def __init__(self, source: "FeatureSource | np.ndarray",
+                 hotness: np.ndarray, capacity: int,
+                 transfer_dtype: str = "float32"):
+        source = as_feature_source(source)
+        num_nodes, feat_dim = source.shape
+        capacity = int(max(0, min(capacity, num_nodes)))
+        hotness = np.asarray(hotness, dtype=np.float64)
+        if hotness.shape[0] != num_nodes:
+            raise ValueError("hotness must have one entry per node")
+        # stable order so equal-hotness ties are deterministic across runs
+        order = np.argsort(-hotness, kind="stable")[:capacity]
+        self.cached_ids = np.ascontiguousarray(order.astype(np.int64))
+        self.capacity = capacity
+        self.feat_dim = int(feat_dim)
+        # bytes one feature row occupies on the wire (transfer dtype)
+        self.row_bytes = int(feat_dim) * np.dtype(
+            np.float32 if transfer_dtype == "float32" else transfer_dtype
+        ).itemsize
+        self.slot_of = np.full(num_nodes, -1, dtype=np.int32)
+        self.slot_of[self.cached_ids] = np.arange(capacity, dtype=np.int32)
+        host_rows = source.take(self.cached_ids)
+        if transfer_dtype != "float32":
+            import jax.numpy as jnp
+            host_rows = host_rows.astype(jnp.dtype(transfer_dtype))
+        self._host_rows = np.ascontiguousarray(host_rows)
+        self._device_data: Dict[int, jax.Array] = {}
+        self._expected_hit_rate = (float(hotness[self.cached_ids].sum())
+                                   / max(float(hotness.sum()), 1e-12))
+        self.stats = CacheStats()
+
+    # ------------------------------------------------------------- plumbing
+
+    @property
+    def nbytes(self) -> int:
+        """Device bytes pinned by the hot block (per trainer device)."""
+        return self._host_rows.nbytes
+
+    @property
+    def expected_hit_rate(self) -> float:
+        """Design-time hit-rate estimate (hotness mass covered) — feeds the
+        performance model's Eq. 7/8 cache term before any measurement."""
+        return self._expected_hit_rate
+
+    def measured_hit_rate(self) -> float:
+        return self.stats.hit_rate
+
+    def data_on(self, device) -> jax.Array:
+        """The [K, F] hot block resident on ``device`` (placed once)."""
+        key = id(device)
+        if key not in self._device_data:
+            self._device_data[key] = jax.device_put(self._host_rows, device)
+        return self._device_data[key]
+
+    # --------------------------------------------------------------- lookup
+
+    def lookup(self, ids: np.ndarray) -> CacheLookup:
+        """Vectorized id->slot partition of one frontier."""
+        ids = np.asarray(ids, dtype=np.int64)
+        slots = self.slot_of[ids]
+        is_miss = slots < 0
+        # rank of each miss among the misses = its row in the miss block
+        miss_index = np.cumsum(is_miss, dtype=np.int32)
+        miss_index = np.where(is_miss, miss_index - 1, 0).astype(np.int32)
+        miss_ids = ids[is_miss]
+        look = CacheLookup(ids=ids, slots=slots, miss_index=miss_index,
+                           miss_ids=miss_ids)
+        self.stats.merge(CacheStats(
+            lookups=1, hit_rows=look.num_hit, miss_rows=look.num_miss,
+            saved_bytes=look.num_hit * self.row_bytes))
+        return look
+
+
+def build_cache(dataset, fraction: float,
+                transfer_dtype: str = "float32") -> Optional[FeatureCache]:
+    """Cache of ``fraction`` of the dataset's nodes (None when <= 0)."""
+    if fraction <= 0.0:
+        return None
+    capacity = int(round(dataset.num_nodes * min(fraction, 1.0)))
+    if capacity == 0:
+        return None
+    return FeatureCache(dataset.feature_source, dataset.feature_hotness(),
+                        capacity, transfer_dtype=transfer_dtype)

@@ -1,18 +1,31 @@
-"""Feature Loader (paper Section III-A).
+"""Feature Loader (paper Section III-A) — cache-aware host gather.
 
 Runs on the host ("Feature Loading is only performed on the CPUs ... the
-feature matrix X is stored in the CPU memory").  Given a sampled MiniBatch it
-gathers the innermost frontier's feature rows from host storage into a
-contiguous buffer ready for the Data Transfer stage.
+feature matrix X is stored in the CPU memory").  Given a sampled MiniBatch
+it gathers the innermost frontier's feature rows from the dataset's
+``FeatureSource`` into a contiguous buffer ready for the Data Transfer
+stage.
 
-Supports optional on-the-fly down-cast to bf16 ("data quantization to relieve
-the stress on the PCIe bandwidth" — the paper's §VIII future-work item) and
-reports bytes/rows statistics consumed by the DRM engine and the performance
-model.
+Two gather modes:
+
+  * ``load``        — the full frontier (legacy path; CPU trainers, whose
+    "device" is host memory, and cache-disabled runs),
+  * ``load_misses`` — only the rows absent from the device-resident
+    ``FeatureCache``: the frontier is partitioned by the cache's
+    vectorized id->slot table and just the miss block crosses PCIe.  The
+    transfer stage ships (miss rows, slots, miss_index) and the on-device
+    combine step reassembles the dense layer-0 input.
+
+Supports optional on-the-fly down-cast to bf16 ("data quantization to
+relieve the stress on the PCIe bandwidth" — the paper's §VIII future-work
+item) and reports rows/bytes statistics consumed by the DRM engine and the
+performance model.  ``stats.bytes`` counts only bytes actually *shipped*
+(the quantity Eq. 7/8 model); cache savings are in ``stats.saved_bytes``.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Optional
 
@@ -20,51 +33,126 @@ import numpy as np
 
 import jax.numpy as jnp
 
+from .featcache import CacheLookup, FeatureCache
 from .sampler import MiniBatch
 from .storage import GraphDataset
 
-__all__ = ["FeatureLoader", "LoadStats"]
+__all__ = ["FeatureLoader", "LoadStats", "MissBlock"]
 
 _BF16 = jnp.bfloat16  # numpy-compatible via ml_dtypes under the hood
 
 
 @dataclasses.dataclass
 class LoadStats:
-    rows: int = 0
-    bytes: int = 0
+    rows: int = 0            # rows shipped (gathered misses + any padding)
+    bytes: int = 0           # bytes shipped host->device
     seconds: float = 0.0
+    total_rows: int = 0      # frontier rows requested (hits + misses)
+    hit_rows: int = 0        # rows served from the device cache
+    saved_bytes: int = 0     # transfer bytes avoided by cache hits
+    padding_bytes: int = 0   # share of `bytes` that is shape-bucket padding
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hit_rows / max(self.total_rows, 1)
 
     def merge(self, other: "LoadStats") -> None:
         self.rows += other.rows
         self.bytes += other.bytes
         self.seconds += other.seconds
+        self.total_rows += other.total_rows
+        self.hit_rows += other.hit_rows
+        self.saved_bytes += other.saved_bytes
+        self.padding_bytes += other.padding_bytes
+
+
+@dataclasses.dataclass
+class MissBlock:
+    """Host-side output of a cache-aware load, ready for transfer.
+
+    ``rows`` is the [M, F] miss block; ``lookup`` carries the slot /
+    miss-index arrays the on-device combine consumes (see
+    ``kernels.ops.assemble_features``).
+    """
+    rows: np.ndarray
+    lookup: CacheLookup
+
+    @property
+    def num_rows(self) -> int:
+        return self.lookup.num_rows
 
 
 class FeatureLoader:
     def __init__(self, dataset: GraphDataset, transfer_dtype: str = "float32",
-                 num_threads: int = 1):
+                 num_threads: int = 1,
+                 cache: Optional[FeatureCache] = None):
         self.dataset = dataset
+        self.source = dataset.feature_source
         self.transfer_dtype = transfer_dtype
         self.num_threads = max(1, int(num_threads))  # DRM's balance_thread knob
-        self.stats = LoadStats()
+        self.cache = cache
+        self.stats = LoadStats()       # transfer path (rows that cross PCIe)
+        self.host_stats = LoadStats()  # CPU-trainer direct host reads
+        # the load and transfer pipeline stages run in different threads
+        # and both account into `stats` (gathers vs bucket padding)
+        self._stats_lock = threading.Lock()
+
+    def _account(self, dest: LoadStats, delta: LoadStats) -> None:
+        with self._stats_lock:
+            dest.merge(delta)
 
     def _gather(self, rows: np.ndarray) -> np.ndarray:
-        if self.num_threads == 1:
-            return self.dataset.take_features(rows)
+        if self.num_threads == 1 or rows.shape[0] < 2 * self.num_threads:
+            return self.source.take(rows)
         # chunked gather: with >1 OS threads numpy gathers overlap page faults
         import concurrent.futures as cf
         chunks = np.array_split(rows, self.num_threads)
         with cf.ThreadPoolExecutor(self.num_threads) as pool:
-            parts = list(pool.map(self.dataset.take_features, chunks))
+            parts = list(pool.map(self.source.take, chunks))
         return np.concatenate(parts, axis=0)
 
-    def load(self, batch: MiniBatch) -> np.ndarray:
-        """Gather features for the innermost frontier (layer-0 inputs)."""
-        t0 = time.perf_counter()
-        frontier = np.asarray(batch.frontier(len(batch.fanouts)))
-        x = self._gather(frontier)
+    def _cast(self, x: np.ndarray) -> np.ndarray:
         if self.transfer_dtype == "bfloat16":
-            x = x.astype(_BF16)
-        dt = time.perf_counter() - t0
-        self.stats.merge(LoadStats(rows=x.shape[0], bytes=x.nbytes, seconds=dt))
+            return x.astype(_BF16)
         return x
+
+    def _frontier(self, batch: MiniBatch) -> np.ndarray:
+        return np.asarray(batch.frontier(len(batch.fanouts)))
+
+    def load(self, batch: MiniBatch, to_device: bool = True) -> np.ndarray:
+        """Gather features for the innermost frontier (layer-0 inputs).
+
+        ``to_device=False`` marks a CPU-trainer load: the rows are consumed
+        in place from host memory and never cross the interconnect, so they
+        are accounted in ``host_stats`` instead of the transfer-path
+        ``stats``.
+        """
+        t0 = time.perf_counter()
+        frontier = self._frontier(batch)
+        x = self._cast(self._gather(frontier))
+        dt = time.perf_counter() - t0
+        dest = self.stats if to_device else self.host_stats
+        self._account(dest, LoadStats(rows=x.shape[0], bytes=x.nbytes,
+                                      seconds=dt, total_rows=x.shape[0]))
+        return x
+
+    def note_transfer_padding(self, rows: int, nbytes: int) -> None:
+        """Account padding rows the transfer stage ships beyond the gathered
+        misses (shape-bucketing): they cross PCIe, so they count as shipped
+        traffic even though no host gather produced them."""
+        self._account(self.stats, LoadStats(rows=rows, bytes=nbytes,
+                                            padding_bytes=nbytes))
+
+    def load_misses(self, batch: MiniBatch) -> MissBlock:
+        """Gather only the frontier rows the device cache does not hold."""
+        if self.cache is None:
+            raise RuntimeError("load_misses requires a FeatureCache")
+        t0 = time.perf_counter()
+        look = self.cache.lookup(self._frontier(batch))
+        rows = self._cast(self._gather(look.miss_ids))
+        dt = time.perf_counter() - t0
+        self._account(self.stats, LoadStats(
+            rows=rows.shape[0], bytes=rows.nbytes, seconds=dt,
+            total_rows=look.num_rows, hit_rows=look.num_hit,
+            saved_bytes=look.num_hit * self.cache.row_bytes))
+        return MissBlock(rows=rows, lookup=look)

@@ -75,9 +75,6 @@ class MiniBatch:
 
 
 def frontier_sizes(batch: int, fanouts: Sequence[int]) -> Tuple[int, ...]:
-    sizes = [batch]
-    for f in fanouts:
-        sizes.append(sizes[-1] + sizes[-1] * f)
     # frontier l size = batch * prod_{h<l}(1 + f_h)
     out = [batch]
     cur = batch

@@ -1,9 +1,27 @@
-"""Graph storage substrate.
+"""Graph storage substrate — the pluggable FeatureSource data layer.
 
 The paper stores the input graph topology + feature matrix in *CPU (host)
 memory* (Section III-B): device memory (16-64 GB) cannot hold graphs like
 MAG240M (202 GB of features).  Everything in this module is therefore
 host-side numpy; device code only ever sees gathered mini-batch tensors.
+
+Feature storage is behind the ``FeatureSource`` protocol — a minimal
+row-gather interface (``take(rows)`` + shape/dtype metadata) with three
+interchangeable backends:
+
+  * ``DenseFeatures``       — one materialized ndarray (small graphs),
+  * ``HashedFeatures``      — lazily computed rows (papers100M-scale runs
+                              on small hosts; nothing is materialized),
+  * ``PartitionedFeatures`` — fixed-size row partitions gathered per
+                              partition; the stepping stone to an
+                              mmap/out-of-core backend, since each
+                              partition is an independent blob.
+
+All backends return byte-identical rows for the same node ids
+(property-tested), so the choice is purely a capacity/locality knob.  The
+device-side hot-row cache (``featcache.FeatureCache``) and the miss-only
+``FeatureLoader`` (``featload``) sit on top of this protocol and never see
+a concrete backend.
 
 Datasets are synthetic, size-parameterized power-law graphs standing in for
 ogbn-products / ogbn-papers100M / MAG240M (homo).  The *full* Table-III stats
@@ -13,13 +31,17 @@ with the same degree-distribution shape.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Protocol, Sequence, Tuple
 
 import numpy as np
 
 __all__ = [
     "CSRGraph",
+    "FeatureSource",
+    "DenseFeatures",
     "HashedFeatures",
+    "PartitionedFeatures",
+    "as_feature_source",
     "GraphDataset",
     "synth_powerlaw_graph",
     "make_dataset",
@@ -52,6 +74,112 @@ class CSRGraph:
         return self.indptr.nbytes + self.indices.nbytes
 
 
+class FeatureSource(Protocol):
+    """Minimal host-side feature storage interface.
+
+    ``take`` must return a fresh ``[len(rows), feat_dim]`` array in
+    ``dtype`` for any int array of node ids (duplicates and arbitrary
+    order allowed).  Implementations are host-resident; device code only
+    ever sees the gathered result.
+    """
+
+    shape: Tuple[int, int]
+
+    @property
+    def dtype(self) -> np.dtype: ...
+
+    def take(self, rows: np.ndarray) -> np.ndarray: ...
+
+
+class DenseFeatures:
+    """FeatureSource over one materialized host ndarray."""
+
+    def __init__(self, array: np.ndarray):
+        if array.ndim != 2:
+            raise ValueError(f"expected [N, F] features, got {array.shape}")
+        self.array = array
+        self.shape = tuple(array.shape)
+
+    @property
+    def dtype(self) -> np.dtype:
+        return self.array.dtype
+
+    @property
+    def nbytes(self) -> int:
+        return self.array.nbytes
+
+    def take(self, rows: np.ndarray) -> np.ndarray:
+        return np.take(self.array, np.asarray(rows, dtype=np.int64), axis=0)
+
+    def __getitem__(self, rows):
+        return self.take(np.atleast_1d(rows))
+
+
+class PartitionedFeatures:
+    """FeatureSource split into fixed-size row partitions.
+
+    The feature matrix is stored as ``ceil(N / partition_rows)`` independent
+    blobs; a gather groups the requested rows by partition, gathers within
+    each touched partition, and scatters results back into request order.
+    This is the layout an mmap/out-of-core backend needs (each partition is
+    one file / one madvise window) and bounds the working set of a gather
+    to the touched partitions only.
+    """
+
+    def __init__(self, parts: List[np.ndarray], partition_rows: int,
+                 num_rows: int):
+        if not parts:
+            raise ValueError("need at least one partition")
+        self.parts = parts
+        self.partition_rows = int(partition_rows)
+        self.shape = (int(num_rows), int(parts[0].shape[1]))
+
+    @classmethod
+    def from_source(cls, src: "FeatureSource | np.ndarray",
+                    partition_rows: int = 65536) -> "PartitionedFeatures":
+        src = as_feature_source(src)
+        n = src.shape[0]
+        partition_rows = max(1, int(partition_rows))
+        parts = [src.take(np.arange(lo, min(lo + partition_rows, n),
+                                    dtype=np.int64))
+                 for lo in range(0, n, partition_rows)]
+        return cls(parts, partition_rows, n)
+
+    @property
+    def dtype(self) -> np.dtype:
+        return self.parts[0].dtype
+
+    @property
+    def num_partitions(self) -> int:
+        return len(self.parts)
+
+    @property
+    def nbytes(self) -> int:
+        return sum(p.nbytes for p in self.parts)
+
+    def take(self, rows: np.ndarray) -> np.ndarray:
+        rows = np.asarray(rows, dtype=np.int64)
+        part_id = rows // self.partition_rows
+        offset = rows - part_id * self.partition_rows
+        out = np.empty((rows.shape[0], self.shape[1]), dtype=self.dtype)
+        for pid in np.unique(part_id):
+            sel = part_id == pid
+            out[sel] = np.take(self.parts[pid], offset[sel], axis=0)
+        return out
+
+    def __getitem__(self, rows):
+        return self.take(np.atleast_1d(rows))
+
+
+def as_feature_source(features) -> "FeatureSource":
+    """Normalize legacy feature containers (bare ndarray) to the protocol."""
+    if isinstance(features, np.ndarray):
+        return DenseFeatures(features)
+    if hasattr(features, "take") and hasattr(features, "shape"):
+        return features
+    raise TypeError(f"not a FeatureSource: {type(features)!r}")
+
+
 class HashedFeatures:
     """Deterministic lazily-computed node features.
 
@@ -66,7 +194,8 @@ class HashedFeatures:
                  dtype=np.float32):
         self.shape = (num_nodes, feat_dim)
         self.dtype = np.dtype(dtype)
-        self._seed = np.uint64(seed * 0x9E3779B97F4A7C15 + 0xDEADBEEF)
+        self._seed = np.uint64((seed * 0x9E3779B97F4A7C15 + 0xDEADBEEF)
+                               & 0xFFFFFFFFFFFFFFFF)
         self._cols = np.arange(feat_dim, dtype=np.uint64)
 
     @property
@@ -94,7 +223,7 @@ class HashedFeatures:
 class GraphDataset:
     name: str
     graph: CSRGraph
-    features: "HashedFeatures | np.ndarray"
+    features: "FeatureSource | np.ndarray"
     labels: np.ndarray          # int32 [num_nodes]
     num_classes: int
     feat_dim: int
@@ -109,10 +238,26 @@ class GraphDataset:
     def num_edges(self) -> int:
         return self.graph.num_edges
 
+    @property
+    def feature_source(self) -> "FeatureSource":
+        return as_feature_source(self.features)
+
     def take_features(self, rows: np.ndarray) -> np.ndarray:
-        if isinstance(self.features, np.ndarray):
-            return np.take(self.features, rows, axis=0)
-        return self.features.take(rows)
+        return self.feature_source.take(rows)
+
+    def feature_hotness(self) -> np.ndarray:
+        """Expected per-node gather frequency under neighbor sampling.
+
+        A node enters the loaded frontier either as a sampled neighbor
+        (proportional to how often it appears as an edge endpoint, i.e.
+        its in-edge mass under the CSR out-adjacency) or as a uniformly
+        drawn batch target (+1).  This is exactly the distribution the
+        device-side hot cache should rank by.
+        """
+        counts = np.bincount(
+            np.asarray(self.graph.indices, dtype=np.int64),
+            minlength=self.num_nodes).astype(np.float64)
+        return counts + 1.0
 
 
 def synth_powerlaw_graph(num_nodes: int, avg_degree: float,
@@ -162,13 +307,19 @@ TRAIN_SPLIT: Dict[str, int] = {
 
 
 def make_dataset(name: str, scale: float = 1.0, seed: int = 0,
-                 materialize_features: Optional[bool] = None) -> GraphDataset:
+                 materialize_features: Optional[bool] = None,
+                 feature_backend: str = "auto",
+                 partition_rows: int = 65536) -> GraphDataset:
     """Instantiate a (possibly scaled-down) Table-III dataset.
 
     ``scale`` shrinks |V| while preserving avg degree and feature dims, so a
     ``scale=1e-3`` papers100M has ~111k nodes / ~1.6M edges but identical
     per-row feature traffic — the quantity the paper's performance model
     (Eq. 7/8) depends on.
+
+    ``feature_backend`` picks the FeatureSource implementation: 'dense' |
+    'hashed' | 'partitioned' | 'auto' (dense when the matrix fits 2 GiB,
+    hashed otherwise; same policy as the legacy ``materialize_features``).
     """
     if name not in DATASET_STATS:
         raise KeyError(f"unknown dataset {name!r}; have {list(DATASET_STATS)}")
@@ -176,13 +327,22 @@ def make_dataset(name: str, scale: float = 1.0, seed: int = 0,
     n = max(1000, int(nv * scale))
     avg_deg = ne / nv
     graph = synth_powerlaw_graph(n, avg_deg, seed=seed)
-    if materialize_features is None:
-        materialize_features = n * f0 * 4 <= 2 * 2**30  # <= 2 GiB
-    if materialize_features:
-        feats: "HashedFeatures | np.ndarray" = (
-            HashedFeatures(n, f0, seed=seed).take(np.arange(n)))
+    if materialize_features is not None:     # legacy knob
+        feature_backend = "dense" if materialize_features else "hashed"
+    if feature_backend == "auto":
+        feature_backend = "dense" if n * f0 * 4 <= 2 * 2**30 else "hashed"
+    hashed = HashedFeatures(n, f0, seed=seed)
+    if feature_backend == "dense":
+        # bare ndarray (not DenseFeatures) kept for backward compatibility:
+        # callers index ds.features directly
+        feats: "FeatureSource | np.ndarray" = hashed.take(np.arange(n))
+    elif feature_backend == "hashed":
+        feats = hashed
+    elif feature_backend == "partitioned":
+        feats = PartitionedFeatures.from_source(hashed,
+                                                partition_rows=partition_rows)
     else:
-        feats = HashedFeatures(n, f0, seed=seed)
+        raise ValueError(f"unknown feature_backend {feature_backend!r}")
     rng = np.random.default_rng(seed + 1)
     labels = rng.integers(0, ncls, size=n, dtype=np.int32)
     return GraphDataset(name=name, graph=graph, features=feats,

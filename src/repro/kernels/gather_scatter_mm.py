@@ -33,7 +33,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["segment_sum_kernel_call", "fused_update_kernel_call"]
+__all__ = ["segment_sum_kernel_call", "fused_update_kernel_call",
+           "cache_combine_kernel_call"]
 
 
 # --------------------------------------------------------- segment sum only
@@ -133,3 +134,56 @@ def fused_update_kernel_call(x_self: jax.Array, x_nbr: jax.Array,
         scratch_shapes=[pltpu.VMEM((t_d, t_o), jnp.float32)],
         interpret=interpret,
     )(x_self, x_nbr, w_edge2d, self_scale2d, w_self, w_agg, bias2d)
+
+
+# -------------------------------------------- cache combine (hot + misses)
+
+
+def _cache_combine_kernel(sel_ref, row_ref, cache_ref, miss_ref, o_ref):
+    # one output row per grid step; the BlockSpec index maps (driven by
+    # the scalar-prefetched sel/row tables) already DMA'd the right cache
+    # row and miss row — the body just picks the live one.
+    i = pl.program_id(0)
+    take_cache = sel_ref[i] == 0
+    o_ref[...] = jnp.where(take_cache, cache_ref[...], miss_ref[...])
+
+
+def cache_combine_kernel_call(cache: jax.Array, miss: jax.Array,
+                              sel: jax.Array, row: jax.Array,
+                              interpret: bool = True) -> jax.Array:
+    """Assemble the dense layer-0 input from cached + transferred rows.
+
+    The TPU analogue of the paper's Feature-Duplicator gather PEs applied
+    to the device-resident hot cache: ``out[i] = cache[row[i]]`` when
+    ``sel[i] == 0`` else ``miss[row[i]]``.  ``sel``/``row`` arrive via
+    scalar prefetch so each grid step's BlockSpec index map can steer the
+    HBM->VMEM DMA at *row* granularity — a data-dependent gather the
+    dense BlockSpec machinery cannot express.  Both sources stay in HBM;
+    only the selected row per step is pulled into VMEM.
+
+    cache: [K, F]; miss: [M, F] (M >= 1; callers pad empty miss blocks);
+    sel/row: int32 [N] -> out [N, F].
+    """
+    n = sel.shape[0]
+    f = cache.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec(
+                (1, f),
+                lambda i, sel_ref, row_ref: (
+                    jnp.where(sel_ref[i] == 0, row_ref[i], 0), 0)),
+            pl.BlockSpec(
+                (1, f),
+                lambda i, sel_ref, row_ref: (
+                    jnp.where(sel_ref[i] == 0, 0, row_ref[i]), 0)),
+        ],
+        out_specs=pl.BlockSpec((1, f), lambda i, sel_ref, row_ref: (i, 0)),
+    )
+    return pl.pallas_call(
+        _cache_combine_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, f), cache.dtype),
+        interpret=interpret,
+    )(sel, row, cache, miss)

@@ -18,12 +18,40 @@ import jax.numpy as jnp
 
 from . import ref
 from .flash_attention import flash_attention_call
-from .gather_scatter_mm import fused_update_kernel_call, segment_sum_kernel_call
+from .gather_scatter_mm import (cache_combine_kernel_call,
+                                fused_update_kernel_call,
+                                segment_sum_kernel_call)
 
 __all__ = ["segment_weighted_sum_regular", "fused_gnn_update",
-           "flash_attention"]
+           "flash_attention", "assemble_features"]
 
 _INTERPRET = jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def assemble_features(cache: jax.Array, miss: jax.Array, slots: jax.Array,
+                      miss_index: jax.Array,
+                      use_pallas: bool = False) -> jax.Array:
+    """Assemble the dense layer-0 feature block from the device-resident
+    hot cache + the transferred miss rows (see graph/featcache.py).
+
+    No VJP needed: layer-0 inputs are data, not parameters, so this sits
+    outside the autodiff region of the train step.
+
+    ``use_pallas`` dispatches to the scalar-prefetch gather kernel (the
+    real TPU path); the default jnp path (XLA gather + select) is faster
+    under interpret mode on CPU, where each Pallas grid step runs in
+    Python.
+    """
+    if miss.shape[0] == 0:
+        # keep the gather well-defined when every row hits the cache
+        miss = jnp.zeros((1, cache.shape[1]), cache.dtype)
+    if not use_pallas:
+        return ref.assemble_features(cache, miss, slots, miss_index)
+    sel = (slots < 0).astype(jnp.int32)
+    row = jnp.where(slots < 0, miss_index, slots).astype(jnp.int32)
+    return cache_combine_kernel_call(cache, miss, sel, row,
+                                     interpret=_INTERPRET)
 
 
 def _round_up(x: int, m: int) -> int:

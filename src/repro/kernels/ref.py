@@ -17,7 +17,22 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-__all__ = ["segment_weighted_sum_regular", "fused_gnn_update"]
+__all__ = ["segment_weighted_sum_regular", "fused_gnn_update",
+           "assemble_features"]
+
+
+def assemble_features(cache: jax.Array, miss: jax.Array, slots: jax.Array,
+                      miss_index: jax.Array) -> jax.Array:
+    """Cache-combine oracle: ``out[i] = cache[slots[i]]`` when
+    ``slots[i] >= 0`` else ``miss[miss_index[i]]``.
+
+    cache: [K, F]; miss: [M, F] (M >= 1); slots: int32 [N] (-1 = miss);
+    miss_index: int32 [N] -> [N, F].
+    """
+    hit = slots >= 0
+    from_cache = jnp.take(cache, jnp.maximum(slots, 0), axis=0)
+    from_miss = jnp.take(miss, miss_index, axis=0)
+    return jnp.where(hit[:, None], from_cache, from_miss)
 
 
 def segment_weighted_sum_regular(x_nbr: jax.Array, w_edge: jax.Array,

@@ -95,7 +95,7 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     g = hq // hkv
     if impl == "flash" and window == 0 and s > 1:
         from repro.kernels import ops as kops
-        from repro.dist import current_mesh, pspec
+        from repro.dist import current_mesh, pspec, shard_map_compat
         qg = q.reshape(b, s, hkv, g, dh)
         qb_ = min(q_block, s)
         mesh = current_mesh()
@@ -107,11 +107,10 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     else None)
             qs = pspec(("pod", "data"), None, h_ax, None, None)
             ks = pspec(("pod", "data"), None, h_ax, None)
-            fn = jax.shard_map(
+            fn = shard_map_compat(
                 lambda q_, k_, v_: kops.flash_attention(q_, k_, v_, qb_,
                                                         pos0),
-                mesh=mesh, in_specs=(qs, ks, ks), out_specs=qs,
-                check_vma=False)
+                mesh, in_specs=(qs, ks, ks), out_specs=qs)
             out = fn(qg, k, v)
         else:
             out = kops.flash_attention(qg, k, v, qb_, pos0)
