@@ -1,25 +1,35 @@
-"""Device feature-cache ablation: cache fraction × dataset sweep.
+"""Device feature-cache + frontier-dedup ablation: dedup on/off ×
+cache-fraction × dataset sweep.
 
-For each (dataset, cache_fraction) cell this measures, with the real
-pipelined trainer (accel-only mapping so every loaded row is
-cache-eligible and runs are deterministic):
+For each cell this measures, with the real pipelined trainer (accel-only
+mapping so every loaded row is transfer-eligible and runs are
+deterministic):
 
   * measured cache hit rate vs the design-time estimate
     (``FeatureCache.expected_hit_rate`` — the perf model's Eq. 7/8 term),
+  * the measured frontier duplication factor (positions per unique id —
+    the perf model's ``dedup_factor`` alpha),
   * host->device feature bytes shipped, and the reduction factor vs the
-    uncached baseline (``saved/shipped + 1``),
+    legacy one-row-per-frontier-position baseline,
   * mean iteration time.
 
-The headline claim this reproduces: on power-law graphs a static
+The headline claims this reproduces: on power-law graphs (a) a static
 degree-ordered cache of ~20% of the nodes absorbs >= 50% of feature
 traffic (>= 2x byte reduction), because sampled frontiers are dominated
-by hub nodes.  A final loss-equivalence check verifies the cache is
-semantically invisible: cached and uncached runs with the same seed
-produce identical losses.
+by hub nodes; and (b) shipping one row per *unique* id (the paper's
+Feature Duplicator applied across the interconnect) cuts bytes by the
+batch duplication factor (>= 2x at paper-scale fanouts) with no cache at
+all, and composes multiplicatively with the cache.  Loss-equivalence
+checks verify both knobs are semantically invisible: every configuration
+with the same seed produces bit-identical losses.
 
 Usage:  PYTHONPATH=src python -m benchmarks.fig_cache_ablation [--smoke]
+        (the full run also writes BENCH_dedup.json with the dedup sweep)
 """
 from __future__ import annotations
+
+import json
+import os
 
 import numpy as np
 
@@ -30,16 +40,23 @@ from .common import emit
 
 FRACTIONS = (0.0, 0.05, 0.1, 0.2, 0.4)
 DATASETS = ("ogbn-products", "ogbn-papers100M")
+DEDUP_FRACTIONS = (0.0, 0.2)
 
 
-def _trainer(ds, gcfg, fraction: float, iters: int) -> HybridGNNTrainer:
+def _trainer(ds, gcfg, fraction: float, iters: int,
+             dedup: bool = True) -> HybridGNNTrainer:
     hcfg = HybridConfig(total_batch=256, n_accel=2, hybrid=False,
                         use_drm=False, tfp_depth=2, seed=0,
                         use_accel_sampler=False,
-                        cache_fraction=fraction)
+                        cache_fraction=fraction, dedup=dedup)
     tr = HybridGNNTrainer(ds, gcfg, hcfg)
     tr.train(iters)
     return tr
+
+
+def _gcfg(ds) -> GNNConfig:
+    return GNNConfig(model="sage", layer_dims=ds.layer_dims,
+                     fanouts=(10, 5), num_classes=ds.num_classes)
 
 
 def run(scale: float = 0.002, iters: int = 8,
@@ -47,8 +64,7 @@ def run(scale: float = 0.002, iters: int = 8,
     results: dict = {}
     for name in datasets:
         ds = make_dataset(name, scale=scale, seed=0)
-        gcfg = GNNConfig(model="sage", layer_dims=ds.layer_dims,
-                         fanouts=(10, 5), num_classes=ds.num_classes)
+        gcfg = _gcfg(ds)
         for frac in fractions:
             tr = _trainer(ds, gcfg, frac, iters)
             tf = tr.feature_traffic()
@@ -59,13 +75,13 @@ def run(scale: float = 0.002, iters: int = 8,
             emit(f"cache_ablation,{name},frac={frac:.2f}",
                  t_iter * 1e6,
                  f"hit={tf['hit_rate']:.3f} (model {expected:.3f}) "
+                 f"dup={tf['dup_factor']:.2f} "
                  f"shipped={tf['shipped_bytes']/1e6:.1f}MB "
                  f"reduction={tf['reduction']:.2f}x")
 
     # loss-curve equivalence: the cache must not change training semantics
     ds = make_dataset(datasets[-1], scale=scale, seed=0)
-    gcfg = GNNConfig(model="sage", layer_dims=ds.layer_dims,
-                     fanouts=(10, 5), num_classes=ds.num_classes)
+    gcfg = _gcfg(ds)
     base = _trainer(ds, gcfg, 0.0, max(4, iters // 2))
     cached = _trainer(ds, gcfg, 0.2, max(4, iters // 2))
     l0 = [m.loss for m in base.history]
@@ -77,26 +93,120 @@ def run(scale: float = 0.002, iters: int = 8,
     return results
 
 
+def run_dedup_sweep(scale: float = 0.002, iters: int = 8,
+                    fractions=DEDUP_FRACTIONS, datasets=DATASETS,
+                    out_path: str = "BENCH_dedup.json") -> dict:
+    """Dedup on/off × cache-fraction sweep -> BENCH_dedup.json.
+
+    Reports shipped host->device bytes, the measured duplication factor,
+    iteration time, and the reduction vs the legacy positional baseline
+    (dedup off, cache off); checks the losses of every cell are
+    bit-identical to that baseline.
+    """
+    # the legacy positional baseline cell (dedup off, cache off) anchors
+    # every reduction/bit-identity comparison: always sweep it
+    fractions = tuple(sorted({0.0, *fractions}))
+    results: dict = {"scale": scale, "iters": iters, "cells": []}
+    for name in datasets:
+        ds = make_dataset(name, scale=scale, seed=0)
+        gcfg = _gcfg(ds)
+        legacy_bytes = None
+        legacy_losses = None
+        for dedup in (False, True):
+            for frac in fractions:
+                tr = _trainer(ds, gcfg, frac, iters, dedup=dedup)
+                tf = tr.feature_traffic()
+                losses = [m.loss for m in tr.history]
+                if not dedup and frac == 0.0:
+                    legacy_bytes = tf["shipped_bytes"]
+                    legacy_losses = losses
+                cell = {
+                    "dataset": name, "dedup": dedup, "cache_fraction": frac,
+                    "shipped_bytes": tf["shipped_bytes"],
+                    "dedup_saved_bytes": tf["dedup_saved_bytes"],
+                    "saved_bytes": tf["saved_bytes"],
+                    "dup_factor": tf["dup_factor"],
+                    "hit_rate": tf["hit_rate"],
+                    "t_iter": tr.mean_iter_time(skip=2),
+                    "reduction_vs_legacy":
+                        legacy_bytes / max(tf["shipped_bytes"], 1.0),
+                    "loss_bit_identical":
+                        bool(np.array_equal(losses, legacy_losses)),
+                }
+                results["cells"].append(cell)
+                emit(f"dedup_sweep,{name},dedup={int(dedup)},"
+                     f"frac={frac:.2f}",
+                     cell["t_iter"] * 1e6,
+                     f"shipped={cell['shipped_bytes']/1e6:.1f}MB "
+                     f"dup={cell['dup_factor']:.2f} "
+                     f"red={cell['reduction_vs_legacy']:.2f}x "
+                     f"loss_ok={cell['loss_bit_identical']}")
+    with open(out_path, "w") as fh:
+        json.dump(results, fh, indent=2)
+    emit("dedup_sweep,written", 0.0, os.path.abspath(out_path))
+    return results
+
+
+def _dedup_asserts(res: dict, dataset: str) -> None:
+    cells = {(c["dedup"], c["cache_fraction"]): c
+             for c in res["cells"] if c["dataset"] == dataset}
+    fracs = sorted({f for _, f in cells})
+    dedup_only = cells[(True, 0.0)]
+    # dedup alone must at least halve shipped bytes at paper-scale fanouts
+    assert dedup_only["reduction_vs_legacy"] >= 2.0, \
+        f"dedup-only reduction {dedup_only['reduction_vs_legacy']:.2f}x < 2x"
+    cache_frac = fracs[-1]
+    if cache_frac > 0.0:
+        cache_only = cells[(False, cache_frac)]
+        both = cells[(True, cache_frac)]
+        # the cache alone must keep PR 1's >= 2x cut (dedup off, so this
+        # gate cannot be satisfied by dedup savings)
+        assert cache_only["reduction_vs_legacy"] >= 2.0, \
+            f"cache-only reduction {cache_only['reduction_vs_legacy']:.2f}x"
+        # composed with the cache, dedup must beat both single levers
+        assert both["reduction_vs_legacy"] > cache_only["reduction_vs_legacy"], \
+            "dedup+cache not better than cache alone"
+        assert both["shipped_bytes"] < dedup_only["shipped_bytes"]
+    # tier1 smoke invariant: dedup ships strictly less than legacy at the
+    # same cache fraction
+    for frac in fracs:
+        assert cells[(True, frac)]["shipped_bytes"] < \
+            cells[(False, frac)]["shipped_bytes"]
+    # semantics untouched everywhere
+    assert all(c["loss_bit_identical"] for c in res["cells"]
+               if c["dataset"] == dataset), "a dedup/cache cell diverged"
+
+
 def run_smoke() -> dict:
-    """~30 s single-cell check for the tier1 runner: papers100M at the
-    paper-relevant 20% fraction must cut shipped bytes >= 2x."""
+    """~60 s two-sweep check for the tier1 runner: papers100M at the
+    paper-relevant 20% fraction must cut shipped bytes >= 2x, dedup alone
+    must cut >= 2x and compose with the cache, and every configuration's
+    losses must be bit-identical to the legacy positional path."""
     res = run(scale=0.001, iters=5, fractions=(0.0, 0.2),
               datasets=("ogbn-papers100M",))
     cell = res[("ogbn-papers100M", 0.2)]
+    # composed gate (dedup is on by default in run()); the cache-only
+    # >= 2x gate lives in _dedup_asserts where dedup is actually off
     assert cell["reduction"] >= 2.0, \
-        f"cache reduction regressed: {cell['reduction']:.2f}x < 2x"
+        f"composed reduction regressed: {cell['reduction']:.2f}x < 2x"
     assert res["loss_equivalent"], "cached run diverged from uncached"
-    return res
+    dres = run_dedup_sweep(scale=0.001, iters=5,
+                           datasets=("ogbn-papers100M",))
+    _dedup_asserts(dres, "ogbn-papers100M")
+    return {"cache": res, "dedup": dres}
 
 
 if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="single-cell ~30s check (used by scripts/tier1.sh)")
+                    help="two-sweep ~60s check (used by scripts/tier1.sh)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     if args.smoke:
         run_smoke()
     else:
         run()
+        res = run_dedup_sweep()
+        for name in DATASETS:
+            _dedup_asserts(res, name)

@@ -14,6 +14,7 @@ if [[ "${1:-}" == "--fast" ]]; then
     MARK=(-m "not slow")
 fi
 
-python -m pytest -x -q "${MARK[@]}"
+# ${MARK[@]+...} guards the empty-array expansion under `set -u` on bash < 4.4
+python -m pytest -x -q ${MARK[@]+"${MARK[@]}"}
 python -m benchmarks.fig_cache_ablation --smoke
 echo "tier1: OK"

@@ -23,6 +23,23 @@ Ablation knobs reproduce Fig. 11 exactly:
     (1 - hit_rate) traffic term, so the initial task mapping already
     leans on the cheaper transfer; the DRM then refines from measured
     times as usual.
+  * ``dedup=True`` (default)               -> the unit of the whole
+    host->device feature path is the *unique node id*: the load stage
+    deduplicates each frontier once (np.unique + int32 inverse map),
+    classifies only uniques against the cache, gathers/ships only unique
+    miss rows, and the on-device combine expands them back into the
+    positional [frontier, F] layer-0 layout (the paper's §IV-C Feature
+    Duplicator, moved to the far side of the interconnect).  A probe
+    mini-batch measures the duplication factor alpha at design time so
+    Eq. 7/8 price load/transfer off deduped traffic.  Works with or
+    without the cache; ``dedup=False`` reproduces the legacy positional
+    path bit-for-bit.
+
+Measured-hit-rate feedback: when the loader's measured cache hit rate
+drifts > 5 points from the estimate the task mapping was priced with, the
+initial task mapping is re-run with the measured rate (and measured alpha)
+and the refreshed shares handed to the runtime — the DRM keeps fine-tuning
+from there.
 
 On this container all logical devices are CPU cores; the protocol, queues and
 measurements are identical to a real multi-accelerator host — device kind
@@ -70,6 +87,8 @@ class HybridConfig:
     feature_dtype: str = "float32"    # transfer-path compression ("bfloat16")
     cache_fraction: float = 0.0       # device hot-feature cache (0 = off)
     cache_assemble: str = "auto"      # "auto" | "jnp" | "pallas" combine path
+    dedup: bool = True                # ship unique rows only (False = legacy
+                                      #   one-row-per-frontier-position)
     lr: float = 1e-3
     share_quantum: int = 64
     drm_damping: float = 0.25
@@ -140,24 +159,33 @@ class HybridGNNTrainer:
                                                fanouts=gnn_cfg.fanouts))
         self._sample_key = jax.random.PRNGKey(cfg.seed + 2)
 
-        # --- feature store: device hot cache + miss-only loader --------------
+        # --- feature store: device hot cache + dedup/miss-only loader --------
         self.cache = build_cache(dataset, cfg.cache_fraction,
                                  transfer_dtype=cfg.feature_dtype)
         self.loader = FeatureLoader(dataset, transfer_dtype=cfg.feature_dtype,
-                                    cache=self.cache)
+                                    cache=self.cache, dedup=cfg.dedup)
         self._assemble_pallas = (cfg.cache_assemble == "pallas"
                                  or (cfg.cache_assemble == "auto"
                                      and jax.default_backend() == "tpu"))
+        # measured duplication factor alpha = unique/total frontier rows,
+        # from one probe mini-batch (dedicated sampler + rng so the probe
+        # never perturbs the training-path RNG streams: dedup on/off runs
+        # stay bit-identical).  Only the hybrid task mapping consumes
+        # alpha, so accel-only runs skip the probe cost.
+        self.measured_dedup_alpha = (
+            self._probe_dup_factor() if (cfg.dedup and cfg.hybrid) else 1.0)
 
         # --- initial task mapping from the performance model (design time) ---
         host = PLATFORMS[cfg.host_platform]
         accel = PLATFORMS[cfg.accel_platform]
         hit_rate = self.cache.expected_hit_rate if self.cache else 0.0
+        self._model_hit_rate = hit_rate   # rate the current mapping is priced on
         if cfg.hybrid:
             mapping = initial_task_mapping(
                 host, accel, cfg.n_accel, cfg.total_batch,
                 gnn_cfg.fanouts, gnn_cfg.layer_dims, model=gnn_cfg.model,
-                cache_hit_rate=hit_rate)
+                cache_hit_rate=hit_rate,
+                dedup_factor=self.measured_dedup_alpha)
         else:
             mapping = {"cpu": 0,
                        "accel_each": cfg.total_batch // max(cfg.n_accel, 1)}
@@ -181,6 +209,20 @@ class HybridGNNTrainer:
         self._ckpt_cb: Optional[Callable[[int, PyTree, PyTree], None]] = None
 
     # ------------------------------------------------------------ utilities
+
+    def _probe_dup_factor(self) -> float:
+        """Measure alpha = unique/total frontier rows from one probe
+        mini-batch at the accel-only share (the transfer-path batch size
+        Eq. 7/8 price).  Uses a throwaway sampler/rng so training RNG
+        streams are untouched."""
+        probe_n = max(1, self.cfg.total_batch // max(self.cfg.n_accel, 1))
+        rng = np.random.default_rng(self.cfg.seed + 17)
+        tgt = rng.integers(0, self.dataset.num_nodes, probe_n)
+        sampler = NumpySampler(self.dataset.graph, self.gnn_cfg.fanouts,
+                               seed=self.cfg.seed + 17)
+        mb = sampler.sample(tgt, self.dataset.labels[tgt])
+        unique, inverse = mb.unique_frontier(len(self.gnn_cfg.fanouts))
+        return unique.shape[0] / max(inverse.shape[0], 1)
 
     def inject_failure(self, trainer_name: str, at_iteration: int) -> None:
         """Fault-tolerance test hook: trainer dies at the given iteration."""
@@ -251,11 +293,13 @@ class HybridGNNTrainer:
         self.loader.num_threads = self.runtime.assignment.threads.get("load", 1)
         t0 = time.perf_counter()
         for name, mb in p["minibatch"].items():
-            # accelerator trainers hold the hot cache on-device: gather only
-            # the misses; the CPU trainer's "device" is host memory, so it
-            # reads the full frontier straight from the FeatureSource.
-            if self.cache is not None and name != "cpu":
-                p["features"][name] = self.loader.load_misses(mb)
+            # accelerator trainers get the compact transfer path (unique
+            # miss rows against the on-device hot cache, or plain unique
+            # rows when uncached); the CPU trainer's "device" is host
+            # memory, so it reads the full positional frontier straight
+            # from the FeatureSource and nothing crosses an interconnect.
+            if name != "cpu" and (self.cache is not None or self.cfg.dedup):
+                p["features"][name] = self.loader.load_compact(mb)
             else:
                 p["features"][name] = self.loader.load(
                     mb, to_device=(name != "cpu"))
@@ -263,21 +307,23 @@ class HybridGNNTrainer:
         return item
 
     def _assemble(self, block: MissBlock, dev) -> jax.Array:
-        """Ship the miss rows + index tables; combine with the cached rows
-        into the dense layer-0 input on the destination device.
+        """Ship the unique-miss rows + index tables; combine with the
+        cached rows and expand back into the dense positional layer-0
+        input on the destination device (the on-device duplication step).
 
-        The miss count varies per mini-batch, so the block is padded up to
-        a 128-row bucket: the jit'd combine sees a handful of distinct
-        shapes instead of one per iteration (sampling noise moves the miss
-        count by far less than a bucket), while padding waste stays under
-        ~3% of the frontier.  Padding rows are zeros no miss_index entry
-        points at, and they are charged to the shipped-byte stats.
+        The unique-miss count varies per mini-batch, so the block is
+        padded up to a 128-row bucket: the jit'd combine sees a handful of
+        distinct shapes instead of one per iteration (sampling noise moves
+        the unique-miss count by far less than a bucket), while padding
+        waste stays bounded by the bucket size.  Padding rows are zeros no
+        miss_index entry points at, and they are charged to the
+        shipped-byte stats.
         """
         look = block.lookup
         rows = block.rows
         m = rows.shape[0]
         # never pad beyond the frontier size: the bucket must stay strictly
-        # cheaper than the uncached full-frontier transfer
+        # cheaper than the legacy full-frontier transfer
         bucket = min(-(-m // 128) * 128, look.num_rows)
         if m < bucket:
             pad = bucket - m
@@ -287,19 +333,32 @@ class HybridGNNTrainer:
             self.loader.note_transfer_padding(
                 pad, pad * rows.shape[1] * rows.dtype.itemsize)
         miss = jax.device_put(rows, dev)
-        slots = jax.device_put(look.slots, dev)
-        miss_index = jax.device_put(look.miss_index, dev)
-        return assemble_features(self.cache.data_on(dev), miss, slots,
-                                 miss_index, use_pallas=self._assemble_pallas)
+        cache_data = self.cache.data_on(dev) if self.cache else None
+        # slots / miss_index stay host numpy: the Pallas path derives its
+        # DMA schedule from them before they ever reach the device
+        return assemble_features(cache_data, miss, look.slots,
+                                 look.miss_index,
+                                 use_pallas=self._assemble_pallas)
+
+    def _accel_device(self, name: str):
+        """Device of accelerator trainer ``name`` ("accelN" -> ordinal N).
+
+        Indexed by the trainer's own ordinal, not its position in the
+        active-trainer list: that list starts with the CPU trainer when it
+        is active, which used to shift every accelerator onto its
+        neighbour's device.
+        """
+        ordinal = int(name[len("accel"):])
+        return self.accel_devices[ordinal % max(len(self.accel_devices), 1)]
 
     def _stage_transfer(self, item: PipelineItem) -> PipelineItem:
         p = item.payload
         t0 = time.perf_counter()
-        for i, (name, kind) in enumerate(self._active_trainers()):
+        for name, kind in self._active_trainers():
             if name not in p["features"]:
                 continue
             dev = (self.cpu_device if kind == "cpu"
-                   else self.accel_devices[i % max(len(self.accel_devices), 1)])
+                   else self._accel_device(name))
             feat = p["features"][name]
             x = (self._assemble(feat, dev) if isinstance(feat, MissBlock)
                  else jax.device_put(feat, dev))
@@ -355,6 +414,49 @@ class HybridGNNTrainer:
         acc = float(sum(float(m["acc"]) * w[n] for n, m in ok.items()) / wsum)
         return avg, {"t_tc": t_tc, "t_ta": t_ta}, {"loss": loss, "acc": acc}
 
+    def _maybe_refresh_mapping(self) -> bool:
+        """Measured-hit-rate feedback into the perf model (ROADMAP item).
+
+        Eq. 7/8 were priced with the design-time ``expected_hit_rate``;
+        when the loader's *measured* transfer-path hit rate drifts more
+        than 5 points from the rate the current mapping used, re-run
+        ``initial_task_mapping`` with the measured rate (and measured
+        duplication factor) and hand the refreshed shares to the runtime.
+        The DRM keeps fine-tuning from the refreshed point.  Returns True
+        when a refresh happened.
+        """
+        if not (self.cfg.hybrid and self.cache is not None) or self._failed:
+            return False
+        stats = self.loader.stats
+        if stats.total_rows == 0:
+            return False
+        measured = stats.hit_rate
+        if abs(measured - self._model_hit_rate) <= 0.05:
+            return False
+        # alpha for Eq. 7/8 is unique-miss / positional-miss rows (hub ids
+        # are both the most-cached and the most-duplicated, so unique/total
+        # would double-count that overlap); with this alpha the model's
+        # (1 - h) * alpha equals the measured shipped-row fraction exactly
+        miss_positions = stats.total_rows - stats.hit_rows
+        alpha = 1.0
+        if self.cfg.dedup and miss_positions > 0:
+            dedup_saved_rows = stats.dedup_saved_bytes // self.cache.row_bytes
+            alpha = 1.0 - dedup_saved_rows / miss_positions
+        mapping = initial_task_mapping(
+            PLATFORMS[self.cfg.host_platform],
+            PLATFORMS[self.cfg.accel_platform],
+            self.cfg.n_accel, self.cfg.total_batch,
+            self.gnn_cfg.fanouts, self.gnn_cfg.layer_dims,
+            model=self.gnn_cfg.model, cache_hit_rate=measured,
+            dedup_factor=alpha)
+        a = self.runtime.assignment
+        n = max(self.cfg.n_accel, 1)
+        a.accel_batch = mapping["accel_each"]
+        a.cpu_batch = self.cfg.total_batch - a.accel_batch * n
+        self._model_hit_rate = measured
+        self.measured_dedup_alpha = alpha
+        return True
+
     def _apply_update(self, grads: PyTree) -> float:
         t0 = time.perf_counter()
         if self.compression.method != "none":
@@ -392,6 +494,7 @@ class HybridGNNTrainer:
                     a.cpu_batch += a.accel_batch * dead_accel
                     a.n_accel = self.cfg.n_accel - dead_accel
             self.runtime.end_iteration(times)
+            self._maybe_refresh_mapping()
             edges = sum(mb.edges_traversed()
                         for mb in p["minibatch"].values())
             m = IterationMetrics(
@@ -420,23 +523,29 @@ class HybridGNNTrainer:
         """Cumulative feature-movement accounting for the whole run.
 
         ``shipped_bytes`` is what actually crossed host->device (gathered
-        misses plus any shape-bucket padding); ``saved_bytes`` is what the
-        device cache absorbed; ``host_read_bytes`` is the CPU trainer's
-        direct host-memory reads (never on PCIe, tracked separately).
-        ``hit_rate``/``reduction`` therefore describe the transfer path
-        only and are comparable to ``FeatureCache.expected_hit_rate``.
+        unique misses plus any shape-bucket padding); ``saved_bytes`` is
+        what the device cache absorbed; ``dedup_saved_bytes`` what
+        frontier deduplication absorbed; ``host_read_bytes`` is the CPU
+        trainer's direct host-memory reads (never on PCIe, tracked
+        separately).  ``hit_rate``/``reduction`` therefore describe the
+        transfer path only; gathered + cache-saved + dedup-saved bytes
+        always reconstruct the legacy one-row-per-position baseline.
         """
         s = self.loader.stats
-        # uncached baseline = every requested frontier row shipped
-        # (= gathered miss bytes + bytes the cache absorbed; padding is an
-        # artifact of the cached path, not part of the baseline)
-        baseline = (s.bytes - s.padding_bytes) + s.saved_bytes
+        # legacy baseline = every requested frontier position shipped
+        # (= gathered unique-miss bytes + bytes the cache absorbed + bytes
+        # dedup absorbed; padding is an artifact of the compact path, not
+        # part of the baseline)
+        baseline = ((s.bytes - s.padding_bytes) + s.saved_bytes
+                    + s.dedup_saved_bytes)
         return {
             "shipped_rows": float(s.rows),
             "shipped_bytes": float(s.bytes),
             "saved_bytes": float(s.saved_bytes),
+            "dedup_saved_bytes": float(s.dedup_saved_bytes),
             "padding_bytes": float(s.padding_bytes),
             "host_read_bytes": float(self.loader.host_stats.bytes),
             "hit_rate": s.hit_rate,
+            "dup_factor": s.dup_factor,
             "reduction": baseline / max(s.bytes, 1),
         }

@@ -60,6 +60,14 @@ class WorkloadSpec:
     # (featcache.FeatureCache): scales the Eq. 7/8 gather/transfer traffic
     # by (1 - h).  0 reproduces the paper's uncached equations exactly.
     cache_hit_rate: float = 0.0
+    # frontier duplication factor alpha = unique-miss rows / positional
+    # miss rows: the deduped transfer path gathers/ships one row per
+    # unique miss, so Eq. 7/8 traffic scales by alpha on top of (1 - h).
+    # At design time a probe mini-batch approximates it with
+    # unique/total; at runtime the loader stats give it exactly (see
+    # HybridGNNTrainer._maybe_refresh_mapping).  1 reproduces the paper's
+    # positional (one-row-per-position) equations exactly.
+    dedup_factor: float = 1.0
 
     def frontier_sizes(self) -> Tuple[int, ...]:
         out = [self.batch_size]
@@ -81,8 +89,10 @@ class WorkloadSpec:
         return self.frontier_sizes()[-1]
 
     def miss_rows(self) -> float:
-        """Expected rows actually gathered+shipped after cache hits."""
-        return self.loaded_rows() * (1.0 - self.cache_hit_rate)
+        """Expected rows actually gathered+shipped after cache hits and
+        frontier deduplication (unique misses only)."""
+        return (self.loaded_rows() * (1.0 - self.cache_hit_rate)
+                * self.dedup_factor)
 
     def model_bytes(self) -> int:
         """Σ_l f^{l-1} × f^l × S_feat (Eq. 13 numerator)."""
@@ -186,7 +196,8 @@ def initial_task_mapping(host: PlatformSpec, accel: PlatformSpec,
                          fanouts: Tuple[int, ...],
                          layer_dims: Tuple[int, ...],
                          model: str = "sage",
-                         cache_hit_rate: float = 0.0) -> Dict[str, int]:
+                         cache_hit_rate: float = 0.0,
+                         dedup_factor: float = 1.0) -> Dict[str, int]:
     """Coarse-grained design-time mapping (paper §IV-A first paragraph).
 
     Chooses the CPU trainer's mini-batch share so the predicted CPU
@@ -195,10 +206,12 @@ def initial_task_mapping(host: PlatformSpec, accel: PlatformSpec,
     model — robust for any platform pair, no closed form needed.
 
     ``cache_hit_rate`` is the device cache's design-time hit estimate
-    (``FeatureCache.expected_hit_rate``): it shrinks the accelerators'
-    load/transfer terms, which shifts the optimum toward larger
-    accelerator shares.  The CPU trainer reads host memory directly and
-    never benefits from the device cache.
+    (``FeatureCache.expected_hit_rate``) and ``dedup_factor`` the measured
+    frontier duplication factor alpha (unique/total rows, from a probe
+    mini-batch at design time or measured loader stats at runtime): both
+    shrink the accelerators' load/transfer terms, which shifts the optimum
+    toward larger accelerator shares.  The CPU trainer reads host memory
+    directly and benefits from neither (its rows never cross PCIe).
     """
     best: Tuple[float, int] = (float("inf"), 0)
     step = max(1, total_batch // 64)
@@ -206,7 +219,8 @@ def initial_task_mapping(host: PlatformSpec, accel: PlatformSpec,
         accel_share = (total_batch - cpu_share) // max(n_accel, 1)
         w_cpu = WorkloadSpec(cpu_share, fanouts, layer_dims, model=model)
         w_acc = WorkloadSpec(accel_share, fanouts, layer_dims, model=model,
-                             cache_hit_rate=cache_hit_rate)
+                             cache_hit_rate=cache_hit_rate,
+                             dedup_factor=dedup_factor)
         pred = predict(host, accel, n_accel, w_cpu, w_acc)
         if pred.t_execution < best[0]:
             best = (pred.t_execution, cpu_share)

@@ -9,13 +9,16 @@
 # sampler.py   fixed-shape neighbor sampling (numpy host / jit device).
 # models.py    GCN / GraphSAGE on sampled blocks (dense/segsum/pallas agg).
 #
-# Data flows sampler -> loader -> transfer -> (on-device cache combine) ->
-# model; only miss rows ever cross the host->device interconnect.
+# Data flows sampler -> loader -> transfer -> (on-device cache combine /
+# dedup expansion) -> model; only *unique miss* rows ever cross the
+# host->device interconnect — frontiers are deduplicated before the cache
+# lookup and the positional layout is rebuilt on device.
 from .storage import (CSRGraph, DenseFeatures, FeatureSource, GraphDataset,
                       HashedFeatures, PartitionedFeatures, DATASET_STATS,
                       as_feature_source, make_dataset, synth_powerlaw_graph)
 from .sampler import MiniBatch, NumpySampler, sample_minibatch_jax, frontier_sizes
-from .featcache import CacheLookup, CacheStats, FeatureCache, build_cache
+from .featcache import (CacheLookup, CacheStats, FeatureCache, build_cache,
+                        compact_lookup)
 from .featload import FeatureLoader, LoadStats, MissBlock
 from .models import GNNConfig, init_params, forward, loss_fn, param_count
 
@@ -25,6 +28,7 @@ __all__ = [
     "DATASET_STATS", "make_dataset", "synth_powerlaw_graph",
     "MiniBatch", "NumpySampler", "sample_minibatch_jax", "frontier_sizes",
     "CacheLookup", "CacheStats", "FeatureCache", "build_cache",
+    "compact_lookup",
     "FeatureLoader", "LoadStats", "MissBlock",
     "GNNConfig", "init_params", "forward", "loss_fn", "param_count",
 ]

@@ -1,11 +1,17 @@
-"""Device-resident hot-feature cache (static, degree-ordered).
+"""Device-resident hot-feature cache (static, degree-ordered) + frontier
+deduplication.
 
 HyScale-GNN hides host->device feature traffic behind prefetching; the
-complementary lever (DistDGL-style hybrid systems, and the dominant one on
-feature-traffic-bound workloads) is to *not send* the hottest rows at all:
-power-law frontiers are dominated by hub nodes, so pinning the top-K
-hottest node features in device memory converts most of each iteration's
-gather into a device-local lookup.
+complementary levers (DistDGL-style hybrid systems, and the dominant ones
+on feature-traffic-bound workloads) are to *not send* rows at all:
+
+  * power-law frontiers are dominated by hub nodes, so pinning the top-K
+    hottest node features in device memory converts most of each
+    iteration's gather into a device-local lookup, and
+  * with-replacement neighbor sampling re-references the same vertices
+    many times per mini-batch, so gathering/shipping one row per *unique*
+    node id (the paper's Feature-Duplicator rationale, Section IV-C:
+    fetch once, duplicate locally) removes the remaining redundancy.
 
 The cache is static: hotness is the expected gather frequency under
 neighbor sampling (``GraphDataset.feature_hotness`` — in-edge mass + 1),
@@ -20,13 +26,18 @@ Components:
     (papers100M scale: ~440 MB, far below the feature matrix it indexes).
   * ``data_on(device)`` — the [K, F] hot-row block, placed once per
     trainer device and reused every iteration.
-  * ``lookup(ids)`` — splits a frontier into (slots, miss_index, miss_ids)
-    and accounts hit/miss rows and bytes saved.
+  * ``compact_lookup(ids)`` — cache-free frontier deduplication: unique
+    ids + int32 inverse map, shared by cached and uncached transfer paths.
+  * ``lookup(ids, dedup=True)`` — deduplicates the frontier, classifies
+    only the uniques against the cache, and returns (slots, miss_index,
+    miss_ids) where ``miss_ids`` holds one entry per *unique* miss and the
+    positional tables point many frontier positions at one shipped row.
 
 The loader (``featload.FeatureLoader``) gathers only ``miss_ids`` on the
-host; the transfer stage ships the misses and a combine step (Pallas
-``cache_combine`` kernel or its jnp reference) assembles the dense layer-0
-input on device.
+host; the transfer stage ships the unique misses and a combine step
+(Pallas tiled ``cache_combine`` kernel or its jnp reference) expands them
+back into the dense positional layer-0 input on device — the duplication
+happens after the interconnect, for free.
 """
 from __future__ import annotations
 
@@ -38,40 +49,81 @@ import numpy as np
 
 from .storage import FeatureSource, as_feature_source
 
-__all__ = ["CacheLookup", "CacheStats", "FeatureCache", "build_cache"]
+__all__ = ["CacheLookup", "CacheStats", "FeatureCache", "build_cache",
+           "compact_lookup", "wire_row_bytes"]
+
+
+def wire_row_bytes(feat_dim: int, transfer_dtype: str) -> int:
+    """Bytes one feature row occupies on the wire (the transfer dtype) —
+    the single definition both the cache and the loader account with."""
+    return int(feat_dim) * np.dtype(
+        np.float32 if transfer_dtype == "float32" else transfer_dtype
+    ).itemsize
 
 
 @dataclasses.dataclass
 class CacheLookup:
-    """Result of partitioning one frontier against the cache."""
-    ids: np.ndarray         # int64 [N] the queried node ids
-    slots: np.ndarray       # int32 [N] cache slot per row, -1 = miss
+    """Result of partitioning one frontier against the cache.
+
+    The positional tables (``slots``/``miss_index``) always describe the
+    full [N]-row frontier the GNN consumes.  Under deduplication the miss
+    block is compacted to one row per unique miss id, so several positions
+    share a ``miss_index`` entry — the on-device combine expands them.
+    """
+    ids: np.ndarray         # int64 [N] the queried node ids (positional)
+    slots: np.ndarray       # int32 [N] cache slot per position, -1 = miss
     miss_index: np.ndarray  # int32 [N] row into the miss block (0 for hits)
     miss_ids: np.ndarray    # int64 [M] node ids to gather on the host
+    unique_ids: np.ndarray  # int64 [U] deduped frontier (sorted; == ids
+                            #   when dedup is off)
+    inverse: np.ndarray     # int32 [N] position -> row in unique_ids
 
     @property
     def num_rows(self) -> int:
         return int(self.ids.shape[0])
 
     @property
+    def num_unique(self) -> int:
+        return int(self.unique_ids.shape[0])
+
+    @property
     def num_miss(self) -> int:
+        """Rows in the miss block (unique misses under dedup)."""
         return int(self.miss_ids.shape[0])
 
     @property
     def num_hit(self) -> int:
-        return self.num_rows - self.num_miss
+        """Frontier *positions* served by the cache."""
+        return int(np.count_nonzero(self.slots >= 0))
+
+    @property
+    def miss_positions(self) -> int:
+        return self.num_rows - self.num_hit
+
+    @property
+    def dup_miss_rows(self) -> int:
+        """Positional miss rows that alias an already-shipped unique row."""
+        return self.miss_positions - self.num_miss
 
     @property
     def hit_rate(self) -> float:
         return self.num_hit / max(self.num_rows, 1)
 
+    @property
+    def dup_factor(self) -> float:
+        """Frontier duplication factor (positions per unique id, >= 1)."""
+        return self.num_rows / max(self.num_unique, 1)
+
 
 @dataclasses.dataclass
 class CacheStats:
     lookups: int = 0
-    hit_rows: int = 0
-    miss_rows: int = 0
+    hit_rows: int = 0        # frontier positions served by the cache
+    miss_rows: int = 0       # frontier positions not in the cache
+    unique_rows: int = 0     # unique ids across lookups (== total when
+                             #   dedup is off)
     saved_bytes: int = 0     # host->device bytes avoided by cache hits
+    dedup_saved_bytes: int = 0  # bytes avoided by shipping unique misses
 
     @property
     def total_rows(self) -> int:
@@ -85,7 +137,38 @@ class CacheStats:
         self.lookups += other.lookups
         self.hit_rows += other.hit_rows
         self.miss_rows += other.miss_rows
+        self.unique_rows += other.unique_rows
         self.saved_bytes += other.saved_bytes
+        self.dedup_saved_bytes += other.dedup_saved_bytes
+
+
+def compact_lookup(ids: np.ndarray,
+                   slot_of: Optional[np.ndarray] = None) -> CacheLookup:
+    """Deduplicate a frontier and (optionally) classify it against a cache.
+
+    Computes the frontier's unique ids + int32 inverse map once
+    (``np.unique``-based), classifies only the uniques against ``slot_of``
+    (all-miss when ``None``), and builds the positional ``slots`` /
+    ``miss_index`` tables by broadcasting the per-unique verdicts back
+    through the inverse map — so the miss block holds one row per unique
+    miss and many positions point at the same shipped row.
+    """
+    ids = np.asarray(ids, dtype=np.int64)
+    unique_ids, inverse = np.unique(ids, return_inverse=True)
+    inverse = inverse.astype(np.int32)
+    if slot_of is None:
+        uniq_slots = np.full(unique_ids.shape[0], -1, dtype=np.int32)
+    else:
+        uniq_slots = slot_of[unique_ids]
+    is_miss = uniq_slots < 0
+    # rank of each unique miss among the misses = its row in the miss block
+    uniq_miss_index = np.cumsum(is_miss, dtype=np.int32)
+    uniq_miss_index = np.where(is_miss, uniq_miss_index - 1, 0
+                               ).astype(np.int32)
+    return CacheLookup(ids=ids, slots=uniq_slots[inverse],
+                       miss_index=uniq_miss_index[inverse],
+                       miss_ids=unique_ids[is_miss],
+                       unique_ids=unique_ids, inverse=inverse)
 
 
 class FeatureCache:
@@ -110,10 +193,7 @@ class FeatureCache:
         self.cached_ids = np.ascontiguousarray(order.astype(np.int64))
         self.capacity = capacity
         self.feat_dim = int(feat_dim)
-        # bytes one feature row occupies on the wire (transfer dtype)
-        self.row_bytes = int(feat_dim) * np.dtype(
-            np.float32 if transfer_dtype == "float32" else transfer_dtype
-        ).itemsize
+        self.row_bytes = wire_row_bytes(feat_dim, transfer_dtype)
         self.slot_of = np.full(num_nodes, -1, dtype=np.int32)
         self.slot_of[self.cached_ids] = np.arange(capacity, dtype=np.int32)
         host_rows = source.take(self.cached_ids)
@@ -151,20 +231,36 @@ class FeatureCache:
 
     # --------------------------------------------------------------- lookup
 
-    def lookup(self, ids: np.ndarray) -> CacheLookup:
-        """Vectorized id->slot partition of one frontier."""
+    def lookup(self, ids: np.ndarray, dedup: bool = True) -> CacheLookup:
+        """Partition one frontier into cached slots and miss rows.
+
+        ``dedup=True`` (the default) classifies only the frontier's unique
+        ids and compacts the miss block to one row per unique miss;
+        ``dedup=False`` reproduces the legacy positional path (one miss
+        row per frontier position, in frontier order).
+
+        Hit/miss stats always count frontier *positions* so the measured
+        ``hit_rate`` stays comparable to ``expected_hit_rate`` regardless
+        of dedup; the bytes dedup avoids are in ``dedup_saved_bytes``.
+        """
         ids = np.asarray(ids, dtype=np.int64)
-        slots = self.slot_of[ids]
-        is_miss = slots < 0
-        # rank of each miss among the misses = its row in the miss block
-        miss_index = np.cumsum(is_miss, dtype=np.int32)
-        miss_index = np.where(is_miss, miss_index - 1, 0).astype(np.int32)
-        miss_ids = ids[is_miss]
-        look = CacheLookup(ids=ids, slots=slots, miss_index=miss_index,
-                           miss_ids=miss_ids)
+        if dedup:
+            look = compact_lookup(ids, self.slot_of)
+        else:
+            slots = self.slot_of[ids]
+            is_miss = slots < 0
+            miss_index = np.cumsum(is_miss, dtype=np.int32)
+            miss_index = np.where(is_miss, miss_index - 1, 0
+                                  ).astype(np.int32)
+            look = CacheLookup(
+                ids=ids, slots=slots, miss_index=miss_index,
+                miss_ids=ids[is_miss], unique_ids=ids,
+                inverse=np.arange(ids.shape[0], dtype=np.int32))
         self.stats.merge(CacheStats(
-            lookups=1, hit_rows=look.num_hit, miss_rows=look.num_miss,
-            saved_bytes=look.num_hit * self.row_bytes))
+            lookups=1, hit_rows=look.num_hit,
+            miss_rows=look.miss_positions, unique_rows=look.num_unique,
+            saved_bytes=look.num_hit * self.row_bytes,
+            dedup_saved_bytes=look.dup_miss_rows * self.row_bytes))
         return look
 
 

@@ -1,26 +1,38 @@
-"""Feature Loader (paper Section III-A) — cache-aware host gather.
+"""Feature Loader (paper Section III-A) — cache- and dedup-aware host gather.
 
 Runs on the host ("Feature Loading is only performed on the CPUs ... the
 feature matrix X is stored in the CPU memory").  Given a sampled MiniBatch
-it gathers the innermost frontier's feature rows from the dataset's
-``FeatureSource`` into a contiguous buffer ready for the Data Transfer
-stage.
+it gathers feature rows from the dataset's ``FeatureSource`` into a
+contiguous buffer ready for the Data Transfer stage.
 
-Two gather modes:
+The unit of the transfer path is the *unique node id*, not the frontier
+position: with-replacement sampling on power-law graphs makes most frontier
+positions duplicates of a small hub set, so the loader gathers and ships
+one row per unique id and lets the on-device combine step duplicate rows
+back into the positional [frontier, F] layer-0 layout (the paper's Feature
+Duplicator, moved to the far side of the interconnect).
 
-  * ``load``        — the full frontier (legacy path; CPU trainers, whose
-    "device" is host memory, and cache-disabled runs),
-  * ``load_misses`` — only the rows absent from the device-resident
-    ``FeatureCache``: the frontier is partitioned by the cache's
-    vectorized id->slot table and just the miss block crosses PCIe.  The
-    transfer stage ships (miss rows, slots, miss_index) and the on-device
-    combine step reassembles the dense layer-0 input.
+Gather modes:
+
+  * ``load``         — the full positional frontier (CPU trainers, whose
+    "device" is host memory and who read rows in place, and legacy
+    dedup-off/cache-off accelerator runs),
+  * ``load_compact`` — the deduped transfer path: unique ids are computed
+    once per mini-batch (``featcache.compact_lookup``), only uniques are
+    classified against the optional device-resident ``FeatureCache``, and
+    only *unique miss* rows are gathered and shipped.  The transfer stage
+    sends (unique miss rows, slots, miss_index); the combine expands them.
+  * ``load_misses``  — back-compat alias of ``load_compact`` that requires
+    a cache (honours the loader's ``dedup`` flag).
 
 Supports optional on-the-fly down-cast to bf16 ("data quantization to
 relieve the stress on the PCIe bandwidth" — the paper's §VIII future-work
 item) and reports rows/bytes statistics consumed by the DRM engine and the
 performance model.  ``stats.bytes`` counts only bytes actually *shipped*
-(the quantity Eq. 7/8 model); cache savings are in ``stats.saved_bytes``.
+(the quantity Eq. 7/8 model); cache savings are in ``stats.saved_bytes``
+and dedup savings in ``stats.dedup_saved_bytes`` — the three always sum
+back to the legacy one-row-per-position baseline (plus bucket padding,
+tracked separately in ``padding_bytes``).
 """
 from __future__ import annotations
 
@@ -33,7 +45,8 @@ import numpy as np
 
 import jax.numpy as jnp
 
-from .featcache import CacheLookup, FeatureCache
+from .featcache import (CacheLookup, FeatureCache, compact_lookup,
+                        wire_row_bytes)
 from .sampler import MiniBatch
 from .storage import GraphDataset
 
@@ -44,35 +57,45 @@ _BF16 = jnp.bfloat16  # numpy-compatible via ml_dtypes under the hood
 
 @dataclasses.dataclass
 class LoadStats:
-    rows: int = 0            # rows shipped (gathered misses + any padding)
+    rows: int = 0            # rows shipped (gathered uniques + any padding)
     bytes: int = 0           # bytes shipped host->device
     seconds: float = 0.0
-    total_rows: int = 0      # frontier rows requested (hits + misses)
-    hit_rows: int = 0        # rows served from the device cache
+    total_rows: int = 0      # frontier positions requested (hits + misses)
+    unique_rows: int = 0     # unique ids among the requested positions
+    hit_rows: int = 0        # positions served from the device cache
     saved_bytes: int = 0     # transfer bytes avoided by cache hits
+    dedup_saved_bytes: int = 0  # transfer bytes avoided by deduplication
     padding_bytes: int = 0   # share of `bytes` that is shape-bucket padding
 
     @property
     def hit_rate(self) -> float:
         return self.hit_rows / max(self.total_rows, 1)
 
+    @property
+    def dup_factor(self) -> float:
+        """Measured duplication factor (positions per unique id, >= 1)."""
+        return self.total_rows / max(self.unique_rows, 1)
+
     def merge(self, other: "LoadStats") -> None:
         self.rows += other.rows
         self.bytes += other.bytes
         self.seconds += other.seconds
         self.total_rows += other.total_rows
+        self.unique_rows += other.unique_rows
         self.hit_rows += other.hit_rows
         self.saved_bytes += other.saved_bytes
+        self.dedup_saved_bytes += other.dedup_saved_bytes
         self.padding_bytes += other.padding_bytes
 
 
 @dataclasses.dataclass
 class MissBlock:
-    """Host-side output of a cache-aware load, ready for transfer.
+    """Host-side output of a compact (dedup/cache-aware) load.
 
-    ``rows`` is the [M, F] miss block; ``lookup`` carries the slot /
-    miss-index arrays the on-device combine consumes (see
-    ``kernels.ops.assemble_features``).
+    ``rows`` is the [M, F] unique-miss block; ``lookup`` carries the
+    positional slot / miss-index tables the on-device combine consumes
+    (see ``kernels.ops.assemble_features``) — under dedup many positions
+    point at the same row of ``rows``.
     """
     rows: np.ndarray
     lookup: CacheLookup
@@ -85,30 +108,58 @@ class MissBlock:
 class FeatureLoader:
     def __init__(self, dataset: GraphDataset, transfer_dtype: str = "float32",
                  num_threads: int = 1,
-                 cache: Optional[FeatureCache] = None):
+                 cache: Optional[FeatureCache] = None,
+                 dedup: bool = True):
         self.dataset = dataset
         self.source = dataset.feature_source
         self.transfer_dtype = transfer_dtype
         self.num_threads = max(1, int(num_threads))  # DRM's balance_thread knob
         self.cache = cache
+        self.dedup = dedup
         self.stats = LoadStats()       # transfer path (rows that cross PCIe)
         self.host_stats = LoadStats()  # CPU-trainer direct host reads
         # the load and transfer pipeline stages run in different threads
         # and both account into `stats` (gathers vs bucket padding)
         self._stats_lock = threading.Lock()
+        # chunked-gather pool: created lazily, reused across load calls
+        # (executor construction/teardown per call costs more than the
+        # chunked gather saves on small frontiers)
+        self._pool = None
+        self._pool_size = 0
+        self._row_bytes = wire_row_bytes(dataset.feat_dim, transfer_dtype)
 
     def _account(self, dest: LoadStats, delta: LoadStats) -> None:
         with self._stats_lock:
             dest.merge(delta)
 
+    def _get_pool(self):
+        import concurrent.futures as cf
+        if self._pool is None or self._pool_size != self.num_threads:
+            if self._pool is not None:
+                self._pool.shutdown(wait=False)
+            self._pool = cf.ThreadPoolExecutor(
+                self.num_threads, thread_name_prefix="featload")
+            self._pool_size = self.num_threads
+        return self._pool
+
+    def close(self) -> None:
+        if self._pool is not None:
+            self._pool.shutdown(wait=False)
+            self._pool = None
+            self._pool_size = 0
+
+    def __del__(self):  # pragma: no cover - GC timing dependent
+        try:
+            self.close()
+        except Exception:
+            pass
+
     def _gather(self, rows: np.ndarray) -> np.ndarray:
         if self.num_threads == 1 or rows.shape[0] < 2 * self.num_threads:
             return self.source.take(rows)
         # chunked gather: with >1 OS threads numpy gathers overlap page faults
-        import concurrent.futures as cf
         chunks = np.array_split(rows, self.num_threads)
-        with cf.ThreadPoolExecutor(self.num_threads) as pool:
-            parts = list(pool.map(self.source.take, chunks))
+        parts = list(self._get_pool().map(self.source.take, chunks))
         return np.concatenate(parts, axis=0)
 
     def _cast(self, x: np.ndarray) -> np.ndarray:
@@ -133,7 +184,8 @@ class FeatureLoader:
         dt = time.perf_counter() - t0
         dest = self.stats if to_device else self.host_stats
         self._account(dest, LoadStats(rows=x.shape[0], bytes=x.nbytes,
-                                      seconds=dt, total_rows=x.shape[0]))
+                                      seconds=dt, total_rows=x.shape[0],
+                                      unique_rows=x.shape[0]))
         return x
 
     def note_transfer_padding(self, rows: int, nbytes: int) -> None:
@@ -143,16 +195,39 @@ class FeatureLoader:
         self._account(self.stats, LoadStats(rows=rows, bytes=nbytes,
                                             padding_bytes=nbytes))
 
-    def load_misses(self, batch: MiniBatch) -> MissBlock:
-        """Gather only the frontier rows the device cache does not hold."""
-        if self.cache is None:
-            raise RuntimeError("load_misses requires a FeatureCache")
+    def load_compact(self, batch: MiniBatch) -> MissBlock:
+        """Deduped transfer-path load: gather one row per unique miss id.
+
+        Works with or without a device cache.  With a cache, only the
+        frontier's unique ids are classified against it and only unique
+        *miss* rows are gathered; without one, every unique id is a miss.
+        When the loader was built with ``dedup=False`` (legacy positional
+        path) a cache is required and one row per miss position ships.
+        """
         t0 = time.perf_counter()
-        look = self.cache.lookup(self._frontier(batch))
+        frontier = self._frontier(batch)
+        if self.cache is not None:
+            look = self.cache.lookup(frontier, dedup=self.dedup)
+            row_bytes = self.cache.row_bytes
+        else:
+            if not self.dedup:
+                raise RuntimeError(
+                    "load_compact without a FeatureCache requires dedup")
+            look = compact_lookup(frontier)
+            row_bytes = self._row_bytes
         rows = self._cast(self._gather(look.miss_ids))
         dt = time.perf_counter() - t0
         self._account(self.stats, LoadStats(
             rows=rows.shape[0], bytes=rows.nbytes, seconds=dt,
-            total_rows=look.num_rows, hit_rows=look.num_hit,
-            saved_bytes=look.num_hit * self.cache.row_bytes))
+            total_rows=look.num_rows, unique_rows=look.num_unique,
+            hit_rows=look.num_hit,
+            saved_bytes=look.num_hit * row_bytes,
+            dedup_saved_bytes=look.dup_miss_rows * row_bytes))
         return MissBlock(rows=rows, lookup=look)
+
+    def load_misses(self, batch: MiniBatch) -> MissBlock:
+        """Gather only the frontier rows the device cache does not hold
+        (deduped unless the loader was built with ``dedup=False``)."""
+        if self.cache is None:
+            raise RuntimeError("load_misses requires a FeatureCache")
+        return self.load_compact(batch)

@@ -15,10 +15,12 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import ref
 from .flash_attention import flash_attention_call
 from .gather_scatter_mm import (cache_combine_kernel_call,
+                                cache_combine_tiled_kernel_call,
                                 fused_update_kernel_call,
                                 segment_sum_kernel_call)
 
@@ -26,32 +28,6 @@ __all__ = ["segment_weighted_sum_regular", "fused_gnn_update",
            "flash_attention", "assemble_features"]
 
 _INTERPRET = jax.default_backend() != "tpu"
-
-
-@functools.partial(jax.jit, static_argnames=("use_pallas",))
-def assemble_features(cache: jax.Array, miss: jax.Array, slots: jax.Array,
-                      miss_index: jax.Array,
-                      use_pallas: bool = False) -> jax.Array:
-    """Assemble the dense layer-0 feature block from the device-resident
-    hot cache + the transferred miss rows (see graph/featcache.py).
-
-    No VJP needed: layer-0 inputs are data, not parameters, so this sits
-    outside the autodiff region of the train step.
-
-    ``use_pallas`` dispatches to the scalar-prefetch gather kernel (the
-    real TPU path); the default jnp path (XLA gather + select) is faster
-    under interpret mode on CPU, where each Pallas grid step runs in
-    Python.
-    """
-    if miss.shape[0] == 0:
-        # keep the gather well-defined when every row hits the cache
-        miss = jnp.zeros((1, cache.shape[1]), cache.dtype)
-    if not use_pallas:
-        return ref.assemble_features(cache, miss, slots, miss_index)
-    sel = (slots < 0).astype(jnp.int32)
-    row = jnp.where(slots < 0, miss_index, slots).astype(jnp.int32)
-    return cache_combine_kernel_call(cache, miss, sel, row,
-                                     interpret=_INTERPRET)
 
 
 def _round_up(x: int, m: int) -> int:
@@ -64,6 +40,125 @@ def _pick_tile(dim: int, pref: int = 128, floor: int = 8) -> int:
     while t > floor and _round_up(dim, t) >= 2 * dim and dim > 0:
         t //= 2
     return max(t, floor)
+
+
+def assemble_features(cache: Optional[jax.Array], miss: jax.Array,
+                      slots, miss_index, use_pallas: bool = False
+                      ) -> jax.Array:
+    """Assemble the dense positional layer-0 feature block from the
+    device-resident hot cache + the transferred unique-miss rows (see
+    graph/featcache.py).  Under frontier dedup the index tables point many
+    positions at one shipped row, so this step *is* the paper's Feature
+    Duplicator, run on the destination device after the interconnect.
+
+    ``cache=None`` marks the cache-less dedup path (every position reads
+    the miss block).
+
+    ``slots``/``miss_index`` are accepted as host numpy (they are
+    host-produced by the cache lookup); the Pallas path derives its DMA
+    schedule from them on the host before anything touches the device.
+
+    No VJP needed: layer-0 inputs are data, not parameters, so this sits
+    outside the autodiff region of the train step.
+
+    ``use_pallas`` dispatches to the multi-row tiled combine kernel (the
+    real TPU path); the default jnp path (XLA gather + select) is faster
+    under interpret mode on CPU, where each Pallas grid step runs in
+    Python.
+    """
+    if not use_pallas:
+        return _assemble_ref(cache, miss, jnp.asarray(slots),
+                             jnp.asarray(miss_index))
+    return _assemble_tiled(cache, miss, np.asarray(slots),
+                           np.asarray(miss_index))
+
+
+@jax.jit
+def _assemble_ref(cache: Optional[jax.Array], miss: jax.Array,
+                  slots: jax.Array, miss_index: jax.Array) -> jax.Array:
+    if cache is None:
+        cache = jnp.zeros((1, miss.shape[1]), miss.dtype)
+    if miss.shape[0] == 0:
+        # keep the gather well-defined when every row hits the cache
+        miss = jnp.zeros((1, cache.shape[1]), cache.dtype)
+    return ref.assemble_features(cache, miss, slots, miss_index)
+
+
+def _assemble_tiled(cache: Optional[jax.Array], miss: jax.Array,
+                    slots: np.ndarray, miss_index: np.ndarray) -> jax.Array:
+    """Host-side sort-by-source-row schedule for the tiled combine kernel.
+
+    The positional gather is recast as a *dense-rank expansion*: the
+    distinct cache slots the batch references are compacted to ranks
+    [0, H) and the distinct referenced miss rows to ranks [Hp, Hp+M) (two
+    device-local ``take``s of unique rows — U-scale work, not N-scale).
+    Every rank below the bounded pad gaps is referenced by >= 1 position, so
+    after sorting positions by rank each T_N output tile reads a monotone
+    rank run whose whole span provably fits in four aligned W-row blocks
+    of the dense source — the scalar-prefetched per-tile ``base`` block
+    index steers those DMAs and ``local`` addresses rows inside the 4W
+    VMEM window.  The kernel writes sorted rows; one XLA take un-permutes
+    (each positional row is produced exactly once, a bandwidth-bound
+    copy).  All schedule tables are cheap O(N log N) host numpy, part of
+    the load stage like the paper's edge sorting.
+    """
+    n = int(slots.shape[0])
+    f = int(miss.shape[1])
+    hit = slots >= 0
+    w = _pick_tile(n, 128)
+    t_f = _pick_tile(f)
+    # dense ranks: distinct referenced cache rows first, then distinct
+    # referenced miss rows — density is *constructed* (not assumed of the
+    # caller), so every rank below the bounded pad gaps is referenced.
+    # Both compact blocks are bucketed to W multiples so jit recompiles
+    # stay bounded; each pad gap is unreferenced and <= W-1 rows.
+    distinct_hit = np.unique(slots[hit]).astype(np.int32)
+    h = int(distinct_hit.shape[0])
+    hp = _round_up(h, w)
+    hit_table = np.zeros(hp, np.int32)
+    hit_table[:h] = distinct_hit
+    distinct_miss = np.unique(miss_index[~hit]).astype(np.int32)
+    dm = int(distinct_miss.shape[0])
+    mp = _round_up(dm, w)
+    miss_table = np.zeros(mp, np.int32)
+    miss_table[:dm] = distinct_miss
+    rank = np.empty(n, np.int32)
+    rank[hit] = np.searchsorted(distinct_hit, slots[hit]).astype(np.int32)
+    rank[~hit] = hp + np.searchsorted(
+        distinct_miss, miss_index[~hit]).astype(np.int32)
+    order = np.argsort(rank, kind="stable")
+    n_pad = _round_up(n, w)
+    # pad sorted ranks by repeating the max: keeps the last tile monotone
+    srank = np.pad(rank[order], (0, n_pad - n), mode="edge")
+    tiles = srank.reshape(n_pad // w, w)
+    base = (tiles[:, 0] // w).astype(np.int32)   # rows sorted: min is first
+    local = (tiles - base[:, None] * w).astype(np.int32)
+    # the dense-rank construction guarantees every tile fits its window
+    assert local.max(initial=0) < 4 * w, "tiled combine window overflow"
+    inv = np.empty(n, np.int32)     # permutation inverse via O(N) scatter
+    inv[order] = np.arange(n, dtype=np.int32)
+    return _assemble_tiled_device(cache, miss, hit_table, miss_table, base,
+                                  local, inv, w=w, t_f=t_f)
+
+
+@functools.partial(jax.jit, static_argnames=("w", "t_f"))
+def _assemble_tiled_device(cache, miss, hit_table, miss_table, base,
+                           local, inv, w: int, t_f: int) -> jax.Array:
+    f = miss.shape[1]
+    if cache is None:
+        compact = jnp.zeros((0, f), miss.dtype)
+    else:
+        compact = jnp.take(cache, hit_table, axis=0)
+    src = jnp.concatenate([compact, jnp.take(miss, miss_table, axis=0)],
+                          axis=0)
+    # three spare blocks past the last referenced row so the kernel's
+    # base..base+3 window always exists, columns padded to the F tile
+    sp = _round_up(int(src.shape[0]), w) + 4 * w
+    fp = _round_up(f, t_f)
+    src = jnp.pad(src, ((0, sp - src.shape[0]), (0, fp - f)))
+    out = cache_combine_tiled_kernel_call(src, base, local, t_n=w, t_f=t_f,
+                                          interpret=_INTERPRET)
+    return jnp.take(out, inv, axis=0)[:, :f]
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2,))

@@ -18,13 +18,18 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["segment_weighted_sum_regular", "fused_gnn_update",
-           "assemble_features"]
+           "assemble_features", "expand_rows"]
 
 
 def assemble_features(cache: jax.Array, miss: jax.Array, slots: jax.Array,
                       miss_index: jax.Array) -> jax.Array:
     """Cache-combine oracle: ``out[i] = cache[slots[i]]`` when
     ``slots[i] >= 0`` else ``miss[miss_index[i]]``.
+
+    Many-to-one is part of the contract: under frontier dedup several
+    positions ``i`` carry the same ``slots``/``miss_index`` value, so one
+    shipped row fans out into every positional copy (the paper's Feature
+    Duplicator, applied on-device).
 
     cache: [K, F]; miss: [M, F] (M >= 1); slots: int32 [N] (-1 = miss);
     miss_index: int32 [N] -> [N, F].
@@ -33,6 +38,13 @@ def assemble_features(cache: jax.Array, miss: jax.Array, slots: jax.Array,
     from_cache = jnp.take(cache, jnp.maximum(slots, 0), axis=0)
     from_miss = jnp.take(miss, miss_index, axis=0)
     return jnp.where(hit[:, None], from_cache, from_miss)
+
+
+def expand_rows(rows: jax.Array, inverse: jax.Array) -> jax.Array:
+    """Dedup-expansion oracle: ``out[i] = rows[inverse[i]]`` — rebuilds the
+    positional [N, F] layout from a [U, F] unique-row block.  Equivalent
+    to ``assemble_features`` with no cache (all slots -1)."""
+    return jnp.take(rows, inverse, axis=0)
 
 
 def segment_weighted_sum_regular(x_nbr: jax.Array, w_edge: jax.Array,

@@ -70,17 +70,50 @@ def test_cache_picks_hottest_and_lookup_partitions():
     ids = np.array([0, 49, 50, 199, 0, 150], dtype=np.int64)
     look = cache.lookup(ids)
     assert look.num_rows == 6 and look.num_hit == 3 and look.num_miss == 3
-    assert np.array_equal(look.miss_ids, [50, 199, 150])
+    # dedup path: miss block holds the *sorted unique* miss ids
+    assert np.array_equal(look.miss_ids, [50, 150, 199])
+    assert np.array_equal(look.unique_ids, [0, 49, 50, 150, 199])
+    assert np.array_equal(look.unique_ids[look.inverse], ids)
     # slots point at the right cached rows
     hit = look.slots >= 0
     got = src.take(cache.cached_ids)[look.slots[hit]]
     assert np.array_equal(got, src.take(ids[hit]))
-    # miss_index enumerates misses in order
-    assert np.array_equal(look.miss_index[~hit], [0, 1, 2])
-    # stats accounting
+    # miss_index maps each miss position at its unique row
+    assert np.array_equal(look.miss_ids[look.miss_index[~hit]], ids[~hit])
+    # stats accounting (positional hits/misses; dup hit position 0 saved
+    # twice by the cache, no duplicate misses here)
     assert cache.stats.hit_rows == 3 and cache.stats.miss_rows == 3
     assert cache.stats.saved_bytes == 3 * 8 * 4
+    assert cache.stats.dedup_saved_bytes == 0
+    assert cache.stats.unique_rows == 5
     assert cache.expected_hit_rate > 0.25  # top quarter of a linear ramp
+
+
+def test_legacy_lookup_matches_pr1_layout():
+    src, cache = _toy_cache()
+    ids = np.array([0, 49, 50, 199, 0, 150], dtype=np.int64)
+    look = cache.lookup(ids, dedup=False)
+    # one miss row per miss *position*, in frontier order
+    assert np.array_equal(look.miss_ids, [50, 199, 150])
+    hit = look.slots >= 0
+    assert np.array_equal(look.miss_index[~hit], [0, 1, 2])
+    assert look.num_unique == look.num_rows
+    assert look.dup_miss_rows == 0
+
+
+def test_lookup_dedup_compacts_duplicate_misses():
+    src, cache = _toy_cache()
+    ids = np.array([60, 60, 60, 7, 60, 80, 80], dtype=np.int64)
+    look = cache.lookup(ids)
+    assert look.num_hit == 1                 # node 7 (positional)
+    assert look.miss_positions == 6
+    assert look.num_miss == 2                # unique misses {60, 80}
+    assert look.dup_miss_rows == 4
+    assert np.array_equal(look.miss_ids, [60, 80])
+    # reconstruction: every position resolves to its own id's row
+    hit = look.slots >= 0
+    assert np.array_equal(look.miss_ids[look.miss_index[~hit]], ids[~hit])
+    assert cache.stats.dedup_saved_bytes == 4 * 8 * 4
 
 
 def test_cache_capacity_clamped_and_build_cache_off():
@@ -177,9 +210,14 @@ def test_cached_training_loss_equivalent_and_saves_bytes():
     base, cached = run(0.0), run(0.2)
     assert [m.loss for m in base.history] == [m.loss for m in cached.history]
     tf_base, tf_cached = base.feature_traffic(), cached.feature_traffic()
-    assert tf_base["reduction"] == 1.0 and tf_base["saved_bytes"] == 0.0
-    assert tf_cached["reduction"] > 1.5
-    assert tf_cached["shipped_bytes"] < tf_base["shipped_bytes"] / 1.5
+    # frac=0 still dedups (default): no cache savings, but dedup savings
+    assert tf_base["saved_bytes"] == 0.0
+    assert tf_base["dedup_saved_bytes"] > 0.0
+    assert tf_base["reduction"] > 1.0 and tf_base["dup_factor"] > 1.0
+    # cache on top of dedup: strictly less shipped than dedup alone
+    assert tf_cached["reduction"] > tf_base["reduction"]
+    assert tf_cached["saved_bytes"] > 0.0
+    assert tf_cached["shipped_bytes"] < tf_base["shipped_bytes"]
     assert cached.history[-1].cache_hit_rate > 0.3
 
 
