@@ -1,0 +1,204 @@
+"""Out-of-core FeatureSource benchmark: dense vs partitioned vs mmap.
+
+For papers100M (scaled) this measures, per backend:
+
+  * gather throughput over sampled-frontier unique ids (rows/s and GB/s —
+    the Feature Loader's host-side workload),
+  * the resident-set ceiling: bytes of feature storage that must sit in
+    host RAM at once.  The RAM backends hold the whole O(N*F) matrix; the
+    mmap backend needs only the current gather's touched pages plus the
+    spill writer's one-partition buffer — O(touched partitions), which is
+    what lets a MAG240M-sized matrix (202 GB) train on a small host,
+
+plus the spill writer's peak buffered rows (the bounded-RAM guarantee:
+never more than one partition) and an end-to-end loss bit-identity check
+of mmap-backed vs dense-backed training at the same seed.
+
+Writes BENCH_outofcore.json.  ``--smoke`` is the tier-1 gate: a small-
+scale run in a temp dir (cleaned up on exit) asserting dense/mmap gather
+parity, the one-partition spill bound, a bounded gather working set, and
+e2e loss bit-identity.
+
+Usage:  PYTHONPATH=src python -m benchmarks.bench_outofcore [--smoke]
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import HybridConfig, HybridGNNTrainer
+from repro.graph import GNNConfig, MmapFeatures, NumpySampler, make_dataset
+
+from .common import emit
+
+DATASET = "ogbn-papers100M"
+FANOUTS = (10, 5)
+
+
+def _frontiers(ds, iters: int, batch: int, seed: int = 1):
+    """Unique ids of ``iters`` sampled frontiers (the deduped transfer
+    path's gather requests — one row per unique id)."""
+    sampler = NumpySampler(ds.graph, FANOUTS, seed=seed)
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(iters):
+        tgt = rng.integers(0, ds.num_nodes, batch)
+        mb = sampler.sample(tgt, ds.labels[tgt])
+        out.append(np.unique(np.asarray(mb.frontier(len(FANOUTS)))))
+    return out
+
+
+def bench_backend(backend: str, scale: float, iters: int, batch: int,
+                  partition_rows: int, spill_dir=None) -> dict:
+    ds = make_dataset(DATASET, scale=scale, seed=0,
+                      feature_backend=backend,
+                      partition_rows=partition_rows, spill_dir=spill_dir)
+    src = ds.feature_source
+    full_bytes = ds.num_nodes * ds.feat_dim * 4
+    frontiers = _frontiers(ds, iters, batch)
+    src.take(frontiers[0][:64])            # warm the take path
+    if isinstance(src, MmapFeatures):
+        src.reset_touch_stats()
+    rows = nbytes = 0
+    peak_gather_pages = 0
+    t0 = time.perf_counter()
+    for f in frontiers:
+        x = src.take(f)
+        rows += x.shape[0]
+        nbytes += x.nbytes
+        if isinstance(src, MmapFeatures):
+            peak_gather_pages = max(peak_gather_pages,
+                                    src.last_gather_page_bytes)
+    dt = time.perf_counter() - t0
+    res = {
+        "backend": backend,
+        "gather_rows_per_s": rows / dt,
+        "gather_gbps": nbytes / dt / 1e9,
+        "gathered_rows": rows,
+        "full_matrix_bytes": full_bytes,
+    }
+    if isinstance(src, MmapFeatures):
+        # ceiling = one gather's faulted pages + the spill writer's single
+        # partition buffer (pages from previous gathers are evictable)
+        spill_buf = partition_rows * ds.feat_dim * 4
+        res.update({
+            "resident_bytes": peak_gather_pages + spill_buf,
+            "peak_gather_page_bytes": peak_gather_pages,
+            "spill_buffer_bytes": spill_buf,
+            "spill_peak_buffered_rows": src.spill_peak_buffered_rows,
+            "cumulative_touched_page_bytes": src.touched_page_bytes,
+            "mapped_window_bytes": src.resident_window_bytes,
+        })
+    else:
+        # RAM backends hold the whole matrix for the run's lifetime
+        res["resident_bytes"] = full_bytes
+    emit(f"outofcore,{backend},scale={scale:g}", dt / iters * 1e6,
+         f"{res['gather_rows_per_s']/1e6:.2f}Mrows/s "
+         f"resident={res['resident_bytes']/1e6:.1f}MB "
+         f"(full {full_bytes/1e6:.1f}MB)")
+    return res
+
+
+def e2e_bit_identity(scale: float, iters: int, batch: int,
+                     partition_rows: int, spill_dir=None) -> dict:
+    """Train dense-backed and mmap-backed runs at the same seed; the
+    backend is purely a capacity knob, so losses must be bit-identical."""
+    g = None
+    losses = {}
+    for backend in ("dense", "mmap"):
+        kw = (dict(spill_dir=spill_dir, partition_rows=partition_rows)
+              if backend == "mmap" else {})
+        ds = make_dataset(DATASET, scale=scale, seed=0,
+                          feature_backend=backend, **kw)
+        if g is None:
+            g = GNNConfig(model="sage", layer_dims=ds.layer_dims,
+                          fanouts=FANOUTS, num_classes=ds.num_classes)
+        cfg = HybridConfig(total_batch=batch, n_accel=2, hybrid=False,
+                           use_drm=False, tfp_depth=2, seed=0)
+        tr = HybridGNNTrainer(ds, g, cfg)
+        tr.train(iters)
+        losses[backend] = [m.loss for m in tr.history]
+        tr.loader.close()
+    identical = bool(np.array_equal(losses["dense"], losses["mmap"]))
+    emit("outofcore,e2e_bit_identity", 0.0,
+         f"identical={identical} last={losses['mmap'][-1]:.4f}")
+    return {"e2e_loss_bit_identical": identical,
+            "losses_mmap": losses["mmap"]}
+
+
+def run(scale: float = 1e-2, iters: int = 4, batch: int = 256,
+        e2e_iters: int = 4, partition_rows: int = 8192,
+        out_path: str = "BENCH_outofcore.json") -> dict:
+    results = {"dataset": DATASET, "scale": scale, "iters": iters,
+               "batch": batch, "partition_rows": partition_rows,
+               "backends": {}}
+    with tempfile.TemporaryDirectory(prefix="bench-outofcore-") as td:
+        for backend in ("dense", "partitioned", "mmap"):
+            spill = os.path.join(td, "spill") if backend == "mmap" else None
+            results["backends"][backend] = bench_backend(
+                backend, scale, iters, batch, partition_rows,
+                spill_dir=spill)
+        results.update(e2e_bit_identity(
+            scale, e2e_iters, batch, partition_rows,
+            spill_dir=os.path.join(td, "spill-e2e")))
+    if out_path:
+        with open(out_path, "w") as fh:
+            json.dump(results, fh, indent=2)
+        emit("outofcore,written", 0.0, os.path.abspath(out_path))
+    return results
+
+
+def _asserts(res: dict, resident_frac_max: float) -> None:
+    mm = res["backends"]["mmap"]
+    dense = res["backends"]["dense"]
+    # bounded-RAM spill: never more than one partition buffered
+    assert 0 < mm["spill_peak_buffered_rows"] <= res["partition_rows"], \
+        f"spill buffered {mm['spill_peak_buffered_rows']} rows > partition"
+    # the out-of-core promise: resident set is O(touched pages + spill
+    # buffer), not O(N*F)
+    frac = mm["resident_bytes"] / dense["resident_bytes"]
+    assert frac < resident_frac_max, \
+        f"mmap resident {frac:.2f}x of full matrix (>{resident_frac_max})"
+    assert res["e2e_loss_bit_identical"], "mmap-backed losses diverged"
+
+
+def run_smoke() -> dict:
+    """Tier-1 gate (~60 s): small-scale papers100M in a temp dir (cleaned
+    on exit) — dense/mmap gather parity, the one-partition spill bound, a
+    bounded gather working set, and e2e loss bit-identity."""
+    with tempfile.TemporaryDirectory(prefix="outofcore-smoke-") as td:
+        # explicit byte-parity gate on one dataset instance
+        ds_d = make_dataset(DATASET, scale=1e-3, seed=0,
+                            feature_backend="dense")
+        ds_m = make_dataset(DATASET, scale=1e-3, seed=0,
+                            feature_backend="mmap", partition_rows=4096,
+                            spill_dir=os.path.join(td, "parity"))
+        rng = np.random.default_rng(0)
+        rows = rng.integers(0, ds_m.num_nodes, 10_000).astype(np.int64)
+        a = ds_d.take_features(rows)
+        b = ds_m.take_features(rows)
+        assert a.tobytes() == b.tobytes(), "mmap gather != dense gather"
+        emit("outofcore,smoke_parity", 0.0, f"rows={rows.shape[0]} OK")
+    res = run(scale=1e-3, iters=4, batch=128, e2e_iters=3,
+              partition_rows=4096, out_path="")
+    _asserts(res, resident_frac_max=0.7)
+    return res
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small-scale assert-only run (scripts/tier1.sh)")
+    ap.add_argument("--scale", type=float, default=1e-2)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    if args.smoke:
+        run_smoke()
+    else:
+        res = run(scale=args.scale)
+        _asserts(res, resident_frac_max=0.5)

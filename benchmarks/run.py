@@ -8,12 +8,13 @@
 #   table7 TFLOPS-normalized epoch-time comparison
 #   fig11  optimization ablation (baseline/+hybrid/+DRM/+TFP), measured
 #   cache  device feature-cache ablation (fraction x dataset), measured
+#   outofcore  dense/partitioned/mmap gather throughput + resident set
 #   roofline  per-(arch x shape x mesh) terms from the dry-run JSON
 def main() -> None:
     print("name,us_per_call,derived")
-    from . import (fig8_perfmodel, fig9_scalability, fig10_crossplatform,
-                   fig11_ablation, fig_cache_ablation, roofline,
-                   table6_epoch_time, table7_normalized)
+    from . import (bench_outofcore, fig8_perfmodel, fig9_scalability,
+                   fig10_crossplatform, fig11_ablation, fig_cache_ablation,
+                   roofline, table6_epoch_time, table7_normalized)
     fig8_perfmodel.run()
     fig9_scalability.run()
     fig10_crossplatform.run()
@@ -22,6 +23,7 @@ def main() -> None:
     fig11_ablation.run()
     fig11_ablation.run_projected()
     fig_cache_ablation.run()
+    bench_outofcore.run()
     roofline.run()
 
 if __name__ == '__main__':

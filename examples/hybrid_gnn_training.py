@@ -32,7 +32,15 @@ def main():
                     help="pin this fraction of the hottest node features "
                          "on each accelerator (0 = off)")
     ap.add_argument("--feature-backend", default="auto",
-                    choices=["auto", "dense", "hashed", "partitioned"])
+                    choices=["auto", "dense", "hashed", "partitioned",
+                             "mmap"],
+                    help="feature storage tier: dense/hashed/partitioned "
+                         "are RAM-resident; 'mmap' spills per-partition "
+                         "blobs to disk (bounded spill RAM, lazily mapped "
+                         "windows) for graphs larger than host memory")
+    ap.add_argument("--spill-dir", default=None,
+                    help="where 'mmap' places its partition blobs "
+                         "(default: a private temp dir, removed on exit)")
     ap.add_argument("--inject-failure", type=int, default=0,
                     help="kill accel0 at this iteration (0 = off)")
     ap.add_argument("--ckpt-dir", default=None)
@@ -40,9 +48,15 @@ def main():
 
     fanouts = tuple(int(x) for x in args.fanouts.split(","))
     ds = make_dataset(args.dataset, scale=args.scale, seed=0,
-                      feature_backend=args.feature_backend)
+                      feature_backend=args.feature_backend,
+                      spill_dir=args.spill_dir)
     print(f"{ds.name}: |V|={ds.num_nodes:,} |E|={ds.num_edges:,} "
           f"dims={ds.layer_dims}")
+    if args.feature_backend == "mmap":
+        src = ds.features
+        print(f"out-of-core features: {src.num_partitions} partitions of "
+              f"{src.partition_rows} rows under {src.spill_dir} "
+              f"(spill buffered <= {src.spill_peak_buffered_rows} rows)")
     gnn = GNNConfig(model=args.model, layer_dims=ds.layer_dims,
                     fanouts=fanouts, num_classes=ds.num_classes,
                     agg_impl=args.agg_impl)

@@ -1,7 +1,11 @@
 #!/usr/bin/env bash
-# Tier-1 verification: the full test suite plus a ~30 s cache-ablation
-# smoke bench (asserts the >= 2x feature-byte reduction at a 20% cache
-# fraction and cached/uncached loss equivalence).
+# Tier-1 verification: the full test suite plus two smoke benches —
+#  * cache-ablation (~30 s): >= 2x feature-byte reduction at a 20% cache
+#    fraction and cached/uncached loss equivalence,
+#  * out-of-core (~60 s): mmap gather parity with the dense backend in a
+#    tempdir (cleaned up on exit), the spill writer's one-partition
+#    buffered-rows bound, a bounded gather working set, and mmap/dense
+#    loss bit-identity.
 #
 #   ./scripts/tier1.sh            # everything
 #   ./scripts/tier1.sh --fast     # skip the 'slow' subprocess-compile tests
@@ -17,4 +21,5 @@ fi
 # ${MARK[@]+...} guards the empty-array expansion under `set -u` on bash < 4.4
 python -m pytest -x -q ${MARK[@]+"${MARK[@]}"}
 python -m benchmarks.fig_cache_ablation --smoke
+python -m benchmarks.bench_outofcore --smoke
 echo "tier1: OK"

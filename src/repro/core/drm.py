@@ -77,6 +77,11 @@ class DRMEngine:
     def _balance_work_train(self, times: StageTimes) -> str:
         """Move mini-batch rows between the CPU trainer and accelerators."""
         a = self.assign
+        if a.n_accel <= 0:
+            # no accelerator to trade rows with: any delta added to
+            # accel_batch contributes accel_batch * 0 to total_batch, so
+            # the conservation invariant would silently lose rows
+            return "balance_work train: no accelerators (no-op)"
         slow_is_cpu = times.t_tc > times.t_accel
         t_slow = max(times.t_tc, times.t_accel)
         t_fast = max(min(times.t_tc, times.t_accel), 1e-9)

@@ -58,8 +58,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.graph import (FeatureLoader, GNNConfig, GraphDataset, MiniBatch,
-                         MissBlock, NumpySampler, build_cache, init_params,
-                         loss_fn, sample_minibatch_jax)
+                         MissBlock, NumpySampler, build_cache,
+                         compact_lookup, init_params, loss_fn,
+                         sample_minibatch_jax)
 from repro.kernels.ops import assemble_features
 from repro.optim import (CompressionSpec, adamw, compress_grads,
                          decompress_grads)
@@ -167,11 +168,17 @@ class HybridGNNTrainer:
         self._assemble_pallas = (cfg.cache_assemble == "pallas"
                                  or (cfg.cache_assemble == "auto"
                                      and jax.default_backend() == "tpu"))
-        # measured duplication factor alpha = unique/total frontier rows,
-        # from one probe mini-batch (dedicated sampler + rng so the probe
-        # never perturbs the training-path RNG streams: dedup on/off runs
-        # stay bit-identical).  Only the hybrid task mapping consumes
-        # alpha, so accel-only runs skip the probe cost.
+        # out-of-core features (MmapFeatures) gather through host storage,
+        # not RAM: Eq. 7 must be priced at storage bandwidth
+        self.feature_tier = ("disk" if getattr(self.loader.source,
+                                               "is_disk_resident", False)
+                             else "ram")
+        # measured duplication factor alpha = unique-miss / positional-miss
+        # frontier rows, from one probe mini-batch classified against the
+        # cache (dedicated sampler + rng so the probe never perturbs the
+        # training-path RNG streams: dedup on/off runs stay bit-identical).
+        # Only the hybrid task mapping consumes alpha, so accel-only runs
+        # skip the probe cost.
         self.measured_dedup_alpha = (
             self._probe_dup_factor() if (cfg.dedup and cfg.hybrid) else 1.0)
 
@@ -185,7 +192,8 @@ class HybridGNNTrainer:
                 host, accel, cfg.n_accel, cfg.total_batch,
                 gnn_cfg.fanouts, gnn_cfg.layer_dims, model=gnn_cfg.model,
                 cache_hit_rate=hit_rate,
-                dedup_factor=self.measured_dedup_alpha)
+                dedup_factor=self.measured_dedup_alpha,
+                feature_tier=self.feature_tier)
         else:
             mapping = {"cpu": 0,
                        "accel_each": cfg.total_batch // max(cfg.n_accel, 1)}
@@ -211,18 +219,28 @@ class HybridGNNTrainer:
     # ------------------------------------------------------------ utilities
 
     def _probe_dup_factor(self) -> float:
-        """Measure alpha = unique/total frontier rows from one probe
-        mini-batch at the accel-only share (the transfer-path batch size
-        Eq. 7/8 price).  Uses a throwaway sampler/rng so training RNG
-        streams are untouched."""
+        """Measure alpha = unique-miss / positional-miss frontier rows from
+        one probe mini-batch at the accel-only share (the transfer-path
+        batch size Eq. 7/8 price).  The probe frontier is classified
+        against the device cache exactly like the transfer path: hub ids
+        are both the most-cached and the most-duplicated, so the naive
+        unique/total ratio would double-count the overlap the model's
+        (1 - h) cache term already removed (the definition
+        ``_maybe_refresh_mapping`` uses at runtime — both mappings price
+        the same alpha for the same traffic).  Uses a throwaway
+        sampler/rng so training RNG streams are untouched."""
         probe_n = max(1, self.cfg.total_batch // max(self.cfg.n_accel, 1))
         rng = np.random.default_rng(self.cfg.seed + 17)
         tgt = rng.integers(0, self.dataset.num_nodes, probe_n)
         sampler = NumpySampler(self.dataset.graph, self.gnn_cfg.fanouts,
                                seed=self.cfg.seed + 17)
         mb = sampler.sample(tgt, self.dataset.labels[tgt])
-        unique, inverse = mb.unique_frontier(len(self.gnn_cfg.fanouts))
-        return unique.shape[0] / max(inverse.shape[0], 1)
+        frontier = np.asarray(mb.frontier(len(self.gnn_cfg.fanouts)))
+        look = compact_lookup(
+            frontier, self.cache.slot_of if self.cache is not None else None)
+        if look.miss_positions == 0:      # fully cached probe: no traffic
+            return 1.0
+        return look.num_miss / look.miss_positions
 
     def inject_failure(self, trainer_name: str, at_iteration: int) -> None:
         """Fault-tolerance test hook: trainer dies at the given iteration."""
@@ -354,9 +372,14 @@ class HybridGNNTrainer:
     def _stage_transfer(self, item: PipelineItem) -> PipelineItem:
         p = item.payload
         t0 = time.perf_counter()
-        for name, kind in self._active_trainers():
-            if name not in p["features"]:
+        # iterate the payload's own trainer set, not _active_trainers():
+        # with TFP prefetch in flight the DRM may have re-quantized a
+        # share to 0 since this batch was sampled — the batch still
+        # belongs to the trainers it was sampled for
+        for name in list(p["features"]):
+            if name in self._failed:
                 continue
+            kind = "cpu" if name == "cpu" else "accel"
             dev = (self.cpu_device if kind == "cpu"
                    else self._accel_device(name))
             feat = p["features"][name]
@@ -374,8 +397,17 @@ class HybridGNNTrainer:
     def _run_trainers(self, item: PipelineItem
                       ) -> Tuple[PyTree, Dict[str, float], Dict[str, float]]:
         p = item.payload
-        active = [(n, k) for n, k in self._active_trainers()
-                  if n in p["minibatch"]]
+        # the payload records which trainers this batch was sampled for
+        # (and their shares at sampling time); run exactly those, minus
+        # any that have since failed.  Intersecting with the *current*
+        # assignment instead can come up empty when the DRM re-quantizes
+        # a share to 0 while prefetched batches are still in flight.
+        active = [(n, "cpu" if n == "cpu" else "accel")
+                  for n in p["minibatch"] if n not in self._failed]
+        if not active:        # every trainer of this batch has died
+            zero = jax.tree.map(jnp.zeros_like, self.params)
+            return (zero, {"t_tc": 0.0, "t_ta": 0.0},
+                    {"loss": float("nan"), "acc": float("nan")})
         sync = Synchronizer(len(active))
         results: Dict[str, Dict[str, Any]] = {}
 
@@ -448,7 +480,7 @@ class HybridGNNTrainer:
             self.cfg.n_accel, self.cfg.total_batch,
             self.gnn_cfg.fanouts, self.gnn_cfg.layer_dims,
             model=self.gnn_cfg.model, cache_hit_rate=measured,
-            dedup_factor=alpha)
+            dedup_factor=alpha, feature_tier=self.feature_tier)
         a = self.runtime.assignment
         n = max(self.cfg.n_accel, 1)
         a.accel_batch = mapping["accel_each"]

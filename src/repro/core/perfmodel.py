@@ -32,12 +32,17 @@ class PlatformSpec:
     mac_parallelism: int        # N in Eq. 12 (MACs per cycle)
     freq_ghz: float
     pipelined_agg_update: bool  # the ⊕ operator in Eq. 10: True -> max
+    # host storage (NVMe/SSD) read bandwidth, for disk-resident features
+    # (the out-of-core MmapFeatures tier).  0 = knob unset: Eq. 7 falls
+    # back to memory bandwidth, i.e. features are assumed RAM-resident.
+    storage_bw_gbps: float = 0.0
 
 
 PLATFORMS: Dict[str, PlatformSpec] = {
-    # paper Table II (effective PCIe bandwidths: gen4 x16 burst ~16 GB/s)
+    # paper Table II (effective PCIe bandwidths: gen4 x16 burst ~16 GB/s;
+    # host storage: one PCIe gen4 x4 NVMe, ~7 GB/s sequential read)
     "epyc-7763":  PlatformSpec("epyc-7763", 3.6, 205.0, 0.0, 256.0,
-                               1472, 2.45, False),
+                               1472, 2.45, False, storage_bw_gbps=7.0),
     "rtx-a5000":  PlatformSpec("rtx-a5000", 27.8, 768.0, 16.0, 6.0,
                                13900, 2.0, False),
     "alveo-u250": PlatformSpec("alveo-u250", 0.6, 77.0, 16.0, 54.0,
@@ -63,11 +68,19 @@ class WorkloadSpec:
     # frontier duplication factor alpha = unique-miss rows / positional
     # miss rows: the deduped transfer path gathers/ships one row per
     # unique miss, so Eq. 7/8 traffic scales by alpha on top of (1 - h).
-    # At design time a probe mini-batch approximates it with
-    # unique/total; at runtime the loader stats give it exactly (see
-    # HybridGNNTrainer._maybe_refresh_mapping).  1 reproduces the paper's
-    # positional (one-row-per-position) equations exactly.
+    # Both the design-time probe (HybridGNNTrainer._probe_dup_factor,
+    # which classifies one probe frontier against the cache) and the
+    # runtime loader stats (_maybe_refresh_mapping) use this same
+    # unique-miss/miss-positions definition — hub ids are both the
+    # most-cached and the most-duplicated, so the naive unique/total
+    # ratio would double-count the overlap the cache term (1 - h)
+    # already removed.  1 reproduces the paper's positional
+    # (one-row-per-position) equations exactly.
     dedup_factor: float = 1.0
+    # where the feature matrix lives on the host: "ram" (the paper's
+    # baseline) or "disk" (out-of-core MmapFeatures) — Eq. 7 prices the
+    # gather at min(memory, storage) bandwidth for the disk tier.
+    feature_tier: str = "ram"
 
     def frontier_sizes(self) -> Tuple[int, ...]:
         out = [self.batch_size]
@@ -121,9 +134,18 @@ class StagePrediction:
 
 def t_load(w: WorkloadSpec, host: PlatformSpec, n_trainers: int) -> float:
     """Eq. 7 extended with the cache term: only the expected cache-miss
-    rows are gathered from host memory (hit rows live on-device)."""
+    rows are gathered from host memory (hit rows live on-device).
+
+    For disk-resident features (``w.feature_tier == "disk"``, the
+    out-of-core MmapFeatures tier) the gather streams through the host
+    storage device, so the stage is priced at min(memory, storage)
+    bandwidth; a platform without the ``storage_bw_gbps`` knob falls back
+    to memory bandwidth (RAM-resident assumption)."""
+    bw = host.mem_bw_gbps
+    if w.feature_tier == "disk" and host.storage_bw_gbps > 0.0:
+        bw = min(bw, host.storage_bw_gbps)
     num = n_trainers * w.miss_rows() * w.layer_dims[0] * w.feat_bytes
-    return num / (host.mem_bw_gbps * 1e9)
+    return num / (bw * 1e9)
 
 
 def t_trans(w: WorkloadSpec, accel: PlatformSpec) -> float:
@@ -197,7 +219,8 @@ def initial_task_mapping(host: PlatformSpec, accel: PlatformSpec,
                          layer_dims: Tuple[int, ...],
                          model: str = "sage",
                          cache_hit_rate: float = 0.0,
-                         dedup_factor: float = 1.0) -> Dict[str, int]:
+                         dedup_factor: float = 1.0,
+                         feature_tier: str = "ram") -> Dict[str, int]:
     """Coarse-grained design-time mapping (paper §IV-A first paragraph).
 
     Chooses the CPU trainer's mini-batch share so the predicted CPU
@@ -207,20 +230,28 @@ def initial_task_mapping(host: PlatformSpec, accel: PlatformSpec,
 
     ``cache_hit_rate`` is the device cache's design-time hit estimate
     (``FeatureCache.expected_hit_rate``) and ``dedup_factor`` the measured
-    frontier duplication factor alpha (unique/total rows, from a probe
-    mini-batch at design time or measured loader stats at runtime): both
+    frontier duplication factor alpha (unique-miss rows / positional miss
+    rows — the same definition at design time, from a cache-classified
+    probe mini-batch, and at runtime, from measured loader stats): both
     shrink the accelerators' load/transfer terms, which shifts the optimum
     toward larger accelerator shares.  The CPU trainer reads host memory
     directly and benefits from neither (its rows never cross PCIe).
+
+    ``feature_tier="disk"`` prices every trainer's load stage (CPU and
+    accelerator alike — they gather from the same host FeatureSource) at
+    the host's storage bandwidth, shifting work toward whichever side
+    hides the slower gather better.
     """
     best: Tuple[float, int] = (float("inf"), 0)
     step = max(1, total_batch // 64)
     for cpu_share in range(0, total_batch // 2 + 1, step):
         accel_share = (total_batch - cpu_share) // max(n_accel, 1)
-        w_cpu = WorkloadSpec(cpu_share, fanouts, layer_dims, model=model)
+        w_cpu = WorkloadSpec(cpu_share, fanouts, layer_dims, model=model,
+                             feature_tier=feature_tier)
         w_acc = WorkloadSpec(accel_share, fanouts, layer_dims, model=model,
                              cache_hit_rate=cache_hit_rate,
-                             dedup_factor=dedup_factor)
+                             dedup_factor=dedup_factor,
+                             feature_tier=feature_tier)
         pred = predict(host, accel, n_accel, w_cpu, w_acc)
         if pred.t_execution < best[0]:
             best = (pred.t_execution, cpu_share)

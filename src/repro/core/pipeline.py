@@ -46,6 +46,10 @@ class PrefetchPipeline:
     def __init__(self, stages: List[Stage], depth: int = 2):
         self.stages = stages
         self.depth = int(depth)
+        # last completed run's failure (observability only): every run()
+        # threads its OWN error holder + stop event through its workers,
+        # so threads left over from an abandoned earlier run can never
+        # contaminate a later run's state
         self._error: Optional[BaseException] = None
 
     # ------------------------------------------------------------ sequential
@@ -61,7 +65,9 @@ class PrefetchPipeline:
 
     # ------------------------------------------------------------- pipelined
 
-    def _worker(self, st: Stage, q_in: "queue.Queue", q_out: "queue.Queue"):
+    def _worker(self, st: Stage, q_in: "queue.Queue", q_out: "queue.Queue",
+                state: Dict[str, Optional[BaseException]],
+                stop: threading.Event):
         failed = False
         while True:
             item = q_in.get()
@@ -75,19 +81,26 @@ class PrefetchPipeline:
                 item = st.fn(item)
                 item.timings[st.name] = time.perf_counter() - t0
             except BaseException as e:  # propagate to consumer
-                self._error = e
+                state["error"] = e
+                stop.set()          # feeder: stop pulling new payloads
                 failed = True       # keep draining until the sentinel
                 continue
             q_out.put(item)
 
     def run(self, items: Iterable[PipelineItem]) -> Iterator[PipelineItem]:
+        # a pipeline object is reusable: a clean run must not re-raise a
+        # stale exception, so failure state is PER RUN (closed over below)
+        self._error = None
         if self.depth <= 0:
             yield from self._run_sequential(items)
             return
+        state: Dict[str, Optional[BaseException]] = {"error": None}
+        stop = threading.Event()
         qs: List["queue.Queue"] = [queue.Queue(maxsize=self.depth)
                                    for _ in range(len(self.stages) + 1)]
         threads = [threading.Thread(target=self._worker,
-                                    args=(st, qs[i], qs[i + 1]), daemon=True)
+                                    args=(st, qs[i], qs[i + 1], state, stop),
+                                    daemon=True)
                    for i, st in enumerate(self.stages)]
         for t in threads:
             t.start()
@@ -95,6 +108,8 @@ class PrefetchPipeline:
         def feed():
             try:
                 for item in items:
+                    if stop.is_set():
+                        break       # a stage died: don't consume payloads
                     qs[0].put(item)
             finally:
                 qs[0].put(_SENTINEL)
@@ -109,5 +124,6 @@ class PrefetchPipeline:
         feeder.join()
         for t in threads:
             t.join()
-        if self._error is not None:
-            raise self._error
+        if state["error"] is not None:
+            self._error = state["error"]
+            raise state["error"]

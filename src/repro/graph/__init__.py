@@ -1,7 +1,9 @@
 # Graph data layer — architecture note
 #
 # storage.py   FeatureSource protocol + backends (dense / hashed /
-#              partitioned); host-resident, gather-only interface.
+#              partitioned / mmap out-of-core); gather-only interface.
+#              MmapFeatures spills any source to per-partition disk blobs
+#              (one partition of RAM, ever) and maps windows lazily.
 # featcache.py device-resident top-K hot-row cache over any FeatureSource
 #              (static, hotness-ordered; vectorized id->slot lookup).
 # featload.py  host gather stage: full-frontier loads for CPU trainers,
@@ -14,8 +16,9 @@
 # host->device interconnect — frontiers are deduplicated before the cache
 # lookup and the positional layout is rebuilt on device.
 from .storage import (CSRGraph, DenseFeatures, FeatureSource, GraphDataset,
-                      HashedFeatures, PartitionedFeatures, DATASET_STATS,
-                      as_feature_source, make_dataset, synth_powerlaw_graph)
+                      HashedFeatures, MmapFeatures, PartitionedFeatures,
+                      DATASET_STATS, as_feature_source, make_dataset,
+                      synth_powerlaw_graph)
 from .sampler import MiniBatch, NumpySampler, sample_minibatch_jax, frontier_sizes
 from .featcache import (CacheLookup, CacheStats, FeatureCache, build_cache,
                         compact_lookup)
@@ -24,7 +27,8 @@ from .models import GNNConfig, init_params, forward, loss_fn, param_count
 
 __all__ = [
     "CSRGraph", "GraphDataset", "HashedFeatures", "DenseFeatures",
-    "PartitionedFeatures", "FeatureSource", "as_feature_source",
+    "PartitionedFeatures", "MmapFeatures", "FeatureSource",
+    "as_feature_source",
     "DATASET_STATS", "make_dataset", "synth_powerlaw_graph",
     "MiniBatch", "NumpySampler", "sample_minibatch_jax", "frontier_sizes",
     "CacheLookup", "CacheStats", "FeatureCache", "build_cache",

@@ -3,7 +3,10 @@
 Runs on the host ("Feature Loading is only performed on the CPUs ... the
 feature matrix X is stored in the CPU memory").  Given a sampled MiniBatch
 it gathers feature rows from the dataset's ``FeatureSource`` into a
-contiguous buffer ready for the Data Transfer stage.
+contiguous buffer ready for the Data Transfer stage.  When the source is
+partitioned (``PartitionedFeatures`` / out-of-core ``MmapFeatures``) the
+multi-threaded gather splits the request at partition boundaries so each
+thread faults a disjoint set of mmap windows in parallel.
 
 The unit of the transfer path is the *unique node id*, not the frontier
 position: with-replacement sampling on power-law graphs makes most frontier
@@ -154,13 +157,46 @@ class FeatureLoader:
         except Exception:
             pass
 
+    def _split_chunks(self, rows: np.ndarray):
+        """Split a gather into per-thread chunks.
+
+        For partitioned/mmap sources (anything exposing ``partition_rows``)
+        the split is *partition-aligned*: rows are grouped by partition and
+        cut only at partition boundaries, so each pool thread faults a
+        disjoint set of mmap windows (the point of the chunked gather —
+        naive ``array_split`` on an arbitrary-order frontier makes every
+        thread touch every window).  Returns ``(chunks, order)`` where
+        ``order`` is the permutation that sorted the rows (``None`` for the
+        legacy order-preserving split).
+        """
+        prows = int(getattr(self.source, "partition_rows", 0) or 0)
+        if prows <= 0:
+            return np.array_split(rows, self.num_threads), None
+        part_id = rows // prows
+        order = np.argsort(part_id, kind="stable")
+        sorted_rows = rows[order]
+        n = rows.shape[0]
+        # candidate cut positions = partition boundaries in the sorted
+        # stream; pick the one at/after each equal-share target
+        bounds = np.flatnonzero(np.diff(part_id[order])) + 1
+        cand = np.concatenate([bounds, [n]])
+        targets = np.arange(1, self.num_threads) * n // self.num_threads
+        cuts = np.unique(cand[np.searchsorted(cand, targets)])
+        chunks = [c for c in np.split(sorted_rows, cuts) if c.shape[0]]
+        return chunks, order
+
     def _gather(self, rows: np.ndarray) -> np.ndarray:
         if self.num_threads == 1 or rows.shape[0] < 2 * self.num_threads:
             return self.source.take(rows)
         # chunked gather: with >1 OS threads numpy gathers overlap page faults
-        chunks = np.array_split(rows, self.num_threads)
+        chunks, order = self._split_chunks(rows)
         parts = list(self._get_pool().map(self.source.take, chunks))
-        return np.concatenate(parts, axis=0)
+        gathered = np.concatenate(parts, axis=0)
+        if order is None:
+            return gathered
+        out = np.empty_like(gathered)
+        out[order] = gathered      # scatter back into request order
+        return out
 
     def _cast(self, x: np.ndarray) -> np.ndarray:
         if self.transfer_dtype == "bfloat16":

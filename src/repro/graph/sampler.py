@@ -69,18 +69,6 @@ class MiniBatch:
     def num_frontier(self, l: int) -> int:
         return frontier_sizes(self.batch_size, self.fanouts)[l]
 
-    def unique_frontier(self, l: int) -> Tuple[np.ndarray, np.ndarray]:
-        """Deduped frontier ``l``: (sorted unique global ids, int32 inverse
-        map position->unique row).  With-replacement sampling on power-law
-        graphs makes ``len(unique) << len(frontier)`` — the ratio is the
-        duplication factor the deduped transfer path exploits.  Delegates
-        to ``featcache.compact_lookup`` so there is exactly one dedup
-        implementation (and one set of dtype/sortedness guarantees).
-        """
-        from .featcache import compact_lookup
-        look = compact_lookup(np.asarray(self.frontier(l)))
-        return look.unique_ids, look.inverse
-
     def edges_traversed(self) -> int:
         """Total sampled edges (the paper's MTEPS numerator, Eq. 5)."""
         return sum(int(s.shape[0]) for s in self.hop_src)

@@ -6,22 +6,37 @@ MAG240M (202 GB of features).  Everything in this module is therefore
 host-side numpy; device code only ever sees gathered mini-batch tensors.
 
 Feature storage is behind the ``FeatureSource`` protocol — a minimal
-row-gather interface (``take(rows)`` + shape/dtype metadata) with three
+row-gather interface (``take(rows)`` + shape/dtype metadata) with four
 interchangeable backends:
 
   * ``DenseFeatures``       — one materialized ndarray (small graphs),
   * ``HashedFeatures``      — lazily computed rows (papers100M-scale runs
                               on small hosts; nothing is materialized),
   * ``PartitionedFeatures`` — fixed-size row partitions gathered per
-                              partition; the stepping stone to an
-                              mmap/out-of-core backend, since each
-                              partition is an independent blob.
+                              partition; each partition is an independent
+                              RAM blob,
+  * ``MmapFeatures``        — the out-of-core tier: the same fixed-size
+                              row partitions spilled to per-partition disk
+                              blobs and opened lazily as read-only
+                              ``np.memmap`` windows.  The spill writer
+                              buffers at most ONE partition at a time, so
+                              a feature matrix larger than host RAM (the
+                              MAG240M 202 GB case) streams through a
+                              bounded buffer, and a gather's working set
+                              is only the touched partition windows.
 
 All backends return byte-identical rows for the same node ids
 (property-tested), so the choice is purely a capacity/locality knob.  The
 device-side hot-row cache (``featcache.FeatureCache``) and the miss-only
 ``FeatureLoader`` (``featload``) sit on top of this protocol and never see
-a concrete backend.
+a concrete backend; composing ``FeatureCache`` over ``MmapFeatures`` gives
+the full three-tier hierarchy the paper targets (hot rows pinned on
+device, warm rows in the OS page cache, cold rows on disk).
+
+Backend selection is ``make_dataset(feature_backend=...)``: ``"dense"`` |
+``"hashed"`` | ``"partitioned"`` | ``"mmap"`` (with ``spill_dir=`` to place
+the blobs; a private temp dir, removed on GC/exit, is used otherwise) |
+``"auto"``.
 
 Datasets are synthetic, size-parameterized power-law graphs standing in for
 ogbn-products / ogbn-papers100M / MAG240M (homo).  The *full* Table-III stats
@@ -31,6 +46,9 @@ with the same degree-distribution shape.
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
+import tempfile
 from typing import Callable, Dict, List, Optional, Protocol, Sequence, Tuple
 
 import numpy as np
@@ -41,6 +59,7 @@ __all__ = [
     "DenseFeatures",
     "HashedFeatures",
     "PartitionedFeatures",
+    "MmapFeatures",
     "as_feature_source",
     "GraphDataset",
     "synth_powerlaw_graph",
@@ -169,6 +188,199 @@ class PartitionedFeatures:
 
     def __getitem__(self, rows):
         return self.take(np.atleast_1d(rows))
+
+
+_MMAP_MANIFEST = "manifest.json"
+_MMAP_FORMAT = "mmap-features-v1"
+_PAGE_BYTES = 4096          # granularity of the touched-page accounting
+
+
+class MmapFeatures:
+    """Out-of-core FeatureSource: row partitions in per-partition disk blobs.
+
+    The feature matrix is stored as ``ceil(N / partition_rows)`` raw binary
+    files plus a JSON manifest, created by the chunked spill writer
+    (``MmapFeatures.spill``) which buffers AT MOST one partition of rows at
+    a time — so any ``FeatureSource`` (e.g. lazily-computed
+    ``HashedFeatures`` at MAG240M scale) can be materialized to disk with
+    bounded host RAM.  Partitions are opened lazily as read-only
+    ``np.memmap`` windows; ``take`` groups the requested rows by partition,
+    so a gather faults only the touched windows (and, at page granularity,
+    only the touched rows within them) instead of paging the whole matrix.
+
+    Accounting used by ``benchmarks/bench_outofcore.py`` and the tier-1
+    smoke:
+
+      * ``spill_peak_buffered_rows`` — max rows the spill writer ever held
+        (must be <= ``partition_rows``: the bounded-RAM guarantee),
+      * ``resident_window_bytes``    — bytes of mapped (lazily opened)
+        partition windows: address space, an upper bound on residency,
+      * ``touched_page_bytes``       — cumulative unique 4 KiB pages the
+        gathers actually faulted (page-granular residency estimate; the
+        quantity that stays O(touched rows) instead of O(N*F)).
+
+    Reopening an existing spill directory is just ``MmapFeatures(path)``.
+    """
+
+    is_disk_resident = True   # the perf model prices loads at storage bw
+
+    def __init__(self, spill_dir: str):
+        self.spill_dir = str(spill_dir)
+        path = os.path.join(self.spill_dir, _MMAP_MANIFEST)
+        with open(path) as fh:
+            m = json.load(fh)
+        if m.get("format") != _MMAP_FORMAT:
+            raise ValueError(f"{path}: not a {_MMAP_FORMAT} spill directory")
+        self.shape = (int(m["num_rows"]), int(m["feat_dim"]))
+        self._dtype = np.dtype(str(m["dtype"]))
+        self.partition_rows = int(m["partition_rows"])
+        self.num_partitions = int(m["num_partitions"])
+        self._parts: Dict[int, np.memmap] = {}   # lazily opened windows
+        self.spill_peak_buffered_rows = 0        # set by spill()
+        self._owned_tmp: Optional[tempfile.TemporaryDirectory] = None
+        self._row_bytes = self.shape[1] * self._dtype.itemsize
+        # pages per partition *file* (files are page-aligned independently)
+        self._pages_per_part = (
+            -(-self.partition_rows * self._row_bytes // _PAGE_BYTES) + 1)
+        # cumulative touched-page bitmap: one byte per 4 KiB page, i.e.
+        # 1/4096 of the matrix size — bookkeeping stays negligible next to
+        # the one-partition spill buffer even at MAG240M scale.  Updates
+        # only ever set bits, so concurrent take() calls (the loader's
+        # chunked gather) stay correct without a lock.
+        self._page_touched = np.zeros(
+            max(self.num_partitions, 0) * self._pages_per_part, dtype=bool)
+        # pages of the most recent take() CALL — under the loader's
+        # multi-threaded chunked gather each chunk is its own take(), so
+        # this is per-chunk and last-writer-wins there; for a whole-gather
+        # working set, diff touched_page_bytes around the gather or call
+        # take() directly (as bench_outofcore does)
+        self.last_gather_page_bytes = 0
+
+    # --------------------------------------------------------- spill writer
+
+    @classmethod
+    def spill(cls, src: "FeatureSource | np.ndarray",
+              spill_dir: Optional[str] = None,
+              partition_rows: int = 65536) -> "MmapFeatures":
+        """Materialize ``src`` into per-partition disk blobs, one partition
+        buffered at a time, and return the mmap-backed view.
+
+        ``spill_dir=None`` spills into a private temporary directory that
+        is removed when the returned object is garbage-collected (or at
+        interpreter exit).
+        """
+        src = as_feature_source(src)
+        n, f = src.shape
+        partition_rows = max(1, int(partition_rows))
+        owned = None
+        if spill_dir is None:
+            owned = tempfile.TemporaryDirectory(prefix="repro-featspill-")
+            spill_dir = owned.name
+        os.makedirs(spill_dir, exist_ok=True)
+        num_parts = -(-n // partition_rows)
+        peak = 0
+        for pid in range(num_parts):
+            lo = pid * partition_rows
+            hi = min(lo + partition_rows, n)
+            # the ONLY RAM the writer holds: one partition's rows
+            buf = np.ascontiguousarray(
+                src.take(np.arange(lo, hi, dtype=np.int64)))
+            peak = max(peak, buf.shape[0])
+            buf.tofile(os.path.join(spill_dir, cls._part_name(pid)))
+            dtype = buf.dtype
+            del buf
+        if num_parts == 0:
+            dtype = np.dtype(src.dtype)
+        manifest = {"format": _MMAP_FORMAT, "num_rows": int(n),
+                    "feat_dim": int(f), "dtype": np.dtype(dtype).str,
+                    "partition_rows": partition_rows,
+                    "num_partitions": num_parts}
+        with open(os.path.join(spill_dir, _MMAP_MANIFEST), "w") as fh:
+            json.dump(manifest, fh)
+        out = cls(spill_dir)
+        out.spill_peak_buffered_rows = peak
+        out._owned_tmp = owned
+        return out
+
+    @staticmethod
+    def _part_name(pid: int) -> str:
+        return f"part-{pid:05d}.bin"
+
+    # -------------------------------------------------------------- gathers
+
+    @property
+    def dtype(self) -> np.dtype:
+        return self._dtype
+
+    @property
+    def nbytes_on_disk(self) -> int:
+        return self.shape[0] * self.shape[1] * self._dtype.itemsize
+
+    @property
+    def resident_window_bytes(self) -> int:
+        """Bytes of currently mapped (touched) partition windows."""
+        return sum(int(p.nbytes) for p in self._parts.values())
+
+    @property
+    def touched_page_bytes(self) -> int:
+        """Cumulative unique pages faulted by gathers (page-granular
+        residency estimate)."""
+        return int(np.count_nonzero(self._page_touched)) * _PAGE_BYTES
+
+    def reset_touch_stats(self) -> None:
+        self._page_touched[:] = False
+        self.last_gather_page_bytes = 0
+
+    def _part(self, pid: int) -> np.memmap:
+        mm = self._parts.get(pid)
+        if mm is None:
+            lo = pid * self.partition_rows
+            rows = min(self.partition_rows, self.shape[0] - lo)
+            mm = np.memmap(os.path.join(self.spill_dir, self._part_name(pid)),
+                           dtype=self._dtype, mode="r",
+                           shape=(rows, self.shape[1]))
+            self._parts[pid] = mm
+        return mm
+
+    def _note_touch(self, part_id: np.ndarray, offset: np.ndarray) -> None:
+        off_b = offset * self._row_bytes
+        first = off_b // _PAGE_BYTES
+        last = (off_b + self._row_bytes - 1) // _PAGE_BYTES
+        base = part_id * self._pages_per_part
+        # a row spans first..last inclusive — wide rows (> 2 pages) touch
+        # interior pages too, so enumerate the whole span
+        span = self._row_bytes // _PAGE_BYTES + 1
+        parts = []
+        for j in range(span + 1):
+            pg = first + j
+            parts.append(np.where(pg <= last, base + pg, np.int64(-1)))
+        pages = np.unique(np.concatenate(parts))
+        pages = pages[pages >= 0]
+        self.last_gather_page_bytes = int(pages.shape[0]) * _PAGE_BYTES
+        self._page_touched[pages] = True
+
+    def take(self, rows: np.ndarray) -> np.ndarray:
+        rows = np.asarray(rows, dtype=np.int64)
+        out = np.empty((rows.shape[0], self.shape[1]), dtype=self._dtype)
+        if rows.shape[0] == 0:
+            return out
+        if rows.min() < 0 or rows.max() >= self.shape[0]:
+            raise IndexError(
+                f"row ids out of range [0, {self.shape[0]})")
+        part_id = rows // self.partition_rows
+        offset = rows - part_id * self.partition_rows
+        for pid in np.unique(part_id):
+            sel = part_id == pid
+            out[sel] = np.take(self._part(int(pid)), offset[sel], axis=0)
+        self._note_touch(part_id, offset)
+        return out
+
+    def __getitem__(self, rows):
+        return self.take(np.atleast_1d(rows))
+
+    def close(self) -> None:
+        """Drop all mapped windows (their pages become reclaimable)."""
+        self._parts.clear()
 
 
 def as_feature_source(features) -> "FeatureSource":
@@ -309,7 +521,8 @@ TRAIN_SPLIT: Dict[str, int] = {
 def make_dataset(name: str, scale: float = 1.0, seed: int = 0,
                  materialize_features: Optional[bool] = None,
                  feature_backend: str = "auto",
-                 partition_rows: int = 65536) -> GraphDataset:
+                 partition_rows: int = 65536,
+                 spill_dir: Optional[str] = None) -> GraphDataset:
     """Instantiate a (possibly scaled-down) Table-III dataset.
 
     ``scale`` shrinks |V| while preserving avg degree and feature dims, so a
@@ -318,8 +531,11 @@ def make_dataset(name: str, scale: float = 1.0, seed: int = 0,
     (Eq. 7/8) depends on.
 
     ``feature_backend`` picks the FeatureSource implementation: 'dense' |
-    'hashed' | 'partitioned' | 'auto' (dense when the matrix fits 2 GiB,
-    hashed otherwise; same policy as the legacy ``materialize_features``).
+    'hashed' | 'partitioned' | 'mmap' (out-of-core: features spilled to
+    per-partition blobs under ``spill_dir`` — a private temp dir when
+    None — with bounded spill RAM and lazily mapped windows) | 'auto'
+    (dense when the matrix fits 2 GiB, hashed otherwise; same policy as
+    the legacy ``materialize_features``).
     """
     if name not in DATASET_STATS:
         raise KeyError(f"unknown dataset {name!r}; have {list(DATASET_STATS)}")
@@ -341,6 +557,9 @@ def make_dataset(name: str, scale: float = 1.0, seed: int = 0,
     elif feature_backend == "partitioned":
         feats = PartitionedFeatures.from_source(hashed,
                                                 partition_rows=partition_rows)
+    elif feature_backend == "mmap":
+        feats = MmapFeatures.spill(hashed, spill_dir=spill_dir,
+                                   partition_rows=partition_rows)
     else:
         raise ValueError(f"unknown feature_backend {feature_backend!r}")
     rng = np.random.default_rng(seed + 1)

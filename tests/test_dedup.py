@@ -285,6 +285,46 @@ def test_trainer_probes_dup_factor(small_ds):
     assert accel_only.measured_dedup_alpha == 1.0
 
 
+def test_probe_alpha_consults_cache(small_ds):
+    """Design-time alpha must exclude cached positions from both the
+    numerator and the denominator: hub ids are the most-cached AND the
+    most-duplicated, so the old unique/total ratio double-counted the
+    overlap the mapping's (1 - h) cache term already removed."""
+    ds, g = small_ds
+    uncached = _run_trainer(ds, g, dedup=True, frac=0.0, hybrid=True,
+                            iters=1)
+    cached = _run_trainer(ds, g, dedup=True, frac=0.3, hybrid=True, iters=1)
+    # caching the hot hubs removes the most-duplicated ids from the miss
+    # traffic, so the residual alpha is strictly larger (less duplicated)
+    assert cached.measured_dedup_alpha > uncached.measured_dedup_alpha
+    assert 0.0 < cached.measured_dedup_alpha <= 1.0
+
+
+def test_init_and_refresh_alpha_agree_on_same_traffic(small_ds):
+    """The init-time probe (compact_lookup against cache.slot_of) and the
+    refresh-time loader-stats formula must compute the same alpha =
+    unique-miss / positional-miss rows for the same measured traffic."""
+    ds, g = small_ds
+    cache = build_cache(ds, 0.2)
+    loader = FeatureLoader(ds, cache=cache)
+    sampler = NumpySampler(ds.graph, g.fanouts, seed=17)
+    rng = np.random.default_rng(17)
+    tgt = rng.integers(0, ds.num_nodes, 64)
+    mb = sampler.sample(tgt, ds.labels[tgt])
+    loader.load_compact(mb)
+    # refresh-time definition (_maybe_refresh_mapping, from LoadStats)
+    s = loader.stats
+    miss_positions = s.total_rows - s.hit_rows
+    refresh_alpha = (1.0 - (s.dedup_saved_bytes // cache.row_bytes)
+                     / miss_positions)
+    # init-time definition (_probe_dup_factor, from compact_lookup)
+    frontier = np.asarray(mb.frontier(len(g.fanouts)))
+    look = compact_lookup(frontier, cache.slot_of)
+    probe_alpha = look.num_miss / look.miss_positions
+    assert probe_alpha == pytest.approx(refresh_alpha)
+    loader.close()
+
+
 # ------------------------------------------- measured-hit-rate feedback
 
 

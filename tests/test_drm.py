@@ -20,9 +20,11 @@ times_strategy = st.builds(
 
 
 @given(times_strategy, st.integers(0, 512), st.integers(1, 512),
-       st.integers(1, 4))
+       st.integers(0, 4))
 @settings(max_examples=100, deadline=None)
 def test_total_batch_conserved(times, cpu, accel, n_accel):
+    # n_accel == 0 included: the CPU-only degenerate case used to leak
+    # rows into accel_batch, which contributes accel_batch * 0 to the total
     a = _mk(cpu=cpu, accel=accel, n=n_accel)
     total = a.total_batch
     engine = DRMEngine(a)
@@ -30,6 +32,21 @@ def test_total_batch_conserved(times, cpu, accel, n_accel):
         a = engine.step(times)
         assert a.total_batch == total, "balance_work must conserve batch"
         assert a.cpu_batch >= 0 and a.accel_batch >= 0
+
+
+def test_cpu_only_balance_work_is_noop():
+    """With no accelerators there is nowhere to move trainer rows: the
+    cpu->accel branch must not add rows to the phantom accel_batch."""
+    a = _mk(cpu=128, accel=7, n=0)
+    engine = DRMEngine(a)
+    # t_tc dominates and t_accel is nonzero -> would hit the cpu->accel
+    # branch without the guard
+    t = StageTimes(t_sa=0.0, t_sc=0.01, t_load=0.01, t_tran=0.001,
+                   t_tc=0.5, t_ta=0.001)
+    for _ in range(4):
+        a = engine.step(t)
+        assert a.total_batch == 128
+        assert a.cpu_batch == 128 and a.accel_batch == 7
 
 
 @given(times_strategy)

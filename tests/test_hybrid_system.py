@@ -124,3 +124,30 @@ def test_straggler_mitigation_shifts_share():
     assert tr.runtime.assignment.accel_batch < a0, \
         "DRM failed to shift work away from the straggler"
     assert tr.runtime.assignment.total_batch == 256
+
+
+def test_inflight_batch_survives_share_requantize():
+    """With TFP prefetch in flight the DRM can re-quantize a share to 0
+    after a batch was sampled; the batch still belongs to the trainers it
+    was sampled for (regression: the stage consumers used to intersect
+    with the *current* assignment, which could come up empty and crash
+    the synchronizer)."""
+    ds = _dataset()
+    hcfg = HybridConfig(total_batch=256, n_accel=2, hybrid=True,
+                        use_drm=False, tfp_depth=0, seed=0,
+                        cache_fraction=0.2)
+    tr = HybridGNNTrainer(ds, _gcfg(), hcfg)
+    item = tr._make_payload(0)
+    assert set(item.payload["minibatch"]) == set()  # built lazily by stages
+    tr._stage_sample(item)
+    tr._stage_load(item)
+    tr._stage_transfer(item)
+    sampled_for = set(item.payload["minibatch"])
+    assert "accel0" in sampled_for
+    # the DRM flips everything onto the CPU trainer mid-pipeline
+    tr.runtime.assignment.accel_batch = 0
+    tr.runtime.assignment.cpu_batch = hcfg.total_batch
+    grads, ttimes, metrics = tr._run_trainers(item)
+    assert np.isfinite(metrics["loss"])
+    assert grads is not None
+    tr.loader.close()

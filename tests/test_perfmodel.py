@@ -30,6 +30,24 @@ def test_eq7_eq8_load_transfer_scaling():
     assert t_trans(W, GPU) > t_load(W, HOST, 1)
 
 
+def test_eq7_disk_tier_priced_at_storage_bandwidth():
+    w_disk = WorkloadSpec(batch_size=1024, fanouts=(25, 10),
+                          layer_dims=(100, 256, 47), feature_tier="disk")
+    ram, disk = t_load(W, HOST, 1), t_load(w_disk, HOST, 1)
+    # epyc has the storage knob (7 GB/s NVMe << 205 GB/s RAM)
+    assert abs(disk / ram - HOST.mem_bw_gbps / HOST.storage_bw_gbps) < 1e-9
+    # a platform without the knob falls back to RAM pricing
+    no_knob = HOST.__class__(**{**HOST.__dict__, "storage_bw_gbps": 0.0})
+    assert t_load(w_disk, no_knob, 1) == t_load(W, no_knob, 1)
+    # slower gathers shrink (or keep) the share the mapping risks on any
+    # single trainer's load-bound path; total is always conserved
+    kw = dict(n_accel=1, total_batch=1024, fanouts=(25, 10),
+              layer_dims=(100, 256, 47))
+    m = initial_task_mapping(HOST, GPU, feature_tier="disk", **kw)
+    assert m["cpu"] + m["accel_each"] <= 1024
+    assert m["cpu"] >= 0 and m["accel_each"] >= 0
+
+
 def test_eq10_pipelined_faster_or_equal():
     """⊕ = max (FPGA, pipelined) <= ⊕ = sum (CPU/GPU style)."""
     w = W

@@ -69,3 +69,48 @@ def test_error_propagates():
     pipe = PrefetchPipeline([Stage("s", boom)], depth=2)
     with pytest.raises(ValueError, match="boom"):
         list(pipe.run(_items(10)))
+
+
+@pytest.mark.parametrize("depth", [0, 2])
+def test_error_state_cleared_between_runs(depth):
+    """A reused pipeline must not re-raise a stale exception on a clean
+    run (regression: _error survived across run() calls)."""
+    arm = {"on": True}
+
+    def maybe_boom(item):
+        if arm["on"] and item.seq == 1:
+            raise ValueError("boom")
+        return item
+
+    pipe = PrefetchPipeline([Stage("s", maybe_boom)], depth=depth)
+    with pytest.raises(ValueError, match="boom"):
+        list(pipe.run(_items(5)))
+    arm["on"] = False
+    out = [it.seq for it in pipe.run(_items(5))]
+    assert out == list(range(5))
+
+
+def test_feeder_stops_consuming_payloads_after_failure():
+    """After a stage fails, the feeder must stop draining the payload
+    generator (regression: payload side effects — e.g. the trainer's
+    epoch cursor — kept advancing for batches that were silently
+    dropped)."""
+    produced = []
+
+    def gen(n):
+        for i in range(n):
+            produced.append(i)
+            yield PipelineItem(seq=i, payload=i)
+
+    def boom(item):
+        if item.seq == 1:
+            raise ValueError("boom")
+        time.sleep(0.002)
+        return item
+
+    pipe = PrefetchPipeline([Stage("s", boom)], depth=2)
+    with pytest.raises(ValueError, match="boom"):
+        list(pipe.run(gen(200)))
+    # a few in-flight payloads may slip through (queue depth + one in
+    # hand), but nothing close to the full generator
+    assert len(produced) < 50, f"feeder drained {len(produced)} payloads"
