@@ -23,8 +23,21 @@ all, and composes multiplicatively with the cache.  Loss-equivalence
 checks verify both knobs are semantically invisible: every configuration
 with the same seed produces bit-identical losses.
 
-Usage:  PYTHONPATH=src python -m benchmarks.fig_cache_ablation [--smoke]
-        (the full run also writes BENCH_dedup.json with the dedup sweep)
+A third sweep compares the *static* degree-ordered cache policy against
+the *dynamic* refresh policy (DistDGL-style admission: decayed hotness
+counters + evict-coldest/admit-hottest swaps) on a drifting-hub synthetic
+trace — the workload the static snapshot is provably wrong for.  Hub
+identity rotates every phase, so the static cache's hit rate decays to
+the uniform background while the dynamic cache tracks the observed
+distribution; results go to BENCH_cache_refresh.json and the tier-1
+smoke gates that (a) the dynamic policy's steady-state hit rate >= the
+static policy's, (b) dynamic ships strictly fewer bytes, and (c) a full
+trainer run's losses are bit-identical with refresh on vs off (the
+versioned in-flight consistency guarantee).
+
+Usage:  PYTHONPATH=src python -m benchmarks.fig_cache_ablation
+            [--smoke] [--smoke-refresh]
+        (the full run also writes BENCH_dedup.json + BENCH_cache_refresh.json)
 """
 from __future__ import annotations
 
@@ -34,7 +47,7 @@ import os
 import numpy as np
 
 from repro.core import HybridConfig, HybridGNNTrainer
-from repro.graph import GNNConfig, make_dataset
+from repro.graph import FeatureCache, GNNConfig, HashedFeatures, make_dataset
 
 from .common import emit
 
@@ -177,6 +190,163 @@ def _dedup_asserts(res: dict, dataset: str) -> None:
                if c["dataset"] == dataset), "a dedup/cache cell diverged"
 
 
+# ------------------------------ static vs dynamic policy (refresh sweep)
+
+
+def _drift_trace(num_nodes: int, phases: int, batches_per_phase: int,
+                 batch: int, hub_frac: float, seed: int) -> list:
+    """Drifting-hub id trace: each phase draws Zipf-shaped ids from a hub
+    window that rotates half its members every phase (plus a uniform
+    background), so the phase-0-optimal static cache decays while an
+    adaptive policy can track the drift."""
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(num_nodes)
+    n_hub = max(1, int(num_nodes * hub_frac))
+    shift = n_hub // 2
+    trace = []
+    for p in range(phases):
+        hubs = perm[(p * shift + np.arange(n_hub)) % num_nodes]
+        batches = []
+        for _ in range(batches_per_phase):
+            u = rng.random(batch)
+            ranks = np.minimum((u ** 3 * n_hub).astype(np.int64), n_hub - 1)
+            batches.append(np.concatenate(
+                [hubs[ranks], rng.integers(0, num_nodes, batch // 8)]))
+        trace.append(batches)
+    return trace
+
+
+def _phase0_hotness(trace: list, num_nodes: int) -> np.ndarray:
+    """The distribution the static cache is built for (and the dynamic one
+    boots from): phase 0's empirical access counts."""
+    counts = np.zeros(num_nodes)
+    for ids in trace[0]:
+        counts += np.bincount(ids, minlength=num_nodes)
+    return counts + 1e-3
+
+
+def _run_policy(trace: list, num_nodes: int, capacity: int, dynamic: bool,
+                refresh_every: int = 4, feat_dim: int = 32) -> dict:
+    src = HashedFeatures(num_nodes, feat_dim, seed=0)
+    cache = FeatureCache(src, _phase0_hotness(trace, num_nodes), capacity)
+    cache.track_hotness = True    # both policies pay identical lookup cost
+    shipped = 0
+    rates = []
+    step = 0
+    for batches in trace:
+        hits = rows = 0
+        for ids in batches:
+            look = cache.lookup(ids)
+            shipped += look.num_miss * cache.row_bytes
+            hits += look.num_hit
+            rows += look.num_rows
+            step += 1
+            if dynamic and step % refresh_every == 0:
+                cache.refresh()
+        rates.append(hits / max(rows, 1))
+    # admitted rows cross PCIe too (the scatter-update DMA): charge them,
+    # or the dynamic policy's byte cut would be overstated
+    admission = cache.refresh_swapped_rows * cache.row_bytes
+    return {"phase_hit_rates": rates, "shipped_bytes": float(shipped),
+            "admission_bytes": float(admission),
+            "total_pcie_bytes": float(shipped + admission),
+            "refreshes": int(cache.refreshes), "version": int(cache.version),
+            "swapped_rows": int(cache.refresh_swapped_rows)}
+
+
+def _refresh_bit_identity(scale: float, iters: int) -> dict:
+    """Full pipelined trainer, refresh on vs off: the versioned-lookup
+    protocol makes the refresh semantically invisible, so losses must be
+    bit-identical (drift threshold 0 forces refreshes every iteration —
+    maximal churn against the in-flight TFP payloads)."""
+    ds = make_dataset(DATASETS[-1], scale=scale, seed=0)
+    gcfg = _gcfg(ds)
+
+    def t(refresh: bool) -> HybridGNNTrainer:
+        hcfg = HybridConfig(total_batch=256, n_accel=2, hybrid=False,
+                            use_drm=False, tfp_depth=2, seed=0,
+                            use_accel_sampler=False, cache_fraction=0.2,
+                            cache_refresh=refresh,
+                            cache_drift_threshold=0.0)
+        tr = HybridGNNTrainer(ds, gcfg, hcfg)
+        tr.train(iters)
+        return tr
+
+    off, on = t(False), t(True)
+    return {
+        "losses_bit_identical": bool(np.array_equal(
+            [m.loss for m in off.history], [m.loss for m in on.history])),
+        "refresh_version": int(on.cache.version),
+        "refreshes": int(on.cache.refreshes),
+        "shipped_bytes_off": float(off.feature_traffic()["shipped_bytes"]),
+        "shipped_bytes_on": float(on.feature_traffic()["shipped_bytes"]),
+    }
+
+
+def run_refresh_sweep(num_nodes: int = 4000, capacity: int = 400,
+                      phases: int = 5, batches_per_phase: int = 12,
+                      batch: int = 512, hub_frac: float = 0.15,
+                      trainer_scale: float = 0.001, trainer_iters: int = 6,
+                      out_path: str = "BENCH_cache_refresh.json") -> dict:
+    """Static vs dynamic cache policy on the drifting-hub trace
+    -> BENCH_cache_refresh.json (plus the trainer bit-identity check)."""
+    trace = _drift_trace(num_nodes, phases, batches_per_phase, batch,
+                         hub_frac, seed=7)
+    static = _run_policy(trace, num_nodes, capacity, dynamic=False)
+    dynamic = _run_policy(trace, num_nodes, capacity, dynamic=True)
+    bit = _refresh_bit_identity(trainer_scale, trainer_iters)
+    results = {
+        "trace": {"num_nodes": num_nodes, "capacity": capacity,
+                  "phases": phases, "batches_per_phase": batches_per_phase,
+                  "batch": batch, "hub_frac": hub_frac},
+        "static": static, "dynamic": dynamic, "trainer": bit,
+    }
+    with open(out_path, "w") as fh:
+        json.dump(results, fh, indent=2)
+    emit("cache_refresh,static", 0.0,
+         f"steady_hit={static['phase_hit_rates'][-1]:.3f} "
+         f"pcie={static['total_pcie_bytes']/1e6:.2f}MB")
+    emit("cache_refresh,dynamic", 0.0,
+         f"steady_hit={dynamic['phase_hit_rates'][-1]:.3f} "
+         f"pcie={dynamic['total_pcie_bytes']/1e6:.2f}MB "
+         f"(admission {dynamic['admission_bytes']/1e6:.2f}MB) "
+         f"refreshes={dynamic['refreshes']}")
+    emit("cache_refresh,bit_identity", 0.0,
+         f"losses_ok={bit['losses_bit_identical']} "
+         f"version={bit['refresh_version']}")
+    emit("cache_refresh,written", 0.0, os.path.abspath(out_path))
+    return results
+
+
+def _refresh_asserts(res: dict) -> None:
+    static, dynamic, bit = res["static"], res["dynamic"], res["trainer"]
+    # under drift the adaptive policy must at least match the static
+    # steady-state hit rate (in practice it is far ahead: the static cache
+    # decays to the uniform background once the phase-0 hubs rotate out)
+    assert dynamic["phase_hit_rates"][-1] >= static["phase_hit_rates"][-1], \
+        (f"dynamic steady-state hit {dynamic['phase_hit_rates'][-1]:.3f} < "
+         f"static {static['phase_hit_rates'][-1]:.3f}")
+    # gate on TOTAL PCIe traffic (miss rows + refresh admission DMAs):
+    # the dynamic policy must win even after paying for its own swaps
+    assert dynamic["total_pcie_bytes"] < static["total_pcie_bytes"], \
+        "dynamic policy did not cut total PCIe bytes under drift"
+    assert dynamic["refreshes"] > 0, "dynamic policy never refreshed"
+    # the refresh must be semantically invisible (versioned lookups)
+    assert bit["losses_bit_identical"], \
+        "refresh on/off losses diverged — in-flight consistency broken"
+    assert bit["refresh_version"] > 0, \
+        "trainer bit-identity ran without any refresh firing"
+
+
+def run_refresh_smoke() -> dict:
+    """~30 s static-vs-dynamic gate for the tier1 runner."""
+    res = run_refresh_sweep(num_nodes=2000, capacity=200, phases=4,
+                            batches_per_phase=8, batch=256,
+                            trainer_scale=0.001, trainer_iters=5)
+    _refresh_asserts(res)
+    return res
+
+
 def run_smoke() -> dict:
     """~60 s two-sweep check for the tier1 runner: papers100M at the
     paper-relevant 20% fraction must cut shipped bytes >= 2x, dedup alone
@@ -201,12 +371,19 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="two-sweep ~60s check (used by scripts/tier1.sh)")
+    ap.add_argument("--smoke-refresh", action="store_true",
+                    help="~30s static-vs-dynamic cache-refresh gate "
+                         "(used by scripts/tier1.sh)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     if args.smoke:
         run_smoke()
-    else:
+    if args.smoke_refresh:
+        run_refresh_smoke()
+    if not (args.smoke or args.smoke_refresh):
         run()
         res = run_dedup_sweep()
         for name in DATASETS:
             _dedup_asserts(res, name)
+        rres = run_refresh_sweep()
+        _refresh_asserts(rres)

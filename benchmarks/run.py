@@ -8,6 +8,7 @@
 #   table7 TFLOPS-normalized epoch-time comparison
 #   fig11  optimization ablation (baseline/+hybrid/+DRM/+TFP), measured
 #   cache  device feature-cache ablation (fraction x dataset), measured
+#   cache_refresh  static vs dynamic cache policy on a drifting-hub trace
 #   outofcore  dense/partitioned/mmap gather throughput + resident set
 #   roofline  per-(arch x shape x mesh) terms from the dry-run JSON
 def main() -> None:
@@ -23,6 +24,7 @@ def main() -> None:
     fig11_ablation.run()
     fig11_ablation.run_projected()
     fig_cache_ablation.run()
+    fig_cache_ablation.run_refresh_sweep()
     bench_outofcore.run()
     roofline.run()
 

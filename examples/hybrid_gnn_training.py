@@ -31,6 +31,24 @@ def main():
     ap.add_argument("--cache-fraction", type=float, default=0.0,
                     help="pin this fraction of the hottest node features "
                          "on each accelerator (0 = off)")
+    ap.add_argument("--cache-refresh", action="store_true",
+                    help="dynamic cache refresh: track observed per-slot / "
+                         "uncached hotness and swap the coldest slots for "
+                         "strictly-hotter uncached nodes whenever the "
+                         "measured hit rate drifts from the rate the task "
+                         "mapping was priced with (DistDGL-style "
+                         "admission; versioned lookups keep in-flight TFP "
+                         "batches bit-identical)")
+    ap.add_argument("--cache-refresh-frac", type=float, default=0.25,
+                    help="max fraction of cache slots swapped per refresh")
+    ap.add_argument("--cache-refresh-decay", type=float, default=0.5,
+                    help="hotness-counter decay applied at each refresh "
+                         "window boundary (1.0 = never forget, smaller = "
+                         "adapt faster to drift)")
+    ap.add_argument("--cache-drift-threshold", type=float, default=0.05,
+                    help="measured-vs-priced hit-rate drift (in rate "
+                         "points) that triggers a cache refresh and a "
+                         "task-mapping re-price")
     ap.add_argument("--feature-backend", default="auto",
                     choices=["auto", "dense", "hashed", "partitioned",
                              "mmap"],
@@ -63,6 +81,10 @@ def main():
     hcfg = HybridConfig(total_batch=args.batch, n_accel=args.n_accel,
                         hybrid=True, use_drm=True, tfp_depth=2, lr=3e-3,
                         cache_fraction=args.cache_fraction,
+                        cache_refresh=args.cache_refresh,
+                        cache_refresh_frac=args.cache_refresh_frac,
+                        cache_refresh_decay=args.cache_refresh_decay,
+                        cache_drift_threshold=args.cache_drift_threshold,
                         ckpt_every=50 if args.ckpt_dir else 0)
     tr = HybridGNNTrainer(ds, gnn, hcfg)
     if args.ckpt_dir:
@@ -91,6 +113,11 @@ def main():
               f"{tf['shipped_bytes']/1e6:.1f} MB, saved "
               f"{tf['saved_bytes']/1e6:.1f} MB "
               f"({tf['reduction']:.2f}x reduction)")
+        if args.cache_refresh:
+            print(f"cache refresh: {tr.cache.refreshes} refreshes moved "
+                  f"{tr.cache.refresh_swapped_rows} rows "
+                  f"(version {tr.cache.version}, windowed hit "
+                  f"{tr.cache.measured_hit_rate():.3f})")
     if tr._failed:
         print(f"survived failures: {sorted(tr._failed)}")
 

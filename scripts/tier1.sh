@@ -1,7 +1,11 @@
 #!/usr/bin/env bash
-# Tier-1 verification: the full test suite plus two smoke benches —
+# Tier-1 verification: the full test suite plus three smoke benches —
 #  * cache-ablation (~30 s): >= 2x feature-byte reduction at a 20% cache
 #    fraction and cached/uncached loss equivalence,
+#  * cache-refresh (~30 s): on a drifting-hub trace the dynamic refresh
+#    policy's steady-state hit rate >= the static policy's with strictly
+#    fewer shipped bytes, and trainer losses bit-identical with refresh
+#    on/off (versioned in-flight consistency),
 #  * out-of-core (~60 s): mmap gather parity with the dense backend in a
 #    tempdir (cleaned up on exit), the spill writer's one-partition
 #    buffered-rows bound, a bounded gather working set, and mmap/dense
@@ -21,5 +25,6 @@ fi
 # ${MARK[@]+...} guards the empty-array expansion under `set -u` on bash < 4.4
 python -m pytest -x -q ${MARK[@]+"${MARK[@]}"}
 python -m benchmarks.fig_cache_ablation --smoke
+python -m benchmarks.fig_cache_ablation --smoke-refresh
 python -m benchmarks.bench_outofcore --smoke
 echo "tier1: OK"

@@ -35,11 +35,22 @@ Ablation knobs reproduce Fig. 11 exactly:
     without the cache; ``dedup=False`` reproduces the legacy positional
     path bit-for-bit.
 
+  * ``cache_refresh=True``                 -> dynamic cache: lookups feed
+    decayed hotness counters and, on the measured-vs-priced drift signal,
+    the coldest cache slots are swapped for strictly-hotter observed
+    uncached nodes (DistDGL-style admission).  The device block is
+    scatter-updated in place (cache_update kernel: one aligned row-block
+    DMA per admitted node) and every in-flight TFP payload combines
+    against the cache *version* its lookup was classified at, so a
+    refresh can never corrupt batches already past the load stage —
+    losses are bit-identical with refresh on or off.
+
 Measured-hit-rate feedback: when the loader's measured cache hit rate
-drifts > 5 points from the estimate the task mapping was priced with, the
-initial task mapping is re-run with the measured rate (and measured alpha)
-and the refreshed shares handed to the runtime — the DRM keeps fine-tuning
-from there.
+(over the post-refresh window) drifts more than ``cache_drift_threshold``
+from the estimate the task mapping was priced with, the initial task
+mapping is re-run with the measured rate (and measured alpha) and the
+refreshed shares handed to the runtime — the DRM keeps fine-tuning from
+there.
 
 On this container all logical devices are CPU cores; the protocol, queues and
 measurements are identical to a real multi-accelerator host — device kind
@@ -88,6 +99,15 @@ class HybridConfig:
     feature_dtype: str = "float32"    # transfer-path compression ("bfloat16")
     cache_fraction: float = 0.0       # device hot-feature cache (0 = off)
     cache_assemble: str = "auto"      # "auto" | "jnp" | "pallas" combine path
+    cache_refresh: bool = False       # dynamic cache refresh (DistDGL-style
+                                      #   admission on the drift signal)
+    cache_refresh_frac: float = 0.25  # max fraction of slots swapped per
+                                      #   refresh
+    cache_refresh_decay: float = 0.5  # hotness-counter decay per refresh
+                                      #   window
+    cache_drift_threshold: float = 0.05  # measured-vs-priced hit-rate drift
+                                      #   (points) that triggers a cache
+                                      #   refresh and a mapping re-price
     dedup: bool = True                # ship unique rows only (False = legacy
                                       #   one-row-per-frontier-position)
     lr: float = 1e-3
@@ -109,7 +129,9 @@ class IterationMetrics:
     t_sync: float
     edges: int
     assignment: Tuple[int, int]       # (cpu_batch, accel_batch_each)
-    cache_hit_rate: float = 0.0       # measured (cumulative) feature-cache hits
+    cache_hit_rate: float = 0.0       # measured (epoch-window) cache hit rate
+    cache_version: int = 0            # cache version after this iteration
+                                      #   (> 0 once a dynamic refresh fired)
 
     @property
     def iter_time(self) -> float:
@@ -162,12 +184,26 @@ class HybridGNNTrainer:
 
         # --- feature store: device hot cache + dedup/miss-only loader --------
         self.cache = build_cache(dataset, cfg.cache_fraction,
-                                 transfer_dtype=cfg.feature_dtype)
+                                 transfer_dtype=cfg.feature_dtype,
+                                 refresh_decay=cfg.cache_refresh_decay,
+                                 max_refresh_frac=cfg.cache_refresh_frac)
         self.loader = FeatureLoader(dataset, transfer_dtype=cfg.feature_dtype,
                                     cache=self.cache, dedup=cfg.dedup)
         self._assemble_pallas = (cfg.cache_assemble == "pallas"
                                  or (cfg.cache_assemble == "auto"
                                      and jax.default_backend() == "tpu"))
+        if self.cache is not None:
+            self.cache.use_pallas_update = self._assemble_pallas
+            # hotness tracking costs two scattered adds per lookup and a
+            # 4 B/node estimate array: only pay it when the refresh policy
+            # will consume it
+            self.cache.track_hotness = cfg.cache_refresh
+            # a refresh must retain every device snapshot an in-flight
+            # payload can still reference: with TFP depth d at most d
+            # batches sit between load (classification) and transfer
+            # (combine), and at most one refresh fires per consumed
+            # iteration, so d+2 versions always cover the window
+            self.cache.keep_versions = max(2, cfg.tfp_depth + 2)
         # out-of-core features (MmapFeatures) gather through host storage,
         # not RAM: Eq. 7 must be priced at storage bandwidth
         self.feature_tier = ("disk" if getattr(self.loader.source,
@@ -187,7 +223,12 @@ class HybridGNNTrainer:
         accel = PLATFORMS[cfg.accel_platform]
         hit_rate = self.cache.expected_hit_rate if self.cache else 0.0
         self._model_hit_rate = hit_rate   # rate the current mapping is priced on
-        if cfg.hybrid:
+        if cfg.hybrid and cfg.n_accel == 0:
+            # CPU-only degenerate case: the model would otherwise assign
+            # work to phantom accelerators (their stages cost nothing in
+            # Eq. 7/8) and leave the CPU trainer with an empty share
+            mapping = {"cpu": cfg.total_batch, "accel_each": 0}
+        elif cfg.hybrid:
             mapping = initial_task_mapping(
                 host, accel, cfg.n_accel, cfg.total_batch,
                 gnn_cfg.fanouts, gnn_cfg.layer_dims, model=gnn_cfg.model,
@@ -351,7 +392,11 @@ class HybridGNNTrainer:
             self.loader.note_transfer_padding(
                 pad, pad * rows.shape[1] * rows.dtype.itemsize)
         miss = jax.device_put(rows, dev)
-        cache_data = self.cache.data_on(dev) if self.cache else None
+        # pin the combine to the cache version the lookup was classified
+        # against: a dynamic refresh between _stage_load and here must not
+        # re-bind the slot indices to a newer (reshuffled) device block
+        cache_data = (self.cache.data_on(dev, version=look.version)
+                      if self.cache else None)
         # slots / miss_index stay host numpy: the Pallas path derives its
         # DMA schedule from them before they ever reach the device
         return assemble_features(cache_data, miss, look.slots,
@@ -446,34 +491,22 @@ class HybridGNNTrainer:
         acc = float(sum(float(m["acc"]) * w[n] for n, m in ok.items()) / wsum)
         return avg, {"t_tc": t_tc, "t_ta": t_ta}, {"loss": loss, "acc": acc}
 
-    def _maybe_refresh_mapping(self) -> bool:
-        """Measured-hit-rate feedback into the perf model (ROADMAP item).
-
-        Eq. 7/8 were priced with the design-time ``expected_hit_rate``;
-        when the loader's *measured* transfer-path hit rate drifts more
-        than 5 points from the rate the current mapping used, re-run
-        ``initial_task_mapping`` with the measured rate (and measured
-        duplication factor) and hand the refreshed shares to the runtime.
-        The DRM keeps fine-tuning from the refreshed point.  Returns True
-        when a refresh happened.
-        """
-        if not (self.cfg.hybrid and self.cache is not None) or self._failed:
-            return False
-        stats = self.loader.stats
-        if stats.total_rows == 0:
-            return False
-        measured = stats.hit_rate
-        if abs(measured - self._model_hit_rate) <= 0.05:
-            return False
-        # alpha for Eq. 7/8 is unique-miss / positional-miss rows (hub ids
-        # are both the most-cached and the most-duplicated, so unique/total
-        # would double-count that overlap); with this alpha the model's
-        # (1 - h) * alpha equals the measured shipped-row fraction exactly
+    def _window_alpha(self, stats) -> float:
+        """Eq. 7/8 alpha from measured window stats: unique-miss /
+        positional-miss rows (hub ids are both the most-cached and the
+        most-duplicated, so the naive unique/total ratio would
+        double-count the overlap the model's (1 - h) cache term already
+        removed)."""
         miss_positions = stats.total_rows - stats.hit_rows
-        alpha = 1.0
-        if self.cfg.dedup and miss_positions > 0:
-            dedup_saved_rows = stats.dedup_saved_bytes // self.cache.row_bytes
-            alpha = 1.0 - dedup_saved_rows / miss_positions
+        if not (self.cfg.dedup and miss_positions > 0):
+            return 1.0
+        dedup_saved_rows = stats.dedup_saved_bytes // self.cache.row_bytes
+        return 1.0 - dedup_saved_rows / miss_positions
+
+    def _reprice_mapping(self, measured: float, alpha: float) -> None:
+        """Re-run the initial task mapping with a measured hit rate +
+        alpha and hand the refreshed shares to the runtime (the DRM keeps
+        fine-tuning from there)."""
         mapping = initial_task_mapping(
             PLATFORMS[self.cfg.host_platform],
             PLATFORMS[self.cfg.accel_platform],
@@ -487,6 +520,77 @@ class HybridGNNTrainer:
         a.cpu_batch = self.cfg.total_batch - a.accel_batch * n
         self._model_hit_rate = measured
         self.measured_dedup_alpha = alpha
+
+    def _maybe_refresh_cache(self) -> bool:
+        """Dynamic cache refresh on the drift signal (tentpole of the
+        refresh subsystem): when the *windowed* measured hit rate drifts
+        past ``cache_drift_threshold`` from the rate the mapping was
+        priced with — the same signal ``_maybe_refresh_mapping`` acts on —
+        the static snapshot no longer matches the observed access
+        distribution, so swap the coldest slots for the hottest observed
+        uncached nodes.  When rows actually move the mapping is re-priced
+        *immediately* on the drifted (pre-refresh) measurement — under
+        sustained drift the window resets every refresh, so deferring the
+        re-price to ``_maybe_refresh_mapping`` would starve it forever —
+        and then the measurement window resets so subsequent feedback
+        sees only post-refresh traffic.  Returns True when the refresh
+        moved rows.
+        """
+        if self.cache is None or not self.cfg.cache_refresh:
+            return False
+        win = self.loader.window
+        if win.total_rows == 0:
+            return False
+        measured = win.hit_rate
+        if abs(measured - self._model_hit_rate) <= \
+                self.cfg.cache_drift_threshold:
+            return False
+        swapped = self.cache.refresh()
+        reprice = (self.cfg.hybrid and self.cfg.n_accel > 0
+                   and not self._failed)
+        if swapped:
+            if reprice:
+                self._reprice_mapping(measured, self._window_alpha(win))
+            else:
+                # accel-only (or degenerate) runs have no mapping to
+                # re-price; still anchor the drift signal on the measured
+                # rate so a converged cache stops re-triggering
+                self._model_hit_rate = measured
+            self.loader.reset_window()
+        elif not reprice:
+            # nothing was hotter uncached: the cache already matches the
+            # observed distribution, so anchor the drift signal here too —
+            # otherwise the armed signal re-runs the O(num_nodes) candidate
+            # scan every iteration forever.  Hybrid runs skip this: the
+            # mapping feedback (called right after) must still see the
+            # drift, and its re-price anchors the same signal.
+            self._model_hit_rate = measured
+        return swapped > 0
+
+    def _maybe_refresh_mapping(self) -> bool:
+        """Measured-hit-rate feedback into the perf model (ROADMAP item).
+
+        Eq. 7/8 were priced with the design-time ``expected_hit_rate``;
+        when the loader's *measured* transfer-path hit rate drifts more
+        than ``cache_drift_threshold`` from the rate the current mapping
+        used, re-run ``initial_task_mapping`` with the measured rate (and
+        measured duplication factor) and hand the refreshed shares to the
+        runtime.  The DRM keeps fine-tuning from the refreshed point.
+        The measurement is the post-refresh *window*, not the lifetime
+        average: a dynamic cache refresh resets the window, so the mapping
+        is re-priced on the rate the refreshed cache actually serves.
+        Returns True when a refresh happened.
+        """
+        if not (self.cfg.hybrid and self.cache is not None) or self._failed:
+            return False
+        stats = self.loader.window
+        if stats.total_rows == 0:
+            return False
+        measured = stats.hit_rate
+        if abs(measured - self._model_hit_rate) <= \
+                self.cfg.cache_drift_threshold:
+            return False
+        self._reprice_mapping(measured, self._window_alpha(stats))
         return True
 
     def _apply_update(self, grads: PyTree) -> float:
@@ -526,6 +630,10 @@ class HybridGNNTrainer:
                     a.cpu_batch += a.accel_batch * dead_accel
                     a.n_accel = self.cfg.n_accel - dead_accel
             self.runtime.end_iteration(times)
+            # refresh the cache first: when it moves rows it resets the
+            # measurement window, so the mapping re-price (next iterations)
+            # sees the post-refresh rate instead of a stale average
+            self._maybe_refresh_cache()
             self._maybe_refresh_mapping()
             edges = sum(mb.edges_traversed()
                         for mb in p["minibatch"].values())
@@ -534,7 +642,8 @@ class HybridGNNTrainer:
                 acc=metrics["acc"], times=times, t_sync=t_sync, edges=edges,
                 assignment=self.runtime.quantized_shares(),
                 cache_hit_rate=(self.cache.measured_hit_rate()
-                                if self.cache else 0.0))
+                                if self.cache else 0.0),
+                cache_version=self.cache.version if self.cache else 0)
             self.history.append(m)
             if (self.cfg.ckpt_every and self._ckpt_cb
                     and (p["iteration"] + 1) % self.cfg.ckpt_every == 0):

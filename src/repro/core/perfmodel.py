@@ -64,6 +64,11 @@ class WorkloadSpec:
     # fraction of loaded rows served by the device-resident feature cache
     # (featcache.FeatureCache): scales the Eq. 7/8 gather/transfer traffic
     # by (1 - h).  0 reproduces the paper's uncached equations exactly.
+    # At design time this is the cache's expected_hit_rate; at runtime the
+    # feedback loop re-prices with the measured rate over the
+    # *post-refresh window* (the loader's window stats reset when a
+    # dynamic cache refresh moves rows), so a refreshed cache is priced at
+    # the rate it actually serves rather than a lifetime average.
     cache_hit_rate: float = 0.0
     # frontier duplication factor alpha = unique-miss rows / positional
     # miss rows: the deduped transfer path gathers/ships one row per

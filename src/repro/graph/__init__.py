@@ -5,7 +5,9 @@
 #              MmapFeatures spills any source to per-partition disk blobs
 #              (one partition of RAM, ever) and maps windows lazily.
 # featcache.py device-resident top-K hot-row cache over any FeatureSource
-#              (static, hotness-ordered; vectorized id->slot lookup).
+#              (boots hotness-ordered; vectorized id->slot lookup; dynamic
+#              refresh swaps cold slots for observed-hot uncached nodes
+#              with versioned device snapshots for in-flight consistency).
 # featload.py  host gather stage: full-frontier loads for CPU trainers,
 #              miss-only loads for cache-backed accelerator trainers.
 # sampler.py   fixed-shape neighbor sampling (numpy host / jit device).

@@ -13,19 +13,43 @@ on feature-traffic-bound workloads) are to *not send* rows at all:
     node id (the paper's Feature-Duplicator rationale, Section IV-C:
     fetch once, duplicate locally) removes the remaining redundancy.
 
-The cache is static: hotness is the expected gather frequency under
+The cache *boots* static: hotness is the expected gather frequency under
 neighbor sampling (``GraphDataset.feature_hotness`` — in-edge mass + 1),
-known at dataset-build time, so there is no invalidation protocol and the
-id->slot table never changes during training.  A dynamic refresh policy is
-future work (see ROADMAP).
+known at dataset-build time.  On workloads where the sampled hub set
+drifts (or on graphs whose degree distribution is a poor hotness proxy)
+the boot-time snapshot decays, so the cache also supports DistDGL-style
+*dynamic admission*: with hotness tracking enabled (opt-in), every lookup
+accumulates per-slot hit counters and a decayed hotness estimate for the
+uncached ids it missed on, and
+``refresh()`` evicts the coldest slots in favor of strictly-hotter
+uncached nodes — updating the device-resident block in place with the
+``cache_update`` scatter kernel (one aligned row-block DMA per admitted
+node) instead of re-uploading all K rows.
+
+Refreshing while the TFP pipeline has batches in flight needs a
+consistency protocol: a lookup classified against the slot table at
+version v must be combined against the *version-v* device block, or the
+positional slot indices would read rows that were since evicted.  The
+cache therefore keeps a monotonically increasing ``version``; every
+``CacheLookup`` records the version it was classified against, device
+snapshots are retained per version (the last ``keep_versions``, sized to
+the pipeline depth by the trainer — note this pins up to that many [K, F]
+blocks per device; see the ROADMAP undo-log follow-on), and
+``data_on(device, version=...)`` serves the matching block.  A refresh
+can thus never corrupt batches already past the load stage.
 
 Components:
 
   * ``slot_of``  — vectorized id->slot lookup, one int32 per node, -1 for
     uncached.  4 B/node of host memory buys O(1) batch partitioning
     (papers100M scale: ~440 MB, far below the feature matrix it indexes).
-  * ``data_on(device)`` — the [K, F] hot-row block, placed once per
-    trainer device and reused every iteration.
+    Refresh swaps in a rebuilt table atomically; lookups snapshot the
+    reference, so a concurrent refresh can never tear a classification.
+  * ``data_on(device, version=None)`` — the [K, F] hot-row block resident
+    on ``device`` at the requested (default: current) version.
+  * ``refresh()`` — evict-coldest / admit-hottest swap under the decayed
+    counters; bumps ``version`` and resets the epoch stats window when it
+    moves rows.
   * ``compact_lookup(ids)`` — cache-free frontier deduplication: unique
     ids + int32 inverse map, shared by cached and uncached transfer paths.
   * ``lookup(ids, dedup=True)`` — deduplicates the frontier, classifies
@@ -42,7 +66,8 @@ happens after the interconnect, for free.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+import threading
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import numpy as np
@@ -77,6 +102,10 @@ class CacheLookup:
     unique_ids: np.ndarray  # int64 [U] deduped frontier (sorted; == ids
                             #   when dedup is off)
     inverse: np.ndarray     # int32 [N] position -> row in unique_ids
+    version: int = 0        # cache version this lookup was classified
+                            #   against — the combine stage must pair the
+                            #   slot table with the same-version device
+                            #   block (0 for cache-less lookups)
 
     @property
     def num_rows(self) -> int:
@@ -172,16 +201,21 @@ def compact_lookup(ids: np.ndarray,
 
 
 class FeatureCache:
-    """Static top-K hot-row cache over any ``FeatureSource``.
+    """Top-K hot-row cache over any ``FeatureSource``.
 
-    ``capacity`` rows are chosen by descending ``hotness``; the hot block
-    is materialized once on the host (in ``transfer_dtype``) and placed
-    per device on first use.
+    Boots static: ``capacity`` rows are chosen by descending ``hotness``
+    and the hot block is materialized once on the host (in
+    ``transfer_dtype``) and placed per device on first use.  From there
+    every lookup feeds decayed hotness counters, and ``refresh()`` adapts
+    the resident set to the *observed* access distribution (DistDGL-style
+    admission) with versioned device snapshots for in-flight consistency.
     """
 
     def __init__(self, source: "FeatureSource | np.ndarray",
                  hotness: np.ndarray, capacity: int,
-                 transfer_dtype: str = "float32"):
+                 transfer_dtype: str = "float32",
+                 refresh_decay: float = 0.5,
+                 max_refresh_frac: float = 0.25):
         source = as_feature_source(source)
         num_nodes, feat_dim = source.shape
         capacity = int(max(0, min(capacity, num_nodes)))
@@ -190,21 +224,58 @@ class FeatureCache:
             raise ValueError("hotness must have one entry per node")
         # stable order so equal-hotness ties are deterministic across runs
         order = np.argsort(-hotness, kind="stable")[:capacity]
+        self.source = source
+        self.transfer_dtype = transfer_dtype
         self.cached_ids = np.ascontiguousarray(order.astype(np.int64))
         self.capacity = capacity
+        self.num_nodes = int(num_nodes)
         self.feat_dim = int(feat_dim)
         self.row_bytes = wire_row_bytes(feat_dim, transfer_dtype)
         self.slot_of = np.full(num_nodes, -1, dtype=np.int32)
         self.slot_of[self.cached_ids] = np.arange(capacity, dtype=np.int32)
-        host_rows = source.take(self.cached_ids)
-        if transfer_dtype != "float32":
-            import jax.numpy as jnp
-            host_rows = host_rows.astype(jnp.dtype(transfer_dtype))
-        self._host_rows = np.ascontiguousarray(host_rows)
-        self._device_data: Dict[int, jax.Array] = {}
+        self._host_rows = np.ascontiguousarray(
+            self._cast_rows(source.take(self.cached_ids)))
         self._expected_hit_rate = (float(hotness[self.cached_ids].sum())
                                    / max(float(hotness.sum()), 1e-12))
-        self.stats = CacheStats()
+        self.stats = CacheStats()        # lifetime totals (traffic accounting)
+        self.epoch_stats = CacheStats()  # since the last refresh (feedback)
+        # ---- dynamic-refresh state -------------------------------------
+        # one lock covers the (slot_of, version) pair, the hotness
+        # counters, and the stats windows: lookups snapshot the table +
+        # version together, refresh swaps them together
+        self._lock = threading.RLock()
+        self.version = 0
+        self.keep_versions = 2           # trainer sizes this to tfp_depth+2
+        self.use_pallas_update = False   # scatter-update kernel dispatch
+        self.refresh_decay = float(refresh_decay)
+        self.max_refresh_frac = float(max_refresh_frac)
+        self.refreshes = 0               # refresh() calls that moved rows
+        self.refresh_swapped_rows = 0
+        # decayed hotness estimates: frontier *positions* observed per
+        # cached slot / per uncached node since (decay-weighted) forever.
+        # float32 keeps the uncached estimate at 4 B/node — same budget as
+        # slot_of.  Tracking is opt-in (refresh-aware paths — the trainer
+        # under its cache_refresh knob, the policy benchmark — switch it
+        # on): a static cache pays neither the per-lookup scattered adds
+        # nor the full-length estimate, which allocates lazily on the
+        # first tracked lookup.
+        self.track_hotness = False
+        self._slot_hot = np.zeros(capacity, dtype=np.float32)
+        self._node_hot: Optional[np.ndarray] = None
+        # per-version state: refresh is copy-on-write, so retaining the
+        # last keep_versions host buffers is reference-keeping, not
+        # copying — it lets a device that never placed a block before a
+        # refresh still materialize the (retained) version an in-flight
+        # lookup was classified against
+        self._host_by_version: Dict[int, np.ndarray] = {0: self._host_rows}
+        self._device_data: Dict[Tuple[int, int], jax.Array] = {}
+        self._devices: Dict[int, Any] = {}   # id(device) -> device handle
+
+    def _cast_rows(self, rows: np.ndarray) -> np.ndarray:
+        if self.transfer_dtype != "float32":
+            import jax.numpy as jnp
+            rows = rows.astype(jnp.dtype(self.transfer_dtype))
+        return rows
 
     # ------------------------------------------------------------- plumbing
 
@@ -220,14 +291,52 @@ class FeatureCache:
         return self._expected_hit_rate
 
     def measured_hit_rate(self) -> float:
+        """Measured positional hit rate over the *current epoch window*
+        (reset by ``refresh()``), so feedback consumers see the
+        post-refresh rate instead of a lifetime average that still carries
+        pre-refresh epochs; lifetime totals stay in ``stats``."""
+        if self.epoch_stats.total_rows:
+            return self.epoch_stats.hit_rate
         return self.stats.hit_rate
 
-    def data_on(self, device) -> jax.Array:
-        """The [K, F] hot block resident on ``device`` (placed once)."""
-        key = id(device)
-        if key not in self._device_data:
-            self._device_data[key] = jax.device_put(self._host_rows, device)
-        return self._device_data[key]
+    def slot_hotness(self) -> np.ndarray:
+        """Decayed per-slot hotness estimate (copy, for tests/policy)."""
+        with self._lock:
+            return self._slot_hot.copy()
+
+    def uncached_hotness(self, ids: np.ndarray) -> np.ndarray:
+        """Decayed hotness estimate of (uncached) node ids (copy)."""
+        ids = np.asarray(ids, dtype=np.int64)
+        with self._lock:
+            if self._node_hot is None:
+                return np.zeros(ids.shape[0], dtype=np.float32)
+            return self._node_hot[ids].copy()
+
+    def data_on(self, device, version: Optional[int] = None) -> jax.Array:
+        """The [K, F] hot block resident on ``device`` at ``version``
+        (default: current).  Blocks are placed lazily from the retained
+        per-version host buffers — a device that never placed a block
+        before a refresh can still materialize the (retained) version an
+        in-flight lookup was classified against.  Versions older than the
+        ``keep_versions`` retention window are gone for good: asking for
+        one is a consistency bug and raises instead of silently serving
+        mismatched rows."""
+        with self._lock:
+            ver = self.version if version is None else int(version)
+            key = (id(device), ver)
+            arr = self._device_data.get(key)
+            if arr is None:
+                host = self._host_by_version.get(ver)
+                if host is None:
+                    raise RuntimeError(
+                        f"cache version {ver} retired (current "
+                        f"{self.version}, keep_versions="
+                        f"{self.keep_versions}): a lookup outlived the "
+                        f"refresh retention window — raise keep_versions")
+                arr = jax.device_put(host, device)
+                self._device_data[key] = arr
+                self._devices[id(device)] = device
+        return arr
 
     # --------------------------------------------------------------- lookup
 
@@ -242,12 +351,22 @@ class FeatureCache:
         Hit/miss stats always count frontier *positions* so the measured
         ``hit_rate`` stays comparable to ``expected_hit_rate`` regardless
         of dedup; the bytes dedup avoids are in ``dedup_saved_bytes``.
+
+        The (slot table, version) pair is snapshotted atomically, so a
+        concurrent ``refresh()`` can never tear a classification; the
+        returned lookup's ``version`` tells the combine stage which device
+        snapshot to pair it with.  Each lookup also feeds the refresh
+        policy's decayed hotness counters (positions per slot / per
+        uncached id).
         """
         ids = np.asarray(ids, dtype=np.int64)
+        with self._lock:
+            slot_of = self.slot_of   # refresh swaps the reference, never
+            ver = self.version       # mutates the array in place
         if dedup:
-            look = compact_lookup(ids, self.slot_of)
+            look = compact_lookup(ids, slot_of)
         else:
-            slots = self.slot_of[ids]
+            slots = slot_of[ids]
             is_miss = slots < 0
             miss_index = np.cumsum(is_miss, dtype=np.int32)
             miss_index = np.where(is_miss, miss_index - 1, 0
@@ -256,16 +375,145 @@ class FeatureCache:
                 ids=ids, slots=slots, miss_index=miss_index,
                 miss_ids=ids[is_miss], unique_ids=ids,
                 inverse=np.arange(ids.shape[0], dtype=np.int32))
-        self.stats.merge(CacheStats(
+        look.version = ver
+        delta = CacheStats(
             lookups=1, hit_rows=look.num_hit,
             miss_rows=look.miss_positions, unique_rows=look.num_unique,
             saved_bytes=look.num_hit * self.row_bytes,
-            dedup_saved_bytes=look.dup_miss_rows * self.row_bytes))
+            dedup_saved_bytes=look.dup_miss_rows * self.row_bytes)
+        hit = look.slots >= 0
+        with self._lock:
+            self.stats.merge(delta)
+            self.epoch_stats.merge(delta)
+            # hotness accounting: one count per frontier *position* (the
+            # quantity the measured hit rate is defined over).  A lookup
+            # classified at an older version lands its counts on the
+            # current tables — bounded noise, the admission policy only
+            # compares decayed estimates.  Gated so static-cache runs
+            # (refresh off) keep the old lookup cost and never allocate
+            # the full-length estimate.
+            if self.track_hotness:
+                if self._node_hot is None:
+                    self._node_hot = np.zeros(self.num_nodes,
+                                              dtype=np.float32)
+                if self.capacity:
+                    np.add.at(self._slot_hot, look.slots[hit],
+                              np.float32(1.0))
+                np.add.at(self._node_hot, look.ids[~hit], np.float32(1.0))
         return look
+
+    # -------------------------------------------------------------- refresh
+
+    def refresh(self, max_swap: Optional[int] = None) -> int:
+        """Evict the coldest slots, admit strictly-hotter uncached nodes.
+
+        Requires ``track_hotness`` to have been enabled while lookups ran
+        (it is opt-in — see __init__): with no tracked traffic there are
+        no admission candidates and the refresh is a no-op.
+
+        Under the decayed counters the hottest uncached candidates are
+        paired hottest-first against the coldest-first slots; a pair swaps
+        only while the candidate is *strictly* hotter than its victim, so
+        a refresh never replaces a row with a colder one and a cache whose
+        resident set already matches the observed distribution is a no-op.
+        At most ``max_swap`` rows move (default ``max_refresh_frac`` of
+        capacity).  Hotness estimates travel with their nodes (the evicted
+        slot's estimate seeds the node's uncached estimate and vice
+        versa), then all counters decay by ``refresh_decay`` — every
+        ``refresh()`` call is a window boundary.
+
+        When rows move: ``version`` is bumped, each device-resident
+        current-version block is scatter-updated in place (one aligned
+        row-block DMA per admitted node via ``kernels.ops
+        .update_cache_rows``; snapshots older than ``keep_versions`` are
+        retired), and the epoch stats window resets so measured-rate
+        consumers see the post-refresh rate.  Returns the number of rows
+        swapped.
+        """
+        from repro.kernels.ops import update_cache_rows
+        with self._lock:
+            if self.capacity == 0:
+                return 0
+            cap = self.capacity
+            k_max = max(1, int(round(cap * self.max_refresh_frac)))
+            if max_swap is not None:
+                k_max = int(max_swap)
+            k_max = max(0, min(k_max, cap))
+            # candidates: observed-miss ids that are (still) uncached
+            if self._node_hot is None:       # no tracked traffic yet
+                cand = np.zeros(0, dtype=np.int64)
+            else:
+                cand = np.flatnonzero(self._node_hot > 0.0).astype(np.int64)
+                cand = cand[self.slot_of[cand] < 0]
+            n_swap = 0
+            if k_max and cand.shape[0]:
+                k = min(k_max, cand.shape[0])
+                top = cand[np.argpartition(-self._node_hot[cand], k - 1)[:k]]
+                # hottest first, ties broken by id for determinism
+                top = top[np.lexsort((top, -self._node_hot[top]))]
+                # coldest slots first, ties broken by cached id
+                cold = np.lexsort((self.cached_ids, self._slot_hot)
+                                  )[:k].astype(np.int64)
+                # admit_hot desc vs evict_hot asc: the strictly-hotter
+                # predicate is monotone, so the swap set is a prefix
+                n_swap = int(np.count_nonzero(
+                    self._node_hot[top] > self._slot_hot[cold]))
+            if n_swap:
+                top, cold = top[:n_swap], cold[:n_swap]
+                evicted = self.cached_ids[cold].copy()
+                new_slot_of = self.slot_of.copy()
+                new_slot_of[evicted] = -1
+                new_slot_of[top] = cold.astype(np.int32)
+                new_cached = self.cached_ids.copy()
+                new_cached[cold] = top
+                rows = np.ascontiguousarray(
+                    self._cast_rows(self.source.take(top)))
+                # copy-on-write, never in place: on the CPU backend
+                # jax.device_put can alias the host buffer, so mutating
+                # _host_rows would corrupt previously-placed (old-version)
+                # device blocks that in-flight payloads still combine with
+                new_host = self._host_rows.copy()
+                new_host[cold] = rows
+                # estimates travel with their nodes
+                admit_est = self._node_hot[top].copy()
+                self._node_hot[evicted] = self._slot_hot[cold]
+                self._slot_hot[cold] = admit_est
+                self._node_hot[top] = 0.0
+                new_ver = self.version + 1
+                slots32 = cold.astype(np.int32)
+                for dev_key, dev in self._devices.items():
+                    cur = self._device_data.get((dev_key, self.version))
+                    if cur is not None:
+                        self._device_data[(dev_key, new_ver)] = \
+                            update_cache_rows(
+                                cur, jax.device_put(rows, dev), slots32,
+                                use_pallas=self.use_pallas_update)
+                self.slot_of = new_slot_of
+                self.cached_ids = new_cached
+                self._host_rows = new_host
+                self._host_by_version[new_ver] = new_host
+                self.version = new_ver
+                # retire snapshots no in-flight lookup can still reference
+                low = new_ver - max(int(self.keep_versions), 1) + 1
+                for key in [key for key in self._device_data
+                            if key[1] < low]:
+                    del self._device_data[key]
+                for v in [v for v in self._host_by_version if v < low]:
+                    del self._host_by_version[v]
+                self.epoch_stats = CacheStats()
+                self.refreshes += 1
+                self.refresh_swapped_rows += n_swap
+            # window boundary: old hotness fades relative to the next epoch
+            self._slot_hot *= np.float32(self.refresh_decay)
+            if self._node_hot is not None:
+                self._node_hot *= np.float32(self.refresh_decay)
+            return n_swap
 
 
 def build_cache(dataset, fraction: float,
-                transfer_dtype: str = "float32") -> Optional[FeatureCache]:
+                transfer_dtype: str = "float32",
+                refresh_decay: float = 0.5,
+                max_refresh_frac: float = 0.25) -> Optional[FeatureCache]:
     """Cache of ``fraction`` of the dataset's nodes (None when <= 0)."""
     if fraction <= 0.0:
         return None
@@ -273,4 +521,6 @@ def build_cache(dataset, fraction: float,
     if capacity == 0:
         return None
     return FeatureCache(dataset.feature_source, dataset.feature_hotness(),
-                        capacity, transfer_dtype=transfer_dtype)
+                        capacity, transfer_dtype=transfer_dtype,
+                        refresh_decay=refresh_decay,
+                        max_refresh_frac=max_refresh_frac)

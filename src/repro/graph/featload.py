@@ -120,6 +120,11 @@ class FeatureLoader:
         self.cache = cache
         self.dedup = dedup
         self.stats = LoadStats()       # transfer path (rows that cross PCIe)
+        self.window = LoadStats()      # transfer path since the last cache
+                                       #   refresh (windowed feedback: the
+                                       #   perf-model re-pricing must see
+                                       #   the post-refresh rate, not a
+                                       #   lifetime average)
         self.host_stats = LoadStats()  # CPU-trainer direct host reads
         # the load and transfer pipeline stages run in different threads
         # and both account into `stats` (gathers vs bucket padding)
@@ -134,6 +139,14 @@ class FeatureLoader:
     def _account(self, dest: LoadStats, delta: LoadStats) -> None:
         with self._stats_lock:
             dest.merge(delta)
+            if dest is self.stats:     # transfer path also feeds the window
+                self.window.merge(delta)
+
+    def reset_window(self) -> None:
+        """Start a fresh measurement window (called after a cache refresh
+        so drift/feedback consumers see only post-refresh traffic)."""
+        with self._stats_lock:
+            self.window = LoadStats()
 
     def _get_pool(self):
         import concurrent.futures as cf

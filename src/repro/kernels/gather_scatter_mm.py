@@ -34,7 +34,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 __all__ = ["segment_sum_kernel_call", "fused_update_kernel_call",
-           "cache_combine_kernel_call", "cache_combine_tiled_kernel_call"]
+           "cache_combine_kernel_call", "cache_combine_tiled_kernel_call",
+           "cache_update_kernel_call"]
 
 
 # --------------------------------------------------------- segment sum only
@@ -188,6 +189,59 @@ def cache_combine_kernel_call(cache: jax.Array, miss: jax.Array,
         out_shape=jax.ShapeDtypeStruct((n, f), cache.dtype),
         interpret=interpret,
     )(sel, row, cache, miss)
+
+
+# ----------------------------------- cache scatter update (refresh path)
+
+
+def _cache_update_kernel(slots_ref, rows_ref, cache_ref, o_ref):
+    # grid = (M, F tiles): step (i, j) overwrites the F-tile j of cache row
+    # slots[i] with the matching tile of update row i.  The cache operand
+    # is aliased to the output, so rows no update points at keep their
+    # bytes without ever being re-DMA'd — the whole refresh moves exactly
+    # M * F elements.  Grid steps run sequentially, so an update set that
+    # aliases the same slot resolves to the last writer (the jnp reference
+    # in ref.cache_update applies updates in the same order).
+    o_ref[...] = rows_ref[...]
+
+
+def cache_update_kernel_call(cache: jax.Array, rows: jax.Array,
+                             slots: jax.Array, t_f: int = 128,
+                             interpret: bool = True) -> jax.Array:
+    """In-place scatter of admitted rows into the device-resident hot block:
+    ``out = cache; out[slots[i]] = rows[i]``.
+
+    The dynamic cache refresh admits a handful of rows per epoch; this
+    kernel updates the [K, F] device block with one aligned (1, T_F)
+    row-block DMA per admitted node instead of re-uploading all K rows
+    over PCIe.  ``slots`` arrives via scalar prefetch so each grid step's
+    output BlockSpec index map steers the write to a data-dependent row —
+    the scatter dual of the combine kernels' gather above.
+
+    cache: [K, F] (F % t_f == 0, callers pad); rows: [M, F] (M >= 1 —
+    callers shortcut empty updates); slots: int32 [M] -> out [K, F].
+    Duplicate slots resolve to the last writer (grid order).
+    """
+    m = slots.shape[0]
+    f = cache.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(m, f // t_f),
+        in_specs=[
+            pl.BlockSpec((1, t_f), lambda i, j, s: (i, j)),
+            pl.BlockSpec((1, t_f), lambda i, j, s: (s[i], j)),
+        ],
+        out_specs=pl.BlockSpec((1, t_f), lambda i, j, s: (s[i], j)),
+    )
+    return pl.pallas_call(
+        _cache_update_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(cache.shape, cache.dtype),
+        # operand order is (slots, rows, cache): alias the cache into the
+        # output so untouched rows are preserved, not recomputed
+        input_output_aliases={2: 0},
+        interpret=interpret,
+    )(slots, rows, cache)
 
 
 # ------------------------------------ tiled cache combine (multi-row DMA)

@@ -21,11 +21,12 @@ from . import ref
 from .flash_attention import flash_attention_call
 from .gather_scatter_mm import (cache_combine_kernel_call,
                                 cache_combine_tiled_kernel_call,
+                                cache_update_kernel_call,
                                 fused_update_kernel_call,
                                 segment_sum_kernel_call)
 
 __all__ = ["segment_weighted_sum_regular", "fused_gnn_update",
-           "flash_attention", "assemble_features"]
+           "flash_attention", "assemble_features", "update_cache_rows"]
 
 _INTERPRET = jax.default_backend() != "tpu"
 
@@ -159,6 +160,52 @@ def _assemble_tiled_device(cache, miss, hit_table, miss_table, base,
     out = cache_combine_tiled_kernel_call(src, base, local, t_n=w, t_f=t_f,
                                           interpret=_INTERPRET)
     return jnp.take(out, inv, axis=0)[:, :f]
+
+
+def update_cache_rows(cache: jax.Array, rows, slots,
+                      use_pallas: bool = False) -> jax.Array:
+    """Scatter admitted rows into a device-resident hot block during a
+    dynamic cache refresh: ``out = cache; out[slots[i]] = rows[i]`` (last
+    writer wins on aliased slots — both paths and the oracle agree).
+
+    ``rows``/``slots`` are accepted as host numpy (refresh builds them on
+    the host); an empty update returns the input block unchanged so a
+    no-op refresh never touches the device.  The Pallas path issues one
+    aligned row-block DMA per admitted node with the cache aliased into
+    the output; the jnp path compacts aliased slots to their last writer
+    on the host so its XLA scatter (duplicate-index order unspecified)
+    stays deterministic.
+    """
+    slots = np.asarray(slots, dtype=np.int32)
+    if slots.shape[0] == 0:
+        return cache
+    rows = jnp.asarray(rows, dtype=cache.dtype)
+    if not use_pallas:
+        # keep-last dedupe: unique() keeps the first occurrence, so scan
+        # the reversed slot list and map indices back
+        _, first_in_rev = np.unique(slots[::-1], return_index=True)
+        keep = np.sort(slots.shape[0] - 1 - first_in_rev)
+        return _update_ref(cache, rows[keep], jnp.asarray(slots[keep]))
+    return _update_pallas(cache, rows, jnp.asarray(slots))
+
+
+@jax.jit
+def _update_ref(cache: jax.Array, rows: jax.Array,
+                slots: jax.Array) -> jax.Array:
+    return cache.at[slots].set(rows)
+
+
+@jax.jit
+def _update_pallas(cache: jax.Array, rows: jax.Array,
+                   slots: jax.Array) -> jax.Array:
+    f = cache.shape[1]
+    t_f = _pick_tile(f)
+    fp = _round_up(f, t_f)
+    cp = jnp.pad(cache, ((0, 0), (0, fp - f)))
+    rp = jnp.pad(rows, ((0, 0), (0, fp - f)))
+    out = cache_update_kernel_call(cp, rp, slots, t_f=t_f,
+                                   interpret=_INTERPRET)
+    return out[:, :f]
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2,))

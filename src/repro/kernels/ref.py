@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["segment_weighted_sum_regular", "fused_gnn_update",
-           "assemble_features", "expand_rows"]
+           "assemble_features", "expand_rows", "cache_update"]
 
 
 def assemble_features(cache: jax.Array, miss: jax.Array, slots: jax.Array,
@@ -45,6 +45,27 @@ def expand_rows(rows: jax.Array, inverse: jax.Array) -> jax.Array:
     positional [N, F] layout from a [U, F] unique-row block.  Equivalent
     to ``assemble_features`` with no cache (all slots -1)."""
     return jnp.take(rows, inverse, axis=0)
+
+
+def cache_update(cache: jax.Array, rows: jax.Array,
+                 slots: jax.Array) -> jax.Array:
+    """Cache scatter-update oracle: ``out = cache; out[slots[i]] = rows[i]``
+    with updates applied in index order, so an update set that aliases the
+    same slot resolves to the LAST writer — the sequential-grid semantics
+    of ``cache_update_kernel_call``.  (A plain ``cache.at[slots].set(rows)``
+    leaves duplicate-index order unspecified, hence the explicit loop.)
+
+    cache: [K, F]; rows: [M, F]; slots: int32 [M] -> [K, F].
+    """
+    f = cache.shape[1]
+    if slots.shape[0] == 0:       # loop body is untraceable on 0 rows
+        return cache
+
+    def body(i, acc):
+        row = jax.lax.dynamic_slice(rows, (i, 0), (1, f)).astype(acc.dtype)
+        return jax.lax.dynamic_update_slice(acc, row, (slots[i], 0))
+
+    return jax.lax.fori_loop(0, slots.shape[0], body, cache)
 
 
 def segment_weighted_sum_regular(x_nbr: jax.Array, w_edge: jax.Array,

@@ -117,6 +117,25 @@ def test_lazy_windows_and_touch_accounting(sources):
     assert fresh.resident_window_bytes == 0
 
 
+def test_madvise_random_on_window_open(sources):
+    """Every lazily-opened partition window gets the MADV_RANDOM readahead
+    hint (where the platform supports it), and the hint changes nothing
+    about gather results — madvise is advisory, byte parity must hold."""
+    import mmap as mmap_mod
+    dense, mm = sources
+    fresh = MmapFeatures(mm.spill_dir)
+    assert fresh.madvise_calls == 0                  # nothing mapped yet
+    rows = np.arange(0, N, 7, dtype=np.int64)        # touches every window
+    assert fresh.take(rows).tobytes() == dense.take(rows).tobytes()
+    if hasattr(mmap_mod, "MADV_RANDOM"):             # guarded platforms
+        assert fresh.madvise_calls == len(fresh._parts) > 0
+        # reuse of an already-open window does not re-hint
+        before = fresh.madvise_calls
+        fresh.take(rows[:5])
+        assert fresh.madvise_calls == before
+    fresh.close()
+
+
 def test_owned_tempdir_spill_cleans_up_on_gc():
     mm = MmapFeatures.spill(HashedFeatures(64, 4, seed=0), partition_rows=16)
     spill = mm.spill_dir
