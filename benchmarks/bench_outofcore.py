@@ -19,7 +19,19 @@ scale run in a temp dir (cleaned up on exit) asserting dense/mmap gather
 parity, the one-partition spill bound, a bounded gather working set, and
 e2e loss bit-identity.
 
-Usage:  PYTHONPATH=src python -m benchmarks.bench_outofcore [--smoke]
+The background-I/O sweep (``run_prefetch`` / ``--smoke-prefetch``,
+writes BENCH_prefetch.json) measures the *load-stage stall* on the disk
+tier with the window prefetcher off vs on: each sampled frontier is
+handed to the ``WindowPrefetcher`` one step ahead of its gather (the
+lookahead the TFP sample stage provides in the real pipeline), so with
+prefetch on the gather's cold-fault bytes/seconds collapse to ~0 while
+the window LRU keeps page-cache residency under
+``lru_windows × window_bytes``.  Gates: prefetch-on stall strictly below
+prefetch-off, residency bounded, and trainer losses bit-identical across
+the {prefetch on/off} × {async_refresh on/off} matrix.
+
+Usage:  PYTHONPATH=src python -m benchmarks.bench_outofcore
+            [--smoke] [--smoke-prefetch]
 """
 from __future__ import annotations
 
@@ -31,7 +43,8 @@ import time
 import numpy as np
 
 from repro.core import HybridConfig, HybridGNNTrainer
-from repro.graph import GNNConfig, MmapFeatures, NumpySampler, make_dataset
+from repro.graph import (GNNConfig, MmapFeatures, NumpySampler,
+                         WindowPrefetcher, make_dataset)
 
 from .common import emit
 
@@ -130,6 +143,168 @@ def e2e_bit_identity(scale: float, iters: int, batch: int,
             "losses_mmap": losses["mmap"]}
 
 
+def _band_rows(num_nodes: int, iters: int, rows_per_iter: int, bands: int,
+               partition_rows: int, seed: int = 1):
+    """Per-iteration gather requests from a *rotating locality band* of
+    ``bands`` contiguous partitions: iteration i's working set fits the
+    window LRU but drifts across iterations (the access pattern a
+    bounded page cache + lookahead prefetcher serve — think
+    locality-reordered features or region-batched sampling; a uniform
+    frontier over the whole id space touches every partition at once and
+    no O(lru) page cache can help it, prefetched or not)."""
+    rng = np.random.default_rng(seed)
+    num_parts = -(-num_nodes // partition_rows)
+    out = []
+    for i in range(iters):
+        p0 = (i * bands) % max(num_parts - bands + 1, 1)
+        lo = p0 * partition_rows
+        hi = min((p0 + bands) * partition_rows, num_nodes)
+        out.append(np.unique(rng.integers(lo, hi, rows_per_iter)))
+    return out
+
+
+def bench_prefetch_mode(prefetch: bool, scale: float, iters: int,
+                        batch: int, partition_rows: int, lru_windows: int,
+                        spill_dir: str) -> dict:
+    """Drive ``iters`` banded gathers over a fresh spill with the window
+    prefetcher off/on and account the load-stage stall (cold page-fault
+    bytes/seconds the gather paid itself).
+
+    With prefetch on, request i is submitted and drained *before* its
+    gather — the deterministic stand-in for the real pipeline's overlap,
+    where the sample stage submits batch i+1 while batch i gathers (the
+    wall-clock overlap itself is exercised by the e2e matrix below)."""
+    ds = make_dataset(DATASET, scale=scale, seed=0, feature_backend="mmap",
+                      partition_rows=partition_rows, spill_dir=spill_dir,
+                      mmap_lru_windows=lru_windows)
+    src = ds.feature_source
+    src.drop_page_cache()            # the spill just wrote (= warmed) them
+    frontiers = _band_rows(ds.num_nodes, iters, rows_per_iter=batch * 40,
+                           bands=max(lru_windows - 1, 1),
+                           partition_rows=partition_rows)
+    pf = WindowPrefetcher(src, max_queue=4) if prefetch else None
+    peak_open = 0
+    t0 = time.perf_counter()
+    for f in frontiers:
+        if pf is not None:
+            pf.submit(f)
+            assert pf.wait_idle(60.0), "prefetch worker wedged"
+        src.take(f)
+        peak_open = max(peak_open, src.open_windows)
+    dt = time.perf_counter() - t0
+    if pf is not None:
+        pf.close()
+    res = {
+        "prefetch": prefetch,
+        "lru_windows": lru_windows,
+        "load_stall_bytes": int(src.cold_fault_page_bytes),
+        "load_stall_seconds": src.cold_gather_seconds,
+        "warm_gather_seconds": src.warm_gather_seconds,
+        "prefetched_window_bytes": int(src.prefetched_window_bytes),
+        "evicted_window_bytes": int(src.evicted_window_bytes),
+        "window_evictions": int(src.window_evictions),
+        "prefetch_hit_rate": src.prefetch_hit_rate,
+        "peak_open_windows": peak_open,
+        "resident_window_bytes": int(src.resident_window_bytes),
+        "residency_bound_bytes": lru_windows * src.window_bytes,
+    }
+    emit(f"prefetch,{'on' if prefetch else 'off'},scale={scale:g}",
+         dt / iters * 1e6,
+         f"stall={res['load_stall_bytes']/1e6:.2f}MB "
+         f"hit={res['prefetch_hit_rate']:.2f} "
+         f"open<={peak_open}/{lru_windows}")
+    src.close()
+    return res
+
+
+def prefetch_bit_identity(scale: float, iters: int, batch: int,
+                          partition_rows: int, td: str) -> dict:
+    """Trainer losses across {prefetch on/off} x {async_refresh on/off}
+    (all four on the mmap tier with dynamic cache refresh under constant
+    drift pressure): the whole background-I/O subsystem must be
+    bit-invisible."""
+    g = None
+    losses = {}
+    for prefetch in (0, 4):
+        for async_refresh in (False, True):
+            key = f"prefetch{prefetch}_async{int(async_refresh)}"
+            ds = make_dataset(DATASET, scale=scale, seed=0,
+                              feature_backend="mmap",
+                              partition_rows=partition_rows,
+                              spill_dir=os.path.join(td, f"spill-{key}"))
+            if g is None:
+                g = GNNConfig(model="sage", layer_dims=ds.layer_dims,
+                              fanouts=FANOUTS, num_classes=ds.num_classes)
+            cfg = HybridConfig(total_batch=batch, n_accel=2, hybrid=False,
+                               use_drm=False, tfp_depth=2, seed=0,
+                               cache_fraction=0.2, cache_refresh=True,
+                               cache_drift_threshold=0.0,
+                               async_refresh=async_refresh,
+                               prefetch_windows=prefetch,
+                               mmap_lru_windows=3)
+            tr = HybridGNNTrainer(ds, g, cfg)
+            tr.train(iters)
+            losses[key] = [m.loss for m in tr.history]
+            tr.close()
+    base = losses["prefetch0_async0"]
+    identical = all(np.array_equal(base, v) for v in losses.values())
+    emit("prefetch,bit_identity_matrix", 0.0,
+         f"configs={len(losses)} identical={identical} last={base[-1]:.4f}")
+    return {"matrix_loss_bit_identical": identical,
+            "losses": {k: v for k, v in losses.items()}}
+
+
+def run_prefetch(scale: float = 1e-3, iters: int = 6, batch: int = 192,
+                 e2e_iters: int = 4, partition_rows: int = 2048,
+                 lru_windows: int = 4,
+                 out_path: str = "BENCH_prefetch.json") -> dict:
+    """Background storage-I/O sweep -> BENCH_prefetch.json."""
+    results = {"dataset": DATASET, "scale": scale, "iters": iters,
+               "batch": batch, "partition_rows": partition_rows,
+               "lru_windows": lru_windows, "modes": {}}
+    with tempfile.TemporaryDirectory(prefix="bench-prefetch-") as td:
+        for mode in (False, True):
+            results["modes"]["on" if mode else "off"] = bench_prefetch_mode(
+                mode, scale, iters, batch, partition_rows, lru_windows,
+                spill_dir=os.path.join(td, f"spill-{int(mode)}"))
+        results.update(prefetch_bit_identity(
+            scale, e2e_iters, batch, partition_rows, td))
+    if out_path:
+        with open(out_path, "w") as fh:
+            json.dump(results, fh, indent=2)
+        emit("prefetch,written", 0.0, os.path.abspath(out_path))
+    return results
+
+
+def _prefetch_asserts(res: dict) -> None:
+    on, off = res["modes"]["on"], res["modes"]["off"]
+    # the point of the subsystem: the load stage's cold-fault stall
+    # collapses when the prefetcher pre-faults the windows
+    assert on["load_stall_bytes"] < off["load_stall_bytes"], \
+        (f"prefetch-on stall {on['load_stall_bytes']} not below "
+         f"prefetch-off {off['load_stall_bytes']}")
+    assert on["prefetch_hit_rate"] > 0.0
+    # page-cache residency bounded by the window LRU in BOTH modes (the
+    # prefetcher opens windows through the same LRU)
+    for mode in (on, off):
+        assert mode["peak_open_windows"] <= res["lru_windows"], mode
+        assert mode["resident_window_bytes"] <= \
+            mode["residency_bound_bytes"], mode
+    assert res["matrix_loss_bit_identical"], \
+        "background-I/O configs diverged trainer losses"
+
+
+def run_prefetch_smoke() -> dict:
+    """Tier-1 gate (~60 s): the prefetch on/off disk-tier sweep at test
+    scale — prefetch-on load-stage stall strictly below prefetch-off,
+    page-cache residency bounded by the window LRU, and the 4-config
+    {prefetch, async_refresh} trainer matrix bit-identical."""
+    res = run_prefetch(scale=1e-3, iters=6, batch=128, e2e_iters=3,
+                       partition_rows=2048, lru_windows=4, out_path="")
+    _prefetch_asserts(res)
+    return res
+
+
 def run(scale: float = 1e-2, iters: int = 4, batch: int = 256,
         e2e_iters: int = 4, partition_rows: int = 8192,
         out_path: str = "BENCH_outofcore.json") -> dict:
@@ -194,11 +369,19 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="small-scale assert-only run (scripts/tier1.sh)")
+    ap.add_argument("--smoke-prefetch", action="store_true",
+                    help="background-I/O gate: prefetch on/off stall, "
+                         "window-LRU residency bound, 4-config "
+                         "bit-identity (scripts/tier1.sh)")
     ap.add_argument("--scale", type=float, default=1e-2)
     args = ap.parse_args()
     print("name,us_per_call,derived")
     if args.smoke:
         run_smoke()
+    elif args.smoke_prefetch:
+        run_prefetch_smoke()
     else:
         res = run(scale=args.scale)
         _asserts(res, resident_frac_max=0.5)
+        pres = run_prefetch(scale=args.scale)
+        _prefetch_asserts(pres)

@@ -9,7 +9,11 @@
 #  * out-of-core (~60 s): mmap gather parity with the dense backend in a
 #    tempdir (cleaned up on exit), the spill writer's one-partition
 #    buffered-rows bound, a bounded gather working set, and mmap/dense
-#    loss bit-identity.
+#    loss bit-identity,
+#  * background I/O (~60 s): window-prefetch on/off disk-tier sweep —
+#    prefetch on must show strictly lower load-stage stall, page-cache
+#    residency stays under the window-LRU bound, and trainer losses are
+#    bit-identical across the {prefetch, async_refresh} 4-config matrix.
 #
 #   ./scripts/tier1.sh            # everything
 #   ./scripts/tier1.sh --fast     # skip the 'slow' subprocess-compile tests
@@ -27,4 +31,5 @@ python -m pytest -x -q ${MARK[@]+"${MARK[@]}"}
 python -m benchmarks.fig_cache_ablation --smoke
 python -m benchmarks.fig_cache_ablation --smoke-refresh
 python -m benchmarks.bench_outofcore --smoke
+python -m benchmarks.bench_outofcore --smoke-prefetch
 echo "tier1: OK"

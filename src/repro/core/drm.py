@@ -35,6 +35,15 @@ class StageTimes:
     t_tran: float = 0.0  # Data Transfer (PCIe)
     t_tc: float = 0.0    # Training on CPU
     t_ta: float = 0.0    # Training on Accelerator
+    # storage-I/O stall inside the load stage: aggregate gather-thread
+    # seconds spent faulting cold (unprefetched) mmap pages.  Summed
+    # across the loader's pool threads, so under a multi-threaded chunked
+    # gather it can exceed the wall-clock t_load — compare magnitudes,
+    # not as a strict subset.  Kept separate so the DRM (and anything
+    # reading StageTimes) can tell a compute-bound Feature Loader from
+    # one starved on the storage tier; the background window prefetcher
+    # exists to drive this toward 0.
+    t_load_stall: float = 0.0
 
     @property
     def t_accel(self) -> float:

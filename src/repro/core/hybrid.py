@@ -45,6 +45,17 @@ Ablation knobs reproduce Fig. 11 exactly:
     refresh can never corrupt batches already past the load stage —
     losses are bit-identical with refresh on or off.
 
+  * ``prefetch_windows>0`` / ``mmap_lru_windows>0`` / ``async_refresh``
+    -> the background storage-I/O subsystem for the disk tier: the sample
+    stage hands batch i+1's frontier to a ``WindowPrefetcher`` thread
+    that pre-faults its mmap partition windows while batch i loads (so
+    the load stage never blocks on cold disk reads; the residual stall
+    is DRM-visible as ``StageTimes.t_load_stall``), the window LRU evicts
+    with MADV_DONTNEED to bound page-cache residency, and the dynamic
+    cache refresh stages its admitted-row gather in a background thread —
+    the iteration boundary only pays the cheap ``commit()``.  All three
+    are bit-invisible to training losses.
+
 Measured-hit-rate feedback: when the loader's measured cache hit rate
 (over the post-refresh window) drifts more than ``cache_drift_threshold``
 from the estimate the task mapping was priced with, the initial task
@@ -69,8 +80,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.graph import (FeatureLoader, GNNConfig, GraphDataset, MiniBatch,
-                         MissBlock, NumpySampler, build_cache,
-                         compact_lookup, init_params, loss_fn,
+                         MissBlock, NumpySampler, WindowPrefetcher,
+                         build_cache, compact_lookup, init_params, loss_fn,
                          sample_minibatch_jax)
 from repro.kernels.ops import assemble_features
 from repro.optim import (CompressionSpec, adamw, compress_grads,
@@ -108,6 +119,24 @@ class HybridConfig:
     cache_drift_threshold: float = 0.05  # measured-vs-priced hit-rate drift
                                       #   (points) that triggers a cache
                                       #   refresh and a mapping re-price
+    cache_refresh_hysteresis: float = 1.25  # admit only when hotter than the
+                                      #   victim by this factor (boundary
+                                      #   hub sets stop thrashing)
+    async_refresh: bool = False       # stage the refresh gather in a
+                                      #   background thread; the iteration
+                                      #   boundary only pays the cheap
+                                      #   table/device-block commit()
+    prefetch_windows: int = 0         # background window prefetch queue
+                                      #   depth: the sample stage enqueues
+                                      #   batch i+1's frontier so its mmap
+                                      #   windows are warm when the load
+                                      #   stage gathers (0 = off; needs the
+                                      #   mmap feature backend)
+    mmap_lru_windows: int = 0         # bound on simultaneously open mmap
+                                      #   windows; LRU eviction issues
+                                      #   MADV_DONTNEED so page-cache use
+                                      #   stays O(lru * window_bytes)
+                                      #   (0 = unbounded)
     dedup: bool = True                # ship unique rows only (False = legacy
                                       #   one-row-per-frontier-position)
     lr: float = 1e-3
@@ -182,13 +211,41 @@ class HybridGNNTrainer:
                                                fanouts=gnn_cfg.fanouts))
         self._sample_key = jax.random.PRNGKey(cfg.seed + 2)
 
+        # --- background storage I/O (disk tier) ------------------------------
+        # the window LRU bounds the page cache; the prefetcher pre-faults
+        # batch i+1's windows while batch i trains.  Both are no-ops on
+        # RAM-resident sources (nothing to fault, nothing to evict).
+        # Wired BEFORE the cache: its boot gather streams through the
+        # source and must already respect the window bound.
+        src = dataset.feature_source
+        if cfg.mmap_lru_windows > 0 and hasattr(src, "lru_windows"):
+            src.lru_windows = int(cfg.mmap_lru_windows)
+        self.prefetcher: Optional[WindowPrefetcher] = None
+        if cfg.prefetch_windows > 0 and hasattr(src, "prefetch_rows"):
+            self.prefetcher = WindowPrefetcher(
+                src, max_queue=cfg.prefetch_windows)
+
         # --- feature store: device hot cache + dedup/miss-only loader --------
         self.cache = build_cache(dataset, cfg.cache_fraction,
                                  transfer_dtype=cfg.feature_dtype,
                                  refresh_decay=cfg.cache_refresh_decay,
-                                 max_refresh_frac=cfg.cache_refresh_frac)
+                                 max_refresh_frac=cfg.cache_refresh_frac,
+                                 refresh_hysteresis=cfg
+                                 .cache_refresh_hysteresis)
         self.loader = FeatureLoader(dataset, transfer_dtype=cfg.feature_dtype,
                                     cache=self.cache, dedup=cfg.dedup)
+        # design-time Eq. 7 overlap estimate: a running prefetcher is
+        # assumed to hide the storage stream (the same design assumption
+        # TFP makes for the whole load stage); re-pricing uses the
+        # measured prefetch hit rate instead, and an overlap drift alone
+        # (an underperforming prefetcher with a stable cache rate) also
+        # triggers a re-price — see _maybe_refresh_mapping
+        self.prefetch_overlap = 1.0 if self.prefetcher is not None else 0.0
+        self._model_prefetch_overlap = self.prefetch_overlap
+        # async staged refresh: one stage() gather in flight at most
+        self._refresh_thread: Optional[threading.Thread] = None
+        self._refresh_error: Optional[BaseException] = None
+        self._staged_feedback: Optional[Tuple[float, float]] = None
         self._assemble_pallas = (cfg.cache_assemble == "pallas"
                                  or (cfg.cache_assemble == "auto"
                                      and jax.default_backend() == "tpu"))
@@ -234,7 +291,8 @@ class HybridGNNTrainer:
                 gnn_cfg.fanouts, gnn_cfg.layer_dims, model=gnn_cfg.model,
                 cache_hit_rate=hit_rate,
                 dedup_factor=self.measured_dedup_alpha,
-                feature_tier=self.feature_tier)
+                feature_tier=self.feature_tier,
+                prefetch_overlap=self.prefetch_overlap)
         else:
             mapping = {"cpu": 0,
                        "accel_each": cfg.total_batch // max(cfg.n_accel, 1)}
@@ -345,12 +403,35 @@ class HybridGNNTrainer:
                 t_sc += time.perf_counter() - t0
             p["minibatch"][name] = mb
         p["t"]["t_sc"], p["t"]["t_sa"] = t_sc, t_sa
+        # TFP lookahead -> background storage I/O: this batch's frontier
+        # is known here, one pipeline stage BEFORE its load-stage gather
+        # runs, so hand the ids the gather will actually touch (unique,
+        # minus rows the device cache will serve) to the window
+        # prefetcher.  By the time _stage_load reaches this batch its
+        # mmap windows are warm and the gather never blocks on cold disk
+        # reads.  submit() never blocks (full queue = drop); a failed
+        # prefetch worker raises here and surfaces through the pipeline's
+        # stage-failure protocol.
+        if self.prefetcher is not None and p["minibatch"]:
+            depth = len(self.gnn_cfg.fanouts)
+            parts = []
+            for name, mb in p["minibatch"].items():
+                ids = np.unique(np.asarray(mb.frontier(depth)))
+                # the device cache only serves accelerator trainers (the
+                # CPU trainer reads its FULL frontier from the source),
+                # so only accel frontiers drop their cache-hit rows
+                if name != "cpu" and self.cache is not None:
+                    ids = ids[self.cache.slot_of[ids] < 0]
+                parts.append(ids)
+            self.prefetcher.submit(np.unique(np.concatenate(parts)))
         return item
 
     def _stage_load(self, item: PipelineItem) -> PipelineItem:
         p = item.payload
         self.loader.num_threads = self.runtime.assignment.threads.get("load", 1)
         t0 = time.perf_counter()
+        stall0 = self.loader.stats.stall_seconds \
+            + self.loader.host_stats.stall_seconds
         for name, mb in p["minibatch"].items():
             # accelerator trainers get the compact transfer path (unique
             # miss rows against the on-device hot cache, or plain unique
@@ -363,6 +444,11 @@ class HybridGNNTrainer:
                 p["features"][name] = self.loader.load(
                     mb, to_device=(name != "cpu"))
         p["t"]["t_load"] = time.perf_counter() - t0
+        # storage-I/O stall share of the load stage (cold mmap faults the
+        # prefetcher did not hide) — DRM-visible via StageTimes
+        p["t"]["t_load_stall"] = (self.loader.stats.stall_seconds
+                                  + self.loader.host_stats.stall_seconds
+                                  - stall0)
         return item
 
     def _assemble(self, block: MissBlock, dev) -> jax.Array:
@@ -503,17 +589,33 @@ class HybridGNNTrainer:
         dedup_saved_rows = stats.dedup_saved_bytes // self.cache.row_bytes
         return 1.0 - dedup_saved_rows / miss_positions
 
+    def _measured_prefetch_overlap(self) -> float:
+        """Eq. 7 overlap term from measurement: the fraction of load-stage
+        window touches the background prefetcher served warm (falls back
+        to the design-time estimate before any disk-tier traffic)."""
+        if self.prefetcher is None:
+            return 0.0
+        src = self.loader.source
+        touches = (getattr(src, "prefetch_hit_windows", 0)
+                   + getattr(src, "prefetch_miss_windows", 0))
+        if touches == 0:
+            return self.prefetch_overlap
+        return float(src.prefetch_hit_rate)
+
     def _reprice_mapping(self, measured: float, alpha: float) -> None:
         """Re-run the initial task mapping with a measured hit rate +
         alpha and hand the refreshed shares to the runtime (the DRM keeps
         fine-tuning from there)."""
+        overlap = self._measured_prefetch_overlap()
         mapping = initial_task_mapping(
             PLATFORMS[self.cfg.host_platform],
             PLATFORMS[self.cfg.accel_platform],
             self.cfg.n_accel, self.cfg.total_batch,
             self.gnn_cfg.fanouts, self.gnn_cfg.layer_dims,
             model=self.gnn_cfg.model, cache_hit_rate=measured,
-            dedup_factor=alpha, feature_tier=self.feature_tier)
+            dedup_factor=alpha, feature_tier=self.feature_tier,
+            prefetch_overlap=overlap)
+        self._model_prefetch_overlap = overlap
         a = self.runtime.assignment
         n = max(self.cfg.n_accel, 1)
         a.accel_batch = mapping["accel_each"]
@@ -538,6 +640,8 @@ class HybridGNNTrainer:
         """
         if self.cache is None or not self.cfg.cache_refresh:
             return False
+        if self.cfg.async_refresh:
+            return self._async_refresh_step()
         win = self.loader.window
         if win.total_rows == 0:
             return False
@@ -546,11 +650,19 @@ class HybridGNNTrainer:
                 self.cfg.cache_drift_threshold:
             return False
         swapped = self.cache.refresh()
+        self._finish_refresh(swapped, measured, self._window_alpha(win))
+        return swapped > 0
+
+    def _finish_refresh(self, swapped: int, measured: float,
+                        alpha: float) -> None:
+        """Post-refresh bookkeeping shared by the sync and async paths:
+        re-price the mapping (or anchor the drift signal) and reset the
+        measurement window when rows moved."""
         reprice = (self.cfg.hybrid and self.cfg.n_accel > 0
                    and not self._failed)
         if swapped:
             if reprice:
-                self._reprice_mapping(measured, self._window_alpha(win))
+                self._reprice_mapping(measured, alpha)
             else:
                 # accel-only (or degenerate) runs have no mapping to
                 # re-price; still anchor the drift signal on the measured
@@ -565,7 +677,56 @@ class HybridGNNTrainer:
             # mapping feedback (called right after) must still see the
             # drift, and its re-price anchors the same signal.
             self._model_hit_rate = measured
-        return swapped > 0
+
+    def _async_refresh_step(self) -> bool:
+        """One iteration-boundary step of the staged (off-critical-path)
+        refresh.  State machine:
+
+          idle + drift       -> snapshot the drifted measurement, kick the
+                                expensive ``stage()`` gather in a
+                                background thread, return (no stall);
+          stage in flight    -> return (the boundary pays nothing);
+          stage finished     -> ``commit()`` (cheap table/device swap) and
+                                run the usual post-refresh bookkeeping on
+                                the measurement snapshotted at stage time.
+
+        Losses are bit-identical to the sync path (and to refresh off):
+        whatever iteration the commit lands on, in-flight TFP payloads
+        combine against the cache version their lookup was classified at.
+        """
+        t = self._refresh_thread
+        if t is not None:
+            if t.is_alive():
+                return False
+            self._refresh_thread = None
+            if self._refresh_error is not None:
+                err, self._refresh_error = self._refresh_error, None
+                raise RuntimeError(
+                    "async cache-refresh stage() failed") from err
+            measured, alpha = self._staged_feedback
+            self._staged_feedback = None
+            swapped = self.cache.commit()
+            self._finish_refresh(swapped, measured, alpha)
+            return swapped > 0
+        win = self.loader.window
+        if win.total_rows == 0:
+            return False
+        measured = win.hit_rate
+        if abs(measured - self._model_hit_rate) <= \
+                self.cfg.cache_drift_threshold:
+            return False
+        self._staged_feedback = (measured, self._window_alpha(win))
+
+        def run_stage():
+            try:
+                self.cache.stage()
+            except BaseException as e:  # surfaced at the next boundary
+                self._refresh_error = e
+
+        self._refresh_thread = threading.Thread(
+            target=run_stage, daemon=True, name="cache-refresh-stage")
+        self._refresh_thread.start()
+        return False
 
     def _maybe_refresh_mapping(self) -> bool:
         """Measured-hit-rate feedback into the perf model (ROADMAP item).
@@ -579,6 +740,10 @@ class HybridGNNTrainer:
         The measurement is the post-refresh *window*, not the lifetime
         average: a dynamic cache refresh resets the window, so the mapping
         is re-priced on the rate the refreshed cache actually serves.
+        The measured prefetch overlap carries its own drift trigger: an
+        underperforming prefetcher (queue-full drops, windows evicted
+        before their gather) must re-price the storage penalty even when
+        the cache hit rate sits rock-stable inside its threshold.
         Returns True when a refresh happened.
         """
         if not (self.cfg.hybrid and self.cache is not None) or self._failed:
@@ -587,8 +752,14 @@ class HybridGNNTrainer:
         if stats.total_rows == 0:
             return False
         measured = stats.hit_rate
-        if abs(measured - self._model_hit_rate) <= \
-                self.cfg.cache_drift_threshold:
+        hit_drift = abs(measured - self._model_hit_rate) > \
+            self.cfg.cache_drift_threshold
+        overlap_drift = (
+            self.prefetcher is not None
+            and abs(self._measured_prefetch_overlap()
+                    - self._model_prefetch_overlap)
+            > self.cfg.cache_drift_threshold)
+        if not (hit_drift or overlap_drift):
             return False
         self._reprice_mapping(measured, self._window_alpha(stats))
         return True
@@ -621,7 +792,8 @@ class HybridGNNTrainer:
                 t_sa=p["t"].get("t_sa", 0.0), t_sc=p["t"].get("t_sc", 0.0),
                 t_load=p["t"].get("t_load", 0.0),
                 t_tran=p["t"].get("t_tran", 0.0),
-                t_tc=ttimes["t_tc"], t_ta=ttimes["t_ta"])
+                t_tc=ttimes["t_tc"], t_ta=ttimes["t_ta"],
+                t_load_stall=p["t"].get("t_load_stall", 0.0))
             # account for failures: drop trainers, DRM rebalances the rest
             if self._failed:
                 a = self.runtime.assignment
@@ -648,9 +820,69 @@ class HybridGNNTrainer:
             if (self.cfg.ckpt_every and self._ckpt_cb
                     and (p["iteration"] + 1) % self.cfg.ckpt_every == 0):
                 self._ckpt_cb(p["iteration"], self.params, self.opt_state)
+        # a background failure after the last iteration boundary (final
+        # staged gather, final prefetch) would otherwise vanish
+        self._raise_background_errors()
         return self.history
 
+    def _raise_background_errors(self) -> None:
+        """Surface latched background-I/O failures — a prefetch worker or
+        an async ``stage()`` gather that died after its last chance to
+        raise in-line (e.g. during the final iterations).  Called at the
+        end of ``train()`` and by ``close()`` so a broken storage tier
+        can never fail silently; each latch raises once."""
+        if self._refresh_error is not None and (
+                self._refresh_thread is None
+                or not self._refresh_thread.is_alive()):
+            self._refresh_thread = None
+            err, self._refresh_error = self._refresh_error, None
+            raise RuntimeError(
+                "async cache-refresh stage() failed") from err
+        if self.prefetcher is not None and self.prefetcher.error is not None:
+            err, self.prefetcher.error = self.prefetcher.error, None
+            raise RuntimeError(
+                "window prefetch worker failed; storage tier is broken"
+            ) from err
+
+    def close(self) -> None:
+        """Release background resources (loader pool, window prefetcher,
+        any in-flight staged-refresh thread), then surface any failure
+        they latched.  Idempotent once the latched errors have raised."""
+        if self.prefetcher is not None:
+            self.prefetcher.close()
+        t = self._refresh_thread
+        if t is not None:
+            t.join(timeout=30.0)
+            self._refresh_thread = None
+        self.loader.close()
+        self._raise_background_errors()
+
     # ------------------------------------------------------------- reporting
+
+    def storage_io(self) -> Dict[str, float]:
+        """Background storage-I/O accounting (zeros on RAM tiers):
+        prefetch/eviction counters from the mmap source plus the
+        cumulative load-stage stall the prefetcher did not hide."""
+        src = self.loader.source
+        out = {
+            "load_stall_seconds": self.loader.stats.stall_seconds
+            + self.loader.host_stats.stall_seconds,
+            "cold_fault_page_bytes":
+                float(getattr(src, "cold_fault_page_bytes", 0)),
+            "prefetched_window_bytes":
+                float(getattr(src, "prefetched_window_bytes", 0)),
+            "evicted_window_bytes":
+                float(getattr(src, "evicted_window_bytes", 0)),
+            "window_evictions": float(getattr(src, "window_evictions", 0)),
+            "open_windows": float(getattr(src, "open_windows", 0)),
+            "prefetch_hit_rate":
+                float(getattr(src, "prefetch_hit_rate", 0.0)),
+        }
+        if self.prefetcher is not None:
+            out["prefetch_submitted"] = float(self.prefetcher.submitted)
+            out["prefetch_completed"] = float(self.prefetcher.completed)
+            out["prefetch_dropped"] = float(self.prefetcher.dropped)
+        return out
 
     def mean_mteps(self, skip: int = 2) -> float:
         hist = self.history[skip:] or self.history

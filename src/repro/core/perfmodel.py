@@ -86,6 +86,16 @@ class WorkloadSpec:
     # baseline) or "disk" (out-of-core MmapFeatures) — Eq. 7 prices the
     # gather at min(memory, storage) bandwidth for the disk tier.
     feature_tier: str = "ram"
+    # fraction of the disk tier's storage stream hidden by the background
+    # window prefetcher (it pre-faults batch i+1's partition windows
+    # while batch i trains, the way TFP hides the whole load stage behind
+    # compute).  Eq. 7's storage penalty — the gap between pricing at
+    # storage vs memory bandwidth — is discounted by this factor: 0 (no
+    # prefetcher) reproduces the plain disk-tier pricing, 1 means the
+    # storage stream fully overlaps and only the RAM-speed gather stays
+    # exposed.  At runtime the feedback loop re-prices with the measured
+    # prefetch hit rate.  Ignored on the "ram" tier.
+    prefetch_overlap: float = 0.0
 
     def frontier_sizes(self) -> Tuple[int, ...]:
         out = [self.batch_size]
@@ -145,12 +155,19 @@ def t_load(w: WorkloadSpec, host: PlatformSpec, n_trainers: int) -> float:
     out-of-core MmapFeatures tier) the gather streams through the host
     storage device, so the stage is priced at min(memory, storage)
     bandwidth; a platform without the ``storage_bw_gbps`` knob falls back
-    to memory bandwidth (RAM-resident assumption)."""
-    bw = host.mem_bw_gbps
-    if w.feature_tier == "disk" and host.storage_bw_gbps > 0.0:
-        bw = min(bw, host.storage_bw_gbps)
+    to memory bandwidth (RAM-resident assumption).  The background window
+    prefetcher overlaps the storage stream with the previous iteration's
+    compute, so only ``(1 - prefetch_overlap)`` of the storage *penalty*
+    (the excess over the RAM-speed gather) stays exposed on the load
+    stage — the same discount TFP applies to the stage as a whole."""
     num = n_trainers * w.miss_rows() * w.layer_dims[0] * w.feat_bytes
-    return num / (bw * 1e9)
+    t_mem = num / (host.mem_bw_gbps * 1e9)
+    if w.feature_tier == "disk" and host.storage_bw_gbps > 0.0:
+        bw = min(host.mem_bw_gbps, host.storage_bw_gbps)
+        t_disk = num / (bw * 1e9)
+        overlap = min(max(w.prefetch_overlap, 0.0), 1.0)
+        return t_mem + (t_disk - t_mem) * (1.0 - overlap)
+    return t_mem
 
 
 def t_trans(w: WorkloadSpec, accel: PlatformSpec) -> float:
@@ -225,7 +242,8 @@ def initial_task_mapping(host: PlatformSpec, accel: PlatformSpec,
                          model: str = "sage",
                          cache_hit_rate: float = 0.0,
                          dedup_factor: float = 1.0,
-                         feature_tier: str = "ram") -> Dict[str, int]:
+                         feature_tier: str = "ram",
+                         prefetch_overlap: float = 0.0) -> Dict[str, int]:
     """Coarse-grained design-time mapping (paper §IV-A first paragraph).
 
     Chooses the CPU trainer's mini-batch share so the predicted CPU
@@ -245,18 +263,23 @@ def initial_task_mapping(host: PlatformSpec, accel: PlatformSpec,
     ``feature_tier="disk"`` prices every trainer's load stage (CPU and
     accelerator alike — they gather from the same host FeatureSource) at
     the host's storage bandwidth, shifting work toward whichever side
-    hides the slower gather better.
+    hides the slower gather better; ``prefetch_overlap`` discounts the
+    disk tier's storage penalty by the fraction the background window
+    prefetcher hides (both trainer kinds gather through the same
+    prefetched page cache, so both carry it).
     """
     best: Tuple[float, int] = (float("inf"), 0)
     step = max(1, total_batch // 64)
     for cpu_share in range(0, total_batch // 2 + 1, step):
         accel_share = (total_batch - cpu_share) // max(n_accel, 1)
         w_cpu = WorkloadSpec(cpu_share, fanouts, layer_dims, model=model,
-                             feature_tier=feature_tier)
+                             feature_tier=feature_tier,
+                             prefetch_overlap=prefetch_overlap)
         w_acc = WorkloadSpec(accel_share, fanouts, layer_dims, model=model,
                              cache_hit_rate=cache_hit_rate,
                              dedup_factor=dedup_factor,
-                             feature_tier=feature_tier)
+                             feature_tier=feature_tier,
+                             prefetch_overlap=prefetch_overlap)
         pred = predict(host, accel, n_accel, w_cpu, w_acc)
         if pred.t_execution < best[0]:
             best = (pred.t_execution, cpu_share)

@@ -12,7 +12,11 @@ TFP (``depth=0``) degenerates to sequential stage execution — that is the
 ablation baseline of Fig. 11.
 
 Every item carries a ``timings`` dict; each stage records its service time,
-which the Runtime feeds to the DRM engine.
+which the Runtime feeds to the DRM engine.  Pipelined stages additionally
+record ``<stage>_wait`` — the time the worker sat starved on its input
+queue before this item arrived (0 in sequential mode).  Wait times are
+the pipeline-level stall signal: a stage whose upstream is the bottleneck
+shows large waits, a stage that IS the bottleneck shows none.
 """
 from __future__ import annotations
 
@@ -70,13 +74,16 @@ class PrefetchPipeline:
                 stop: threading.Event):
         failed = False
         while True:
+            t_wait = time.perf_counter()
             item = q_in.get()
+            wait = time.perf_counter() - t_wait
             if item is _SENTINEL:
                 q_out.put(_SENTINEL)
                 return
             if failed:
                 continue            # drain so the feeder never blocks
             try:
+                item.timings[st.name + "_wait"] = wait
                 t0 = time.perf_counter()
                 item = st.fn(item)
                 item.timings[st.name] = time.perf_counter() - t0

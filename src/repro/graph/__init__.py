@@ -10,6 +10,9 @@
 #              with versioned device snapshots for in-flight consistency).
 # featload.py  host gather stage: full-frontier loads for CPU trainers,
 #              miss-only loads for cache-backed accelerator trainers.
+# prefetch.py  WindowPrefetcher: background thread pre-faulting the NEXT
+#              batch's mmap partition windows (lookahead from the TFP
+#              sample stage) so the load stage gathers warm pages.
 # sampler.py   fixed-shape neighbor sampling (numpy host / jit device).
 # models.py    GCN / GraphSAGE on sampled blocks (dense/segsum/pallas agg).
 #
@@ -25,6 +28,7 @@ from .sampler import MiniBatch, NumpySampler, sample_minibatch_jax, frontier_siz
 from .featcache import (CacheLookup, CacheStats, FeatureCache, build_cache,
                         compact_lookup)
 from .featload import FeatureLoader, LoadStats, MissBlock
+from .prefetch import WindowPrefetcher
 from .models import GNNConfig, init_params, forward, loss_fn, param_count
 
 __all__ = [
@@ -35,6 +39,6 @@ __all__ = [
     "MiniBatch", "NumpySampler", "sample_minibatch_jax", "frontier_sizes",
     "CacheLookup", "CacheStats", "FeatureCache", "build_cache",
     "compact_lookup",
-    "FeatureLoader", "LoadStats", "MissBlock",
+    "FeatureLoader", "LoadStats", "MissBlock", "WindowPrefetcher",
     "GNNConfig", "init_params", "forward", "loss_fn", "param_count",
 ]

@@ -47,9 +47,14 @@ Components:
     reference, so a concurrent refresh can never tear a classification.
   * ``data_on(device, version=None)`` — the [K, F] hot-row block resident
     on ``device`` at the requested (default: current) version.
-  * ``refresh()`` — evict-coldest / admit-hottest swap under the decayed
-    counters; bumps ``version`` and resets the epoch stats window when it
-    moves rows.
+  * ``stage()`` / ``commit()`` — the refresh split into its expensive and
+    cheap halves: ``stage`` plans the evict-coldest / admit-hottest swap
+    (with an admission-hysteresis margin against boundary thrash) and
+    gathers the admitted rows from the FeatureSource *outside* the cache
+    lock — on the disk tier that gather used to block an iteration
+    boundary, and can now run in a background thread; ``commit`` only
+    swaps tables / scatter-updates device blocks, bumps ``version`` and
+    resets the epoch stats window.  ``refresh()`` = stage + commit.
   * ``compact_lookup(ids)`` — cache-free frontier deduplication: unique
     ids + int32 inverse map, shared by cached and uncached transfer paths.
   * ``lookup(ids, dedup=True)`` — deduplicates the frontier, classifies
@@ -200,6 +205,19 @@ def compact_lookup(ids: np.ndarray,
                        unique_ids=unique_ids, inverse=inverse)
 
 
+@dataclasses.dataclass
+class _StagedRefresh:
+    """A planned-and-gathered refresh awaiting its cheap ``commit()``.
+
+    ``base_version`` pins the slot table the plan was computed against: a
+    commit (from any path) bumps the version, so a plan staged against an
+    older table is stale and discarded instead of applied."""
+    base_version: int
+    top: np.ndarray       # admitted candidate ids (may be empty)
+    cold: np.ndarray      # victim slot indices, int64, same length
+    rows: np.ndarray      # gathered admitted rows in transfer dtype
+
+
 class FeatureCache:
     """Top-K hot-row cache over any ``FeatureSource``.
 
@@ -215,7 +233,8 @@ class FeatureCache:
                  hotness: np.ndarray, capacity: int,
                  transfer_dtype: str = "float32",
                  refresh_decay: float = 0.5,
-                 max_refresh_frac: float = 0.25):
+                 max_refresh_frac: float = 0.25,
+                 refresh_hysteresis: float = 1.25):
         source = as_feature_source(source)
         num_nodes, feat_dim = source.shape
         capacity = int(max(0, min(capacity, num_nodes)))
@@ -233,8 +252,10 @@ class FeatureCache:
         self.row_bytes = wire_row_bytes(feat_dim, transfer_dtype)
         self.slot_of = np.full(num_nodes, -1, dtype=np.int32)
         self.slot_of[self.cached_ids] = np.arange(capacity, dtype=np.int32)
+        # the boot gather is maintenance, not load-stage traffic: exclude
+        # it from a storage tier's stall/prefetch-hit counters
         self._host_rows = np.ascontiguousarray(
-            self._cast_rows(source.take(self.cached_ids)))
+            self._cast_rows(self._maintenance_take(self.cached_ids)))
         self._expected_hit_rate = (float(hotness[self.cached_ids].sum())
                                    / max(float(hotness.sum()), 1e-12))
         self.stats = CacheStats()        # lifetime totals (traffic accounting)
@@ -249,8 +270,14 @@ class FeatureCache:
         self.use_pallas_update = False   # scatter-update kernel dispatch
         self.refresh_decay = float(refresh_decay)
         self.max_refresh_frac = float(max_refresh_frac)
+        # admission hysteresis: a candidate must be hotter than its victim
+        # by this factor to swap — a hub set oscillating right at the
+        # admission boundary would otherwise thrash (swap in/out every
+        # window).  1.0 reproduces the plain strictly-hotter policy.
+        self.refresh_hysteresis = float(refresh_hysteresis)
         self.refreshes = 0               # refresh() calls that moved rows
         self.refresh_swapped_rows = 0
+        self._staged: Optional[_StagedRefresh] = None
         # decayed hotness estimates: frontier *positions* observed per
         # cached slot / per uncached node since (decay-weighted) forever.
         # float32 keeps the uncached estimate at 4 B/node — same budget as
@@ -276,6 +303,18 @@ class FeatureCache:
             import jax.numpy as jnp
             rows = rows.astype(jnp.dtype(self.transfer_dtype))
         return rows
+
+    def _maintenance_take(self, rows: np.ndarray) -> np.ndarray:
+        """Gather rows as cache maintenance: on sources with stall
+        accounting (``MmapFeatures``), excluded from the cold/warm and
+        prefetch-hit counters — boot and refresh-admission gathers are
+        not load-stage traffic and must not skew the stall metrics the
+        task mapping re-prices on."""
+        ctx = getattr(self.source, "untracked_gathers", None)
+        if ctx is None:
+            return self.source.take(rows)
+        with ctx():
+            return self.source.take(rows)
 
     # ------------------------------------------------------------- plumbing
 
@@ -404,33 +443,40 @@ class FeatureCache:
 
     # -------------------------------------------------------------- refresh
 
-    def refresh(self, max_swap: Optional[int] = None) -> int:
-        """Evict the coldest slots, admit strictly-hotter uncached nodes.
+    @property
+    def staged_ready(self) -> bool:
+        """True when a staged refresh awaits its ``commit()``."""
+        with self._lock:
+            return self._staged is not None
 
-        Requires ``track_hotness`` to have been enabled while lookups ran
-        (it is opt-in — see __init__): with no tracked traffic there are
-        no admission candidates and the refresh is a no-op.
+    @property
+    def staged_swaps(self) -> int:
+        """Swap count of the currently staged plan (0 when none)."""
+        with self._lock:
+            return 0 if self._staged is None else \
+                int(self._staged.top.shape[0])
 
-        Under the decayed counters the hottest uncached candidates are
-        paired hottest-first against the coldest-first slots; a pair swaps
-        only while the candidate is *strictly* hotter than its victim, so
-        a refresh never replaces a row with a colder one and a cache whose
-        resident set already matches the observed distribution is a no-op.
-        At most ``max_swap`` rows move (default ``max_refresh_frac`` of
-        capacity).  Hotness estimates travel with their nodes (the evicted
-        slot's estimate seeds the node's uncached estimate and vice
-        versa), then all counters decay by ``refresh_decay`` — every
-        ``refresh()`` call is a window boundary.
+    def stage(self, max_swap: Optional[int] = None) -> int:
+        """Plan the next refresh and gather its admitted rows OFF the
+        critical path.
 
-        When rows move: ``version`` is bumped, each device-resident
-        current-version block is scatter-updated in place (one aligned
-        row-block DMA per admitted node via ``kernels.ops
-        .update_cache_rows``; snapshots older than ``keep_versions`` are
-        retired), and the epoch stats window resets so measured-rate
-        consumers see the post-refresh rate.  Returns the number of rows
-        swapped.
-        """
-        from repro.kernels.ops import update_cache_rows
+        Everything expensive happens here: the candidate scan + pairing
+        under the lock (cheap), then the admitted-row gather from the
+        ``FeatureSource`` with the lock RELEASED — on the disk tier that
+        gather is the part that used to block an iteration boundary, and
+        it can now run in a background thread while lookups proceed.  The
+        plan is pinned to the slot-table version it was computed against;
+        if another commit lands before the gather finishes, the stale
+        plan is discarded (never applied against a reshuffled table).
+
+        Candidate policy (unchanged from the one-shot ``refresh()``): the
+        hottest uncached candidates pair hottest-first against the
+        coldest-first slots; a pair swaps only while the candidate is
+        hotter than ``refresh_hysteresis`` × its victim (the hysteresis
+        margin keeps a boundary hub set from thrashing), so a refresh
+        never replaces a row with a hotter-or-equal one evicted.  At most
+        ``max_swap`` rows move (default ``max_refresh_frac`` of
+        capacity).  Returns the planned swap count."""
         with self._lock:
             if self.capacity == 0:
                 return 0
@@ -445,6 +491,7 @@ class FeatureCache:
             else:
                 cand = np.flatnonzero(self._node_hot > 0.0).astype(np.int64)
                 cand = cand[self.slot_of[cand] < 0]
+            top = cold = np.zeros(0, dtype=np.int64)
             n_swap = 0
             if k_max and cand.shape[0]:
                 k = min(k_max, cand.shape[0])
@@ -454,20 +501,74 @@ class FeatureCache:
                 # coldest slots first, ties broken by cached id
                 cold = np.lexsort((self.cached_ids, self._slot_hot)
                                   )[:k].astype(np.int64)
-                # admit_hot desc vs evict_hot asc: the strictly-hotter
+                # admit_hot desc vs evict_hot asc: the hotter-by-a-factor
                 # predicate is monotone, so the swap set is a prefix
                 n_swap = int(np.count_nonzero(
-                    self._node_hot[top] > self._slot_hot[cold]))
+                    self._node_hot[top] > np.float32(self.refresh_hysteresis)
+                    * self._slot_hot[cold]))
+            top, cold = top[:n_swap], cold[:n_swap]
+            base = self.version
+        # EXPENSIVE: the admitted-row gather runs OUTSIDE the lock —
+        # concurrent lookups never wait on the storage tier (and it is
+        # maintenance traffic: excluded from the load-stall counters it
+        # would otherwise race when staged in a background thread)
+        if n_swap:
+            rows = np.ascontiguousarray(
+                self._cast_rows(self._maintenance_take(top)))
+        else:
+            rows = np.zeros((0, self.feat_dim), self._host_rows.dtype)
+        with self._lock:
+            if self.version != base:
+                # a commit landed while we gathered: victims/candidates
+                # were computed against a retired table — drop the plan
+                self._staged = None
+                return 0
+            self._staged = _StagedRefresh(base, top, cold, rows)
+            return n_swap
+
+    def commit(self) -> int:
+        """Apply the staged refresh: the cheap synchronous half.
+
+        Only table swaps and device row-block scatters happen here — no
+        FeatureSource access, so on the disk tier an iteration boundary
+        pays O(swapped rows) DMAs instead of a storage gather.  The
+        admission predicate is re-validated pair-by-pair against the
+        *commit-time* counters (lookups kept accumulating while the
+        staged gather ran), so the never-admit-colder guarantee holds at
+        the moment the swap becomes visible.  Every commit of a staged
+        plan is a hotness window boundary (counters decay); a stale or
+        absent plan returns 0 and changes nothing.
+
+        When rows move: ``version`` is bumped, each device-resident
+        current-version block is scatter-updated in place (one aligned
+        row-block DMA per admitted node via ``kernels.ops
+        .update_cache_rows``; snapshots older than ``keep_versions`` are
+        retired), and the epoch stats window resets so measured-rate
+        consumers see the post-refresh rate.  Returns the number of rows
+        swapped."""
+        from repro.kernels.ops import update_cache_rows
+        with self._lock:
+            plan, self._staged = self._staged, None
+            if plan is None or plan.base_version != self.version:
+                return 0
+            top, cold, rows = plan.top, plan.cold, plan.rows
+            n_swap = int(top.shape[0])
             if n_swap:
-                top, cold = top[:n_swap], cold[:n_swap]
+                # re-validate against commit-time counters: a pair whose
+                # victim heated up (or candidate cooled) past the
+                # hysteresis margin while the gather ran no longer swaps
+                keep = (self._node_hot[top]
+                        > np.float32(self.refresh_hysteresis)
+                        * self._slot_hot[cold])
+                top, cold, rows = top[keep], cold[keep], rows[keep]
+                n_swap = int(top.shape[0])
+            if n_swap:
                 evicted = self.cached_ids[cold].copy()
                 new_slot_of = self.slot_of.copy()
                 new_slot_of[evicted] = -1
                 new_slot_of[top] = cold.astype(np.int32)
                 new_cached = self.cached_ids.copy()
                 new_cached[cold] = top
-                rows = np.ascontiguousarray(
-                    self._cast_rows(self.source.take(top)))
                 # copy-on-write, never in place: on the CPU backend
                 # jax.device_put can alias the host buffer, so mutating
                 # _host_rows would corrupt previously-placed (old-version)
@@ -509,11 +610,23 @@ class FeatureCache:
                 self._node_hot *= np.float32(self.refresh_decay)
             return n_swap
 
+    def refresh(self, max_swap: Optional[int] = None) -> int:
+        """One-shot refresh: ``stage()`` + ``commit()`` back to back.
+
+        Semantics are unchanged from the pre-staged implementation (same
+        plan, same swap, one counter decay per call); the split exists so
+        ``async_refresh`` runs the expensive ``stage()`` gather in a
+        background thread and keeps only the cheap ``commit()`` on the
+        iteration boundary.  Returns the number of rows swapped."""
+        self.stage(max_swap)
+        return self.commit()
+
 
 def build_cache(dataset, fraction: float,
                 transfer_dtype: str = "float32",
                 refresh_decay: float = 0.5,
-                max_refresh_frac: float = 0.25) -> Optional[FeatureCache]:
+                max_refresh_frac: float = 0.25,
+                refresh_hysteresis: float = 1.25) -> Optional[FeatureCache]:
     """Cache of ``fraction`` of the dataset's nodes (None when <= 0)."""
     if fraction <= 0.0:
         return None
@@ -523,4 +636,5 @@ def build_cache(dataset, fraction: float,
     return FeatureCache(dataset.feature_source, dataset.feature_hotness(),
                         capacity, transfer_dtype=transfer_dtype,
                         refresh_decay=refresh_decay,
-                        max_refresh_frac=max_refresh_frac)
+                        max_refresh_frac=max_refresh_frac,
+                        refresh_hysteresis=refresh_hysteresis)

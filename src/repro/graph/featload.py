@@ -69,6 +69,13 @@ class LoadStats:
     saved_bytes: int = 0     # transfer bytes avoided by cache hits
     dedup_saved_bytes: int = 0  # transfer bytes avoided by deduplication
     padding_bytes: int = 0   # share of `bytes` that is shape-bucket padding
+    stall_seconds: float = 0.0  # aggregate gather-thread seconds spent
+                             #   faulting cold storage pages (disk-tier
+                             #   mmap gathers the window prefetcher did
+                             #   not pre-warm); summed across the chunked
+                             #   gather's pool threads, so it can exceed
+                             #   the wall-clock `seconds`.  0 on
+                             #   RAM-resident sources
 
     @property
     def hit_rate(self) -> float:
@@ -89,6 +96,7 @@ class LoadStats:
         self.saved_bytes += other.saved_bytes
         self.dedup_saved_bytes += other.dedup_saved_bytes
         self.padding_bytes += other.padding_bytes
+        self.stall_seconds += other.stall_seconds
 
 
 @dataclasses.dataclass
@@ -170,6 +178,14 @@ class FeatureLoader:
         except Exception:
             pass
 
+    def _source_stall(self) -> float:
+        """Cumulative cold-page-fault seconds reported by the source (0
+        for RAM-resident sources) — deltas around a gather give the share
+        of its wall time that was a storage stall.  Pool threads finish
+        inside the gather call, so the delta is race-free as long as
+        loads run from one stage thread (the pipeline's contract)."""
+        return float(getattr(self.source, "cold_gather_seconds", 0.0))
+
     def _split_chunks(self, rows: np.ndarray):
         """Split a gather into per-thread chunks.
 
@@ -228,13 +244,16 @@ class FeatureLoader:
         ``stats``.
         """
         t0 = time.perf_counter()
+        stall0 = self._source_stall()
         frontier = self._frontier(batch)
         x = self._cast(self._gather(frontier))
         dt = time.perf_counter() - t0
         dest = self.stats if to_device else self.host_stats
         self._account(dest, LoadStats(rows=x.shape[0], bytes=x.nbytes,
                                       seconds=dt, total_rows=x.shape[0],
-                                      unique_rows=x.shape[0]))
+                                      unique_rows=x.shape[0],
+                                      stall_seconds=self._source_stall()
+                                      - stall0))
         return x
 
     def note_transfer_padding(self, rows: int, nbytes: int) -> None:
@@ -254,6 +273,7 @@ class FeatureLoader:
         path) a cache is required and one row per miss position ships.
         """
         t0 = time.perf_counter()
+        stall0 = self._source_stall()
         frontier = self._frontier(batch)
         if self.cache is not None:
             look = self.cache.lookup(frontier, dedup=self.dedup)
@@ -271,7 +291,8 @@ class FeatureLoader:
             total_rows=look.num_rows, unique_rows=look.num_unique,
             hit_rows=look.num_hit,
             saved_bytes=look.num_hit * row_bytes,
-            dedup_saved_bytes=look.dup_miss_rows * row_bytes))
+            dedup_saved_bytes=look.dup_miss_rows * row_bytes,
+            stall_seconds=self._source_stall() - stall0))
         return MissBlock(rows=rows, lookup=look)
 
     def load_misses(self, batch: MiniBatch) -> MissBlock:

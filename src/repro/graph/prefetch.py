@@ -1,0 +1,138 @@
+"""Background storage-I/O prefetch (async partition-window pre-faulting).
+
+HyScale-GNN's two-stage prefetch (paper §IV-B) overlaps the Feature
+Loader and Data Transfer with accelerator compute, but on the disk tier
+the load stage itself still blocks on cold mmap page faults.  The TFP
+pipeline *knows* batch i+1's frontier (its sample stage runs while batch
+i loads — paper Fig. 7), so a DistDGL-style background I/O thread can
+pre-fault the windows batch i+1 will touch while batch i's gather runs:
+by the time the load stage reaches batch i+1, its pages are warm and the
+gather never waits on the storage device.
+
+``WindowPrefetcher`` is that thread.  It wraps any FeatureSource
+exposing ``prefetch_rows`` (the out-of-core ``MmapFeatures``) and:
+
+  * ``submit(rows)`` — enqueue one future gather's row ids.  Non-blocking
+    and lossy by design: a full queue drops the request (``dropped``
+    counter) rather than ever stalling the sample stage — prefetch is
+    advisory, the consumer's gather is always correct without it.
+  * the worker thread drains the queue calling
+    ``source.prefetch_rows`` (a readahead gather of exactly the rows a
+    future ``take`` will touch).
+  * errors are latched, never swallowed: a failing prefetch (e.g. a
+    spill blob deleted mid-run) marks the prefetcher failed, the worker
+    keeps draining (so ``close()`` can never deadlock on a full queue),
+    and the *next* ``submit`` raises with the original exception chained
+    — inside the TFP pipeline that surfaces through the stage-failure
+    protocol on the current ``run()`` without wedging the feeder.
+  * ``close()`` is idempotent and safe with a half-drained queue: the
+    stop flag makes the worker skip remaining work, a sentinel ends it,
+    and a second ``close()`` returns immediately.
+
+``wait_idle`` exists for tests/benchmarks that need the asynchronous
+pre-fault to have *happened* before measuring (the trainer never calls
+it — overlapping is the whole point).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Optional
+
+import numpy as np
+
+__all__ = ["WindowPrefetcher"]
+
+_SENTINEL = object()
+
+
+class WindowPrefetcher:
+    """Background thread pre-faulting partition windows for future gathers."""
+
+    def __init__(self, source, max_queue: int = 4,
+                 name: str = "window-prefetch"):
+        if not hasattr(source, "prefetch_rows"):
+            raise TypeError(
+                f"{type(source).__name__} has no prefetch_rows: the window "
+                "prefetcher only serves page-faulting (mmap) sources")
+        self.source = source
+        self._q: "queue.Queue" = queue.Queue(maxsize=max(1, int(max_queue)))
+        self._cv = threading.Condition()
+        self._pending = 0              # submitted but not yet processed
+        self._stop = threading.Event()
+        self._closed = False
+        self.error: Optional[BaseException] = None
+        self.submitted = 0
+        self.completed = 0
+        self.dropped = 0               # queue-full discards (by design)
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name=name)
+        self._thread.start()
+
+    # ------------------------------------------------------------- worker
+
+    def _run(self) -> None:
+        while True:
+            item = self._q.get()
+            if item is _SENTINEL:
+                return
+            # after a failure (or during close) keep draining without
+            # working, so a blocked producer / close() never deadlocks
+            if self.error is None and not self._stop.is_set():
+                try:
+                    self.source.prefetch_rows(item)
+                    self.completed += 1
+                except BaseException as e:
+                    self.error = e
+            with self._cv:
+                self._pending -= 1
+                self._cv.notify_all()
+
+    # ----------------------------------------------------------- producer
+
+    def submit(self, rows: np.ndarray) -> bool:
+        """Enqueue one future gather's rows for background pre-faulting.
+
+        Returns True when enqueued, False when dropped (queue full or
+        prefetcher closed).  Raises if a previous prefetch failed — the
+        advisory thread must not hide a broken storage tier."""
+        if self.error is not None:
+            raise RuntimeError(
+                "window prefetch worker failed; storage tier is broken"
+            ) from self.error
+        if self._closed:
+            return False
+        rows = np.asarray(rows)
+        with self._cv:
+            try:
+                self._q.put_nowait(rows)
+            except queue.Full:
+                self.dropped += 1
+                return False
+            self._pending += 1
+            self.submitted += 1
+        return True
+
+    def wait_idle(self, timeout: Optional[float] = None) -> bool:
+        """Block until every submitted request was processed (or failed).
+        Test/benchmark hook — the training path never waits."""
+        with self._cv:
+            return self._cv.wait_for(
+                lambda: self._pending == 0 or self.error is not None,
+                timeout)
+
+    def close(self) -> None:
+        """Stop the worker (idempotent; safe under a half-drained queue:
+        remaining requests are drained unprocessed, never worked)."""
+        if self._closed:
+            return
+        self._closed = True
+        self._stop.set()
+        self._q.put(_SENTINEL)      # worker is alive until it sees this
+        self._thread.join(timeout=30.0)
+
+    def __del__(self):  # pragma: no cover - GC timing dependent
+        try:
+            self.close()
+        except Exception:
+            pass

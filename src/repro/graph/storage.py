@@ -45,10 +45,13 @@ with the same degree-distribution shape.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import json
 import os
 import tempfile
+import threading
+import time
 from typing import Callable, Dict, List, Optional, Protocol, Sequence, Tuple
 
 import numpy as np
@@ -222,12 +225,39 @@ class MmapFeatures:
         gathers actually faulted (page-granular residency estimate; the
         quantity that stays O(touched rows) instead of O(N*F)).
 
+    Bounded page cache (``lru_windows > 0``): open windows live in a
+    small LRU; opening one past the bound evicts the least-recently-used
+    window by hinting its pages ``MADV_DONTNEED`` (clean, file-backed —
+    the kernel drops them immediately instead of waiting for reclaim) and
+    dropping the map reference (the underlying mmap closes once no
+    in-flight gather still holds it, so a concurrent gather on an evicted
+    window simply re-faults pages and stays bit-identical).  Page-cache
+    residency is therefore O(lru_windows × window_bytes) instead of
+    "whatever the kernel keeps".  Eviction clears the window's touch
+    bits: its pages are gone, a future gather re-faults them cold.
+
+    Background prefetch (``prefetch_rows``): pre-faults exactly the pages
+    a future ``take(rows)`` will touch (readahead gather through the same
+    LRU, result discarded) so the consumer's gather hits warm pages.  ``take`` accounts which of its pages were
+    already faulted (by a prefetch or an earlier gather) vs faulted cold
+    on the critical path:
+
+      * ``prefetched_window_bytes`` — page bytes newly faulted by
+        ``prefetch_rows`` calls,
+      * ``evicted_window_bytes``    — bytes of windows evicted by the LRU,
+      * ``cold_fault_page_bytes``   — page bytes ``take`` had to fault
+        itself (the load-stage stall a prefetcher exists to hide), with
+        the wall time spent on such cold windows in
+        ``cold_gather_seconds``,
+      * ``prefetch_hit_rate``       — fraction of ``take`` window touches
+        served by a still-warm prefetched window.
+
     Reopening an existing spill directory is just ``MmapFeatures(path)``.
     """
 
     is_disk_resident = True   # the perf model prices loads at storage bw
 
-    def __init__(self, spill_dir: str):
+    def __init__(self, spill_dir: str, lru_windows: int = 0):
         self.spill_dir = str(spill_dir)
         path = os.path.join(self.spill_dir, _MMAP_MANIFEST)
         with open(path) as fh:
@@ -238,9 +268,31 @@ class MmapFeatures:
         self._dtype = np.dtype(str(m["dtype"]))
         self.partition_rows = int(m["partition_rows"])
         self.num_partitions = int(m["num_partitions"])
-        self._parts: Dict[int, np.memmap] = {}   # lazily opened windows
+        # lazily opened windows in LRU order (insertion order = recency:
+        # _part() reinserts on access); guarded by _win_lock because the
+        # loader's pool threads, the background WindowPrefetcher and the
+        # consumer all open/evict concurrently
+        self._parts: Dict[int, np.memmap] = {}
+        self._win_lock = threading.Lock()
+        self.lru_windows = int(lru_windows)      # 0 = unbounded (legacy)
+        self._prefetched: set = set()            # warm (prefetched) pids
         self.spill_peak_buffered_rows = 0        # set by spill()
         self.madvise_calls = 0                   # windows hinted MADV_RANDOM
+        self.madvise_dontneed_calls = 0          # evictions that dropped pages
+        self.window_evictions = 0
+        self.evicted_window_bytes = 0            # bytes of evicted windows
+        self.prefetched_window_bytes = 0         # page bytes prefetch faulted
+        self.cold_fault_page_bytes = 0           # page bytes take() faulted
+        self.cold_gather_seconds = 0.0           # take() time on cold windows
+        self.warm_gather_seconds = 0.0           # take() time on warm windows
+        self.prefetch_hit_windows = 0            # take() touches of warm pids
+        self.prefetch_miss_windows = 0
+        # per-thread exclusion from the stall/prefetch counters: background
+        # maintenance gathers (cache boot, staged-refresh admission) are
+        # not load-stage traffic and must not skew the stall metrics the
+        # task mapping re-prices on (page-touch accounting still applies —
+        # the pages really do become warm)
+        self._untracked = threading.local()
         self._owned_tmp: Optional[tempfile.TemporaryDirectory] = None
         self._row_bytes = self.shape[1] * self._dtype.itemsize
         # pages per partition *file* (files are page-aligned independently)
@@ -265,7 +317,8 @@ class MmapFeatures:
     @classmethod
     def spill(cls, src: "FeatureSource | np.ndarray",
               spill_dir: Optional[str] = None,
-              partition_rows: int = 65536) -> "MmapFeatures":
+              partition_rows: int = 65536,
+              lru_windows: int = 0) -> "MmapFeatures":
         """Materialize ``src`` into per-partition disk blobs, one partition
         buffered at a time, and return the mmap-backed view.
 
@@ -301,7 +354,7 @@ class MmapFeatures:
                     "num_partitions": num_parts}
         with open(os.path.join(spill_dir, _MMAP_MANIFEST), "w") as fh:
             json.dump(manifest, fh)
-        out = cls(spill_dir)
+        out = cls(spill_dir, lru_windows=lru_windows)
         out.spill_peak_buffered_rows = peak
         out._owned_tmp = owned
         return out
@@ -323,54 +376,135 @@ class MmapFeatures:
     @property
     def resident_window_bytes(self) -> int:
         """Bytes of currently mapped (touched) partition windows."""
-        return sum(int(p.nbytes) for p in self._parts.values())
+        with self._win_lock:
+            return sum(int(p.nbytes) for p in self._parts.values())
+
+    @property
+    def open_windows(self) -> int:
+        """Currently mapped partition windows (<= ``lru_windows`` when the
+        LRU bound is set)."""
+        with self._win_lock:
+            return len(self._parts)
+
+    @property
+    def window_bytes(self) -> int:
+        """Bytes of one full partition window (the LRU bound's unit)."""
+        return self.partition_rows * self._row_bytes
 
     @property
     def touched_page_bytes(self) -> int:
-        """Cumulative unique pages faulted by gathers (page-granular
-        residency estimate)."""
+        """Unique pages faulted by gathers and still accounted resident
+        (page-granular residency estimate; an LRU eviction clears its
+        window's bits — those pages were dropped).  Cumulative when
+        ``lru_windows == 0`` (the legacy meaning)."""
         return int(np.count_nonzero(self._page_touched)) * _PAGE_BYTES
+
+    @property
+    def prefetch_hit_rate(self) -> float:
+        """Fraction of ``take`` window touches whose window was warm from
+        a prior ``prefetch_rows`` (and not since evicted)."""
+        tot = self.prefetch_hit_windows + self.prefetch_miss_windows
+        return self.prefetch_hit_windows / max(tot, 1)
 
     def reset_touch_stats(self) -> None:
         self._page_touched[:] = False
         self.last_gather_page_bytes = 0
 
-    def _madvise_random(self, mm: np.memmap) -> None:
-        """Hint the kernel that this window is gathered row-at-random:
-        ``MADV_RANDOM`` disables readahead, so a sparse gather faults only
-        the touched pages instead of dragging untouched neighbour rows
-        into the page cache.  Purely advisory and guarded — platforms
-        without ``mmap.madvise`` (or numpy builds not exposing the
-        underlying map) silently keep default readahead; gather results
-        are identical either way (property-tested)."""
+    @contextlib.contextmanager
+    def untracked_gathers(self):
+        """Context manager: this thread's ``take`` calls are excluded
+        from the cold/warm stall and prefetch-hit counters (maintenance
+        gathers — the cache boot block, staged-refresh admission rows —
+        are not load-stage traffic).  Touch/residency accounting still
+        applies: the gathered pages genuinely become warm.  Reentrant
+        (restores the previous flag, not False)."""
+        prev = getattr(self._untracked, "flag", False)
+        self._untracked.flag = True
+        try:
+            yield
+        finally:
+            self._untracked.flag = prev
+
+    def reset_prefetch_stats(self) -> None:
+        """Zero the prefetch/stall counters (not the touch bitmap)."""
+        self.prefetched_window_bytes = 0
+        self.cold_fault_page_bytes = 0
+        self.cold_gather_seconds = 0.0
+        self.warm_gather_seconds = 0.0
+        self.prefetch_hit_windows = 0
+        self.prefetch_miss_windows = 0
+
+    def _madvise(self, mm: np.memmap, advice_name: str) -> bool:
+        """Issue one madvise hint on a window.  Purely advisory and
+        guarded — platforms without ``mmap.madvise`` (or numpy builds not
+        exposing the underlying map) silently skip; gather results are
+        identical either way (property-tested)."""
         import mmap as _mmap
-        advice = getattr(_mmap, "MADV_RANDOM", None)
+        advice = getattr(_mmap, advice_name, None)
         base = getattr(mm, "_mmap", None)
         if advice is None or base is None:
-            return
+            return False
         try:
             base.madvise(advice)
-            self.madvise_calls += 1
+            return True
         except (OSError, ValueError):  # pragma: no cover - kernel-dependent
-            pass
+            return False
+
+    def _madvise_random(self, mm: np.memmap) -> None:
+        """``MADV_RANDOM`` disables readahead, so a sparse gather faults
+        only the touched pages instead of dragging untouched neighbour
+        rows into the page cache."""
+        if self._madvise(mm, "MADV_RANDOM"):
+            self.madvise_calls += 1
+
+    def _evict_window(self, pid: int, mm: np.memmap) -> None:
+        """Drop one window from the LRU (held under ``_win_lock``):
+        ``MADV_DONTNEED`` releases its clean file-backed pages immediately
+        (instead of trusting kernel reclaim), then the map reference is
+        dropped — the underlying mmap closes once no in-flight gather
+        still holds it, so a gather racing the eviction just re-faults
+        pages and stays bit-identical."""
+        if self._madvise(mm, "MADV_DONTNEED"):
+            self.madvise_dontneed_calls += 1
+        self.window_evictions += 1
+        self.evicted_window_bytes += int(mm.nbytes)
+        self._prefetched.discard(pid)
+        # the pages are gone: a future gather faults them cold again
+        base = pid * self._pages_per_part
+        self._page_touched[base:base + self._pages_per_part] = False
+        del self._parts[pid]
 
     def _part(self, pid: int) -> np.memmap:
-        mm = self._parts.get(pid)
-        if mm is None:
-            lo = pid * self.partition_rows
-            rows = min(self.partition_rows, self.shape[0] - lo)
-            mm = np.memmap(os.path.join(self.spill_dir, self._part_name(pid)),
-                           dtype=self._dtype, mode="r",
-                           shape=(rows, self.shape[1]))
-            self._madvise_random(mm)
-            self._parts[pid] = mm
-        return mm
+        with self._win_lock:
+            mm = self._parts.pop(pid, None)
+            if mm is None:
+                lo = pid * self.partition_rows
+                rows = min(self.partition_rows, self.shape[0] - lo)
+                mm = np.memmap(
+                    os.path.join(self.spill_dir, self._part_name(pid)),
+                    dtype=self._dtype, mode="r",
+                    shape=(rows, self.shape[1]))
+                self._madvise_random(mm)
+            self._parts[pid] = mm              # (re)insert at the MRU end
+            # trim on every access, not just opens: lru_windows may have
+            # been tightened after windows were already mapped (e.g. the
+            # cache boot gather runs before the trainer sets the bound)
+            if self.lru_windows > 0:
+                while len(self._parts) > self.lru_windows:
+                    old = next(iter(self._parts))   # LRU end
+                    if old == pid:                  # never evict the newcomer
+                        break
+                    self._evict_window(old, self._parts[old])
+            return mm
 
-    def _note_touch(self, part_id: np.ndarray, offset: np.ndarray) -> None:
+    def _note_touch_window(self, pid: int, offset: np.ndarray
+                           ) -> Tuple[int, int]:
+        """Mark one window's pages touched by ``offset`` rows; returns
+        (page bytes this call spans, page bytes newly faulted)."""
         off_b = offset * self._row_bytes
         first = off_b // _PAGE_BYTES
         last = (off_b + self._row_bytes - 1) // _PAGE_BYTES
-        base = part_id * self._pages_per_part
+        base = pid * self._pages_per_part
         # a row spans first..last inclusive — wide rows (> 2 pages) touch
         # interior pages too, so enumerate the whole span
         span = self._row_bytes // _PAGE_BYTES + 1
@@ -380,31 +514,113 @@ class MmapFeatures:
             parts.append(np.where(pg <= last, base + pg, np.int64(-1)))
         pages = np.unique(np.concatenate(parts))
         pages = pages[pages >= 0]
-        self.last_gather_page_bytes = int(pages.shape[0]) * _PAGE_BYTES
+        fresh = int(np.count_nonzero(~self._page_touched[pages]))
         self._page_touched[pages] = True
+        return int(pages.shape[0]) * _PAGE_BYTES, fresh * _PAGE_BYTES
+
+    def _split_parts(self, rows: np.ndarray
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+        if rows.min() < 0 or rows.max() >= self.shape[0]:
+            raise IndexError(
+                f"row ids out of range [0, {self.shape[0]})")
+        part_id = rows // self.partition_rows
+        return part_id, rows - part_id * self.partition_rows
+
+    def prefetch_rows(self, rows: np.ndarray) -> int:
+        """Pre-fault the pages a future ``take(rows)`` will touch.
+
+        Groups the rows by partition, opens each touched window through
+        the LRU and runs a readahead gather of exactly the requested rows
+        (result discarded) so precisely the needed pages are resident
+        when the consumer's gather arrives.  Deliberately NOT a
+        whole-window ``MADV_WILLNEED``: an untargeted hint covers the
+        entire mapping, so the kernel would stream the full window blob
+        and the background thread would compete for the very storage
+        bandwidth it exists to hide (the windows stay ``MADV_RANDOM``
+        from open).  Safe to call concurrently with ``take`` (this is
+        the WindowPrefetcher's worker-thread entry point).  Returns the
+        page bytes newly faulted (also accumulated into
+        ``prefetched_window_bytes``)."""
+        rows = np.asarray(rows, dtype=np.int64)
+        if rows.shape[0] == 0:
+            return 0
+        part_id, offset = self._split_parts(rows)
+        total_new = 0
+        for pid in np.unique(part_id):
+            pid = int(pid)
+            sel = part_id == pid
+            mm = self._part(pid)
+            np.take(mm, offset[sel], axis=0)   # readahead gather, discarded
+            with self._win_lock:
+                _, new = self._note_touch_window(pid, offset[sel])
+                self._prefetched.add(pid)
+                self.prefetched_window_bytes += new
+            total_new += new
+        return total_new
 
     def take(self, rows: np.ndarray) -> np.ndarray:
         rows = np.asarray(rows, dtype=np.int64)
         out = np.empty((rows.shape[0], self.shape[1]), dtype=self._dtype)
         if rows.shape[0] == 0:
             return out
-        if rows.min() < 0 or rows.max() >= self.shape[0]:
-            raise IndexError(
-                f"row ids out of range [0, {self.shape[0]})")
-        part_id = rows // self.partition_rows
-        offset = rows - part_id * self.partition_rows
+        part_id, offset = self._split_parts(rows)
+        tracked = not getattr(self._untracked, "flag", False)
+        gather_pages = 0
         for pid in np.unique(part_id):
+            pid = int(pid)
             sel = part_id == pid
-            out[sel] = np.take(self._part(int(pid)), offset[sel], axis=0)
-        self._note_touch(part_id, offset)
+            warm = pid in self._prefetched
+            t0 = time.perf_counter()
+            out[sel] = np.take(self._part(pid), offset[sel], axis=0)
+            dt = time.perf_counter() - t0
+            with self._win_lock:
+                touched, fresh = self._note_touch_window(pid, offset[sel])
+                gather_pages += touched
+                if not tracked:
+                    continue
+                # stall accounting: pages nobody faulted before this
+                # gather are the cold reads a prefetcher exists to hide
+                self.cold_fault_page_bytes += fresh
+                if warm:
+                    self.prefetch_hit_windows += 1
+                else:
+                    self.prefetch_miss_windows += 1
+                if fresh:
+                    self.cold_gather_seconds += dt
+                else:
+                    self.warm_gather_seconds += dt
+        self.last_gather_page_bytes = gather_pages
         return out
 
     def __getitem__(self, rows):
         return self.take(np.atleast_1d(rows))
 
+    def drop_page_cache(self) -> None:
+        """Best-effort page-cache drop of every partition blob
+        (``posix_fadvise(POSIX_FADV_DONTNEED)`` on the files, guarded) —
+        used by benchmarks to measure genuinely cold gathers right after
+        a spill wrote (and therefore page-cached) the blobs."""
+        fadvise = getattr(os, "posix_fadvise", None)
+        dontneed = getattr(os, "POSIX_FADV_DONTNEED", None)
+        if fadvise is None or dontneed is None:  # pragma: no cover
+            return
+        for pid in range(self.num_partitions):
+            path = os.path.join(self.spill_dir, self._part_name(pid))
+            try:
+                fd = os.open(path, os.O_RDONLY)
+                try:
+                    os.fsync(fd)
+                    fadvise(fd, 0, 0, dontneed)
+                finally:
+                    os.close(fd)
+            except OSError:  # pragma: no cover - fs-dependent
+                pass
+
     def close(self) -> None:
         """Drop all mapped windows (their pages become reclaimable)."""
-        self._parts.clear()
+        with self._win_lock:
+            self._parts.clear()
+            self._prefetched.clear()
 
 
 def as_feature_source(features) -> "FeatureSource":
@@ -546,7 +762,8 @@ def make_dataset(name: str, scale: float = 1.0, seed: int = 0,
                  materialize_features: Optional[bool] = None,
                  feature_backend: str = "auto",
                  partition_rows: int = 65536,
-                 spill_dir: Optional[str] = None) -> GraphDataset:
+                 spill_dir: Optional[str] = None,
+                 mmap_lru_windows: int = 0) -> GraphDataset:
     """Instantiate a (possibly scaled-down) Table-III dataset.
 
     ``scale`` shrinks |V| while preserving avg degree and feature dims, so a
@@ -560,6 +777,11 @@ def make_dataset(name: str, scale: float = 1.0, seed: int = 0,
     None — with bounded spill RAM and lazily mapped windows) | 'auto'
     (dense when the matrix fits 2 GiB, hashed otherwise; same policy as
     the legacy ``materialize_features``).
+
+    ``mmap_lru_windows`` bounds the mmap backend's simultaneously open
+    partition windows (0 = unbounded): the LRU evicts with
+    ``MADV_DONTNEED`` so page-cache residency stays
+    O(lru_windows × window_bytes).
     """
     if name not in DATASET_STATS:
         raise KeyError(f"unknown dataset {name!r}; have {list(DATASET_STATS)}")
@@ -583,7 +805,8 @@ def make_dataset(name: str, scale: float = 1.0, seed: int = 0,
                                                 partition_rows=partition_rows)
     elif feature_backend == "mmap":
         feats = MmapFeatures.spill(hashed, spill_dir=spill_dir,
-                                   partition_rows=partition_rows)
+                                   partition_rows=partition_rows,
+                                   lru_windows=mmap_lru_windows)
     else:
         raise ValueError(f"unknown feature_backend {feature_backend!r}")
     rng = np.random.default_rng(seed + 1)

@@ -117,6 +117,176 @@ def test_refresh_decay_forgets_old_hotness():
     assert est[1] > est[0]
 
 
+# ------------------------------------------- staged refresh (stage/commit)
+
+
+def _heat(cache, lo, hi, rounds=4, reps=4, seed=0):
+    rng = np.random.default_rng(seed)
+    for _ in range(rounds):
+        cache.lookup(np.repeat(rng.integers(lo, hi, 60), reps))
+
+
+def test_stage_commit_matches_one_shot_refresh():
+    """Identical traffic through the split protocol and the one-shot
+    refresh() must land the identical cache state (same plan, same swap,
+    one decay per boundary)."""
+    _, a = _cache(capacity=30, seed=2)
+    _, b = _cache(capacity=30, seed=2)
+    _heat(a, 100, N)
+    _heat(b, 100, N)
+    planned = a.stage()
+    assert a.staged_ready and a.staged_swaps == planned > 0
+    assert a.commit() == planned
+    assert b.refresh() == planned
+    assert np.array_equal(a.cached_ids, b.cached_ids)
+    assert np.array_equal(a.slot_of, b.slot_of)
+    assert np.array_equal(a._host_rows, b._host_rows)
+    assert np.array_equal(a.slot_hotness(), b.slot_hotness())
+    assert a.version == b.version == 1
+    _consistent_inverse(a)
+
+
+def test_commit_without_stage_is_noop_without_decay():
+    _, cache = _cache(capacity=20)
+    _heat(cache, 100, N)
+    hot0 = cache.slot_hotness()
+    assert cache.commit() == 0
+    assert cache.version == 0
+    # no staged plan -> not a window boundary: counters must NOT decay
+    assert np.array_equal(cache.slot_hotness(), hot0)
+
+
+def test_stale_staged_plan_discarded_after_concurrent_refresh():
+    """A plan staged against version v must be dropped (not applied) when
+    another refresh commits first: its victims/candidates were computed
+    against a retired slot table."""
+    src, cache = _cache(capacity=30)
+    _heat(cache, 100, 200)
+    assert cache.stage() > 0
+    plan = cache._staged                 # hold the staged plan aside
+    _heat(cache, 200, N, seed=1)
+    assert cache.refresh() > 0           # bumps version past the plan
+    cache._staged = plan                 # resurrect the now-stale plan
+    ver = cache.version
+    ids = cache.cached_ids.copy()
+    assert cache.commit() == 0           # stale: discarded
+    assert cache.version == ver
+    assert np.array_equal(cache.cached_ids, ids)
+    _consistent_inverse(cache)
+    assert np.array_equal(cache._host_rows, src.take(cache.cached_ids))
+
+
+def test_stage_gather_runs_outside_the_cache_lock():
+    """The expensive admitted-row gather must not hold the cache lock:
+    lookups proceed while a slow FeatureSource gather is in flight (the
+    disk-tier iteration boundary this PR removes)."""
+    import threading
+    import time
+
+    class SlowSource:
+        def __init__(self, inner):
+            self.inner = inner
+            self.shape = inner.shape
+            self.slow = False
+            self.in_take = threading.Event()
+
+        @property
+        def dtype(self):
+            return self.inner.dtype
+
+        def take(self, rows):
+            if self.slow:
+                self.in_take.set()
+                time.sleep(0.6)
+            return self.inner.take(rows)
+
+    slow = SlowSource(HashedFeatures(N, F, seed=1))
+    hotness = np.arange(N, 0, -1, dtype=np.float64)
+    cache = FeatureCache(slow, hotness, 30)
+    cache.track_hotness = True
+    _heat(cache, 100, N)
+    slow.slow = True
+    t = threading.Thread(target=cache.stage)
+    t.start()
+    assert slow.in_take.wait(5.0)        # stage is inside the slow gather
+    t0 = time.perf_counter()
+    for _ in range(5):
+        cache.lookup(np.arange(50, 90))
+    lookup_time = time.perf_counter() - t0
+    t.join()
+    assert lookup_time < 0.3, f"lookups blocked {lookup_time:.2f}s on stage"
+    assert cache.commit() > 0            # the staged plan still lands
+
+
+# ------------------------------------------------- admission hysteresis
+
+
+@given(st.integers(4, 40), st.floats(1.01, 1.2), st.integers(1, 4))
+@settings(max_examples=20, deadline=None)
+def test_hysteresis_oscillating_adversary_never_swaps(capacity, amp,
+                                                      rounds):
+    """An adversary oscillating a boundary set's hotness within the
+    hysteresis factor (default 1.25) must produce ZERO swaps — the
+    thrash the margin exists to stop.  Counters decay identically on
+    both sides, so the ratio (not the decayed magnitude) is what the
+    policy sees."""
+    src = HashedFeatures(N, F, seed=0)
+    hotness = np.zeros(N)
+    hotness[:capacity] = 1.0             # boot set: ids [0, capacity)
+    cache = FeatureCache(src, hotness, capacity)
+    cache.track_hotness = True
+    cached = np.arange(capacity, dtype=np.int64)
+    shadow = np.arange(capacity, 2 * capacity, dtype=np.int64)
+    base = 8
+    swaps = 0
+    for r in range(rounds):
+        # cached side sees `base` positions each, shadow side oscillates
+        # between base/amp and base*amp around it — never past the margin
+        hi = max(1, int(round(base * (amp if r % 2 == 0 else 1.0 / amp))))
+        cache.lookup(np.repeat(cached, base))
+        cache.lookup(np.repeat(shadow, hi))
+        swaps += cache.refresh()
+    assert swaps == 0
+    assert np.array_equal(np.sort(cache.cached_ids), cached)
+
+
+def test_hysteresis_two_x_hotter_candidate_lands():
+    """A candidate genuinely 2x hotter than the coldest slot clears the
+    1.25 margin and is admitted."""
+    src = HashedFeatures(N, F, seed=0)
+    hotness = np.zeros(N)
+    hotness[:20] = 1.0
+    cache = FeatureCache(src, hotness, 20)
+    cache.track_hotness = True
+    assert cache.refresh_hysteresis == 1.25          # the documented default
+    cached = np.arange(20, dtype=np.int64)
+    cache.lookup(np.repeat(cached, 4))               # every slot at 4
+    cache.lookup(np.repeat(np.int64(250), 8))        # uncached id at 8 = 2x
+    assert cache.refresh() == 1
+    assert cache.slot_of[250] >= 0
+    _consistent_inverse(cache)
+
+
+def test_hysteresis_respects_commit_time_revalidation():
+    """A victim that heats past the margin while the staged gather runs
+    is spared at commit: the pair is re-validated against commit-time
+    counters."""
+    src = HashedFeatures(N, F, seed=0)
+    hotness = np.zeros(N)
+    hotness[:10] = 1.0
+    cache = FeatureCache(src, hotness, 10)
+    cache.track_hotness = True
+    cache.lookup(np.repeat(np.arange(10, dtype=np.int64), 2))   # slots at 2
+    cache.lookup(np.repeat(np.int64(250), 8))        # candidate at 8 (4x)
+    assert cache.stage() == 1
+    # between stage and commit the victim (coldest slot) reheats hard
+    victim_slot = int(np.argmin(cache.slot_hotness()))
+    victim_id = int(cache.cached_ids[victim_slot])
+    cache.lookup(np.repeat(np.int64(victim_id), 50))
+    assert cache.commit() == 0                       # pair no longer valid
+    assert cache.slot_of[250] < 0
+
+
 # ------------------------------------- versioned in-flight consistency
 
 
@@ -372,6 +542,84 @@ def test_hotness_tracking_gated_on_refresh_knob():
     assert tr.cache._node_hot is None
     assert tr.cache.refresh() == 0               # nothing tracked, no swaps
     tr.loader.close()
+
+
+# --------------------------------------------- async (staged) refresh path
+
+
+def test_async_refresh_trainer_bit_identical_and_commits():
+    """async_refresh=True under constant drift pressure: the staged
+    gather runs off the critical path, commits land at later iteration
+    boundaries, and losses stay bit-identical to sync refresh AND to
+    refresh off (the versioned-lookup guarantee)."""
+    ds, g = _small_ds()
+
+    def run(refresh, asynchronous):
+        hcfg = HybridConfig(total_batch=128, n_accel=2, hybrid=False,
+                            use_drm=False, tfp_depth=2, seed=0,
+                            use_accel_sampler=False, cache_fraction=0.2,
+                            cache_refresh=refresh,
+                            cache_drift_threshold=0.0,
+                            async_refresh=asynchronous)
+        tr = HybridGNNTrainer(ds, g, hcfg)
+        tr.train(8)
+        tr.close()
+        return tr
+
+    off = run(False, False)
+    sync = run(True, False)
+    asy = run(True, True)
+    l_off = [m.loss for m in off.history]
+    assert np.array_equal(l_off, [m.loss for m in sync.history])
+    assert np.array_equal(l_off, [m.loss for m in asy.history])
+    # the async path genuinely staged + committed (version advanced), one
+    # boundary later than the sync path at the earliest
+    assert asy.cache.version > 0
+    assert sync.cache.version >= asy.cache.version
+
+
+def test_async_refresh_stage_error_surfaces_at_next_boundary():
+    """A stage() gather that dies in the background thread (e.g. the
+    disk tier lost a blob) must raise at the next iteration boundary —
+    not vanish, not deadlock."""
+    ds, g = _small_ds()
+    hcfg = HybridConfig(total_batch=128, n_accel=2, hybrid=False,
+                        use_drm=False, tfp_depth=0, seed=0,
+                        use_accel_sampler=False, cache_fraction=0.2,
+                        cache_refresh=True, cache_drift_threshold=0.0,
+                        async_refresh=True)
+    tr = HybridGNNTrainer(ds, g, hcfg)
+    tr.train(2)                           # generate windowed traffic
+    # drain any stage the run itself left in flight
+    if tr._refresh_thread is not None:
+        tr._refresh_thread.join(10.0)
+        tr._maybe_refresh_cache()         # commits (or discards) it
+    assert tr._refresh_thread is None
+    # heat genuine admission candidates, then break the storage tier
+    cold = np.flatnonzero(tr.cache.slot_of < 0)[:64]
+    for _ in range(6):
+        tr.cache.lookup(np.repeat(cold, 4))
+
+    def bad_take(rows):
+        raise RuntimeError("spill blob gone")
+
+    tr.cache.source = type("Broken", (), {
+        "take": staticmethod(bad_take), "shape": tr.cache.source.shape,
+        "dtype": np.float32})()
+    from repro.graph import LoadStats
+    rb = tr.cache.row_bytes
+    tr.loader.window.merge(LoadStats(     # re-arm windowed traffic
+        rows=20, bytes=20 * rb, total_rows=100, unique_rows=80,
+        hit_rows=70, saved_bytes=70 * rb))
+    tr._model_hit_rate = 0.99             # force the drift signal
+    assert not tr._maybe_refresh_cache()  # kicks the failing stage thread
+    assert tr._refresh_thread is not None
+    tr._refresh_thread.join(10.0)
+    with pytest.raises(RuntimeError, match="async cache-refresh"):
+        tr._maybe_refresh_cache()
+    # the error is consumed: the subsequent boundary starts clean
+    assert tr._refresh_error is None and tr._refresh_thread is None
+    tr.close()
 
 
 def test_refresh_disabled_without_flag():

@@ -31,9 +31,17 @@ def test_pipeline_results_match_sequential(depth):
 
 def test_stage_timings_recorded():
     pipe = PrefetchPipeline(_stages(), depth=2)
+    names = {"sample", "load", "transfer"}
+    for it in pipe.run(_items(3)):
+        # service time per stage plus the queue-wait (starvation) stall
+        assert set(it.timings) == names | {n + "_wait" for n in names}
+        assert all(t >= 0 for t in it.timings.values())
+
+
+def test_sequential_mode_records_no_waits():
+    pipe = PrefetchPipeline(_stages(), depth=0)
     for it in pipe.run(_items(3)):
         assert set(it.timings) == {"sample", "load", "transfer"}
-        assert all(t >= 0 for t in it.timings.values())
 
 
 def test_pipeline_overlaps_stages():

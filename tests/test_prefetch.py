@@ -1,0 +1,501 @@
+"""Background storage-I/O subsystem: WindowPrefetcher unit + error-path
+tests (a failing prefetch thread must surface without deadlocking the
+pipeline feeder; close() idempotent under a half-drained queue), the
+Eq. 7 prefetch-overlap discount, trainer wiring of the prefetcher / LRU /
+stall stats, and the concurrency stress suite — forced interleavings of
+the prefetcher, staged-refresh commit() and the TFP stages across
+depths 1-3 and n_accel in {0, 1, 2}, asserting loss bit-identity and
+that mid-gather window evictions never corrupt an in-flight gather."""
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import HybridConfig, HybridGNNTrainer
+from repro.core.perfmodel import (PLATFORMS, WorkloadSpec,
+                                  initial_task_mapping, t_load)
+from repro.core.pipeline import PipelineItem, PrefetchPipeline, Stage
+from repro.graph import (DenseFeatures, GNNConfig, HashedFeatures,
+                         MmapFeatures, WindowPrefetcher, make_dataset)
+
+N, F, PROWS = 600, 32, 64
+
+
+def _mmap_pair(tmp_path, name="spill", lru=0):
+    hashed = HashedFeatures(N, F, seed=5)
+    dense = DenseFeatures(hashed.take(np.arange(N)))
+    mm = MmapFeatures.spill(hashed, spill_dir=str(tmp_path / name),
+                            partition_rows=PROWS, lru_windows=lru)
+    return dense, mm
+
+
+class _StubSource:
+    """Minimal prefetchable source for error/queue tests."""
+
+    shape = (N, F)
+
+    def __init__(self, delay=0.0, fail=False):
+        self.calls = 0
+        self.delay = delay
+        self.fail = fail
+
+    def prefetch_rows(self, rows):
+        self.calls += 1
+        if self.delay:
+            time.sleep(self.delay)
+        if self.fail:
+            raise RuntimeError("spill blob gone")
+
+
+# --------------------------------------------------------- prefetch basics
+
+
+def test_prefetcher_prefaults_and_gather_is_warm(tmp_path):
+    dense, mm = _mmap_pair(tmp_path)
+    rng = np.random.default_rng(0)
+    rows = rng.integers(0, N, 400).astype(np.int64)
+    pf = WindowPrefetcher(mm, max_queue=4)
+    assert pf.submit(rows)
+    assert pf.wait_idle(30.0)
+    assert pf.completed == 1
+    assert mm.prefetched_window_bytes > 0
+    cold0 = mm.cold_fault_page_bytes
+    out = mm.take(rows)
+    # every page the gather needed was pre-faulted: zero load-stage stall,
+    # and the bytes are identical to the dense reference
+    assert mm.cold_fault_page_bytes == cold0
+    assert mm.prefetch_hit_rate == 1.0
+    assert out.tobytes() == dense.take(rows).tobytes()
+    pf.close()
+
+
+def test_prefetcher_requires_prefetchable_source():
+    dense = DenseFeatures(np.zeros((8, 4), np.float32))
+    with pytest.raises(TypeError, match="prefetch_rows"):
+        WindowPrefetcher(dense)
+
+
+def test_prefetcher_full_queue_drops_not_blocks():
+    src = _StubSource(delay=0.2)
+    pf = WindowPrefetcher(src, max_queue=1)
+    rows = np.arange(4)
+    sent = [pf.submit(rows) for _ in range(8)]
+    # the first fills the worker, the second fills the queue; the rest
+    # must return False immediately instead of stalling the sample stage
+    assert sent[0] and not all(sent)
+    assert pf.dropped == sent.count(False) > 0
+    assert pf.wait_idle(30.0)
+    pf.close()
+
+
+# ----------------------------------------------------------- error paths
+
+
+def test_prefetcher_error_latches_and_raises_on_next_submit(tmp_path):
+    """A deleted spill blob mid-run: the worker fails, keeps draining,
+    and the NEXT submit raises with the original error chained."""
+    _, mm = _mmap_pair(tmp_path, name="spill-err")
+    os.remove(os.path.join(mm.spill_dir, MmapFeatures._part_name(1)))
+    pf = WindowPrefetcher(mm, max_queue=4)
+    bad = np.arange(PROWS, 2 * PROWS, dtype=np.int64)   # partition 1
+    assert pf.submit(bad)
+    assert pf.wait_idle(30.0)
+    assert pf.error is not None
+    with pytest.raises(RuntimeError, match="prefetch worker failed"):
+        pf.submit(bad)
+    pf.close()                # still clean to shut down
+
+
+def test_prefetcher_error_surfaces_through_pipeline_without_deadlock():
+    """The trainer's sample stage submits to the prefetcher: after the
+    worker dies, the next run() surfaces the failure through the stage
+    protocol (feeder stops, no deadlock, pipeline reusable)."""
+    src = _StubSource(fail=True)
+    pf = WindowPrefetcher(src, max_queue=2)
+    produced = []
+
+    def gen(n):
+        for i in range(n):
+            produced.append(i)
+            yield PipelineItem(seq=i, payload=i)
+
+    def sample(item):
+        pf.submit(np.arange(4))
+        time.sleep(0.005)       # let the worker hit the failure
+        return item
+
+    pipe = PrefetchPipeline([Stage("sample", sample)], depth=2)
+    with pytest.raises(RuntimeError, match="prefetch worker failed"):
+        list(pipe.run(gen(100)))
+    assert len(produced) < 50   # feeder stopped consuming payloads
+    pf.close()
+    # a fresh prefetcher on a clean run works again
+    pf2 = WindowPrefetcher(_StubSource(), max_queue=2)
+
+    def sample2(item):
+        pf2.submit(np.arange(4))
+        return item
+
+    pipe2 = PrefetchPipeline([Stage("sample", sample2)], depth=2)
+    assert [it.seq for it in pipe2.run(
+        PipelineItem(seq=i, payload=i) for i in range(5))] == list(range(5))
+    pf2.close()
+
+
+def test_prefetcher_close_idempotent_under_half_drained_queue():
+    src = _StubSource(delay=0.1)
+    pf = WindowPrefetcher(src, max_queue=8)
+    for _ in range(6):
+        pf.submit(np.arange(4))
+    t0 = time.perf_counter()
+    pf.close()                  # queue half-drained: must not deadlock
+    pf.close()                  # idempotent
+    assert time.perf_counter() - t0 < 10.0
+    assert not pf._thread.is_alive()
+    assert not pf.submit(np.arange(4))    # closed: drop, don't enqueue
+
+
+def test_prefetcher_wait_idle_reports_completion():
+    src = _StubSource(delay=0.05)
+    pf = WindowPrefetcher(src, max_queue=4)
+    pf.submit(np.arange(4))
+    assert not pf.wait_idle(0.001)        # still working
+    assert pf.wait_idle(30.0)
+    assert pf.completed == pf.submitted == 1
+    pf.close()
+
+
+# ------------------------------------------------- Eq. 7 overlap discount
+
+
+def test_eq7_prefetch_overlap_discount():
+    host = PLATFORMS["epyc-7763"]
+    w = lambda ov, tier="disk": WorkloadSpec(
+        1024, (10, 5), (128, 256, 172), feature_tier=tier,
+        prefetch_overlap=ov)
+    t_off = t_load(w(0.0), host, 1)
+    t_half = t_load(w(0.5), host, 1)
+    t_full = t_load(w(1.0), host, 1)
+    t_ram = t_load(w(0.0, tier="ram"), host, 1)
+    # overlap=0 reproduces the plain disk pricing; more overlap strictly
+    # cheaper; full overlap leaves exactly the RAM-speed gather exposed
+    assert t_off > t_half > t_full
+    assert t_full == pytest.approx(t_ram)
+    # the RAM tier has no storage stream to hide: the knob is inert
+    assert t_load(w(1.0, tier="ram"), host, 1) == t_ram
+
+
+def test_mapping_accepts_prefetch_overlap():
+    host, accel = PLATFORMS["epyc-7763"], PLATFORMS["tpu-v5e"]
+    kw = dict(fanouts=(10, 5), layer_dims=(128, 256, 172),
+              feature_tier="disk")
+    m0 = initial_task_mapping(host, accel, 2, 1024, **kw)
+    m1 = initial_task_mapping(host, accel, 2, 1024, prefetch_overlap=1.0,
+                              **kw)
+    for m in (m0, m1):
+        assert m["cpu"] + 2 * m["accel_each"] <= 1024
+        assert m["accel_each"] >= 0 and m["cpu"] >= 0
+
+
+# --------------------------------------------------------- trainer wiring
+
+
+def _gnn(ds, fanouts=(4, 3)):
+    return GNNConfig(model="sage", layer_dims=ds.layer_dims,
+                     fanouts=fanouts, num_classes=ds.num_classes)
+
+
+def test_trainer_wires_background_io(tmp_path):
+    ds = make_dataset("ogbn-products", scale=0.002, seed=0,
+                      feature_backend="mmap",
+                      spill_dir=str(tmp_path / "spill"), partition_rows=512)
+    cfg = HybridConfig(total_batch=128, n_accel=2, hybrid=False,
+                       use_drm=False, tfp_depth=2, seed=0,
+                       use_accel_sampler=False, cache_fraction=0.2,
+                       prefetch_windows=2, mmap_lru_windows=4)
+    tr = HybridGNNTrainer(ds, _gnn(ds), cfg)
+    assert tr.prefetcher is not None
+    assert tr.loader.source.lru_windows == 4
+    assert tr.prefetch_overlap == 1.0
+    hist = tr.train(4)
+    assert all(np.isfinite(m.loss) for m in hist)
+    io = tr.storage_io()
+    assert io["prefetch_submitted"] > 0
+    assert io["open_windows"] <= 4
+    # the residual stall is DRM-visible (aggregate gather-thread seconds:
+    # a multi-threaded chunked gather can sum past the wall-clock t_load)
+    for m in hist:
+        assert m.times.t_load_stall >= 0.0
+    tr.close()
+    tr.close()                  # idempotent
+
+
+def test_trainer_without_mmap_has_no_prefetcher():
+    ds = make_dataset("ogbn-products", scale=0.002, seed=0,
+                      feature_backend="dense")
+    cfg = HybridConfig(total_batch=128, n_accel=1, hybrid=False,
+                       use_drm=False, tfp_depth=0, seed=0,
+                       use_accel_sampler=False, prefetch_windows=4,
+                       mmap_lru_windows=4)
+    tr = HybridGNNTrainer(ds, _gnn(ds), cfg)
+    assert tr.prefetcher is None
+    assert tr.prefetch_overlap == 0.0
+    assert tr.storage_io()["prefetched_window_bytes"] == 0.0
+    tr.close()
+
+
+def test_boot_and_refresh_gathers_excluded_from_stall_stats(tmp_path):
+    """Maintenance gathers — the cache boot block and staged-refresh
+    admission rows — are not load-stage traffic: they must not seed the
+    stall/prefetch-hit counters the task mapping re-prices on (the boot
+    gather touches EVERY window before training starts and would pin the
+    measured overlap near 0 forever)."""
+    from repro.graph import FeatureCache
+    ds = make_dataset("ogbn-products", scale=0.002, seed=0,
+                      feature_backend="mmap",
+                      spill_dir=str(tmp_path / "spill"), partition_rows=512)
+    cfg = HybridConfig(total_batch=128, n_accel=2, hybrid=False,
+                       use_drm=False, tfp_depth=0, seed=0,
+                       use_accel_sampler=False, cache_fraction=0.2,
+                       prefetch_windows=2, mmap_lru_windows=4)
+    tr = HybridGNNTrainer(ds, _gnn(ds), cfg)
+    src = tr.loader.source
+    assert src.prefetch_miss_windows == 0       # boot gather untracked
+    assert src.cold_fault_page_bytes == 0
+    assert src.cold_gather_seconds == 0.0
+    assert tr._measured_prefetch_overlap() == 1.0   # design estimate intact
+    tr.close()
+    # staged-refresh admission gathers are equally excluded
+    hashed = HashedFeatures(N, F, seed=5)
+    mm = MmapFeatures.spill(hashed, spill_dir=str(tmp_path / "spill2"),
+                            partition_rows=PROWS)
+    cache = FeatureCache(mm, np.arange(N, 0, -1, np.float64), 40)
+    cache.track_hotness = True
+    rng = np.random.default_rng(0)
+    for _ in range(4):
+        cache.lookup(rng.integers(100, N, 200).astype(np.int64))
+    before = (mm.cold_fault_page_bytes, mm.prefetch_miss_windows,
+              mm.cold_gather_seconds, mm.warm_gather_seconds)
+    assert cache.stage() > 0
+    assert cache.commit() > 0
+    assert (mm.cold_fault_page_bytes, mm.prefetch_miss_windows,
+            mm.cold_gather_seconds, mm.warm_gather_seconds) == before
+
+
+def test_prefetch_submits_cpu_full_frontier_and_accel_misses(tmp_path):
+    """The device cache only serves accelerator trainers: the CPU
+    trainer gathers its FULL frontier from the source, so the prefetch
+    submission must keep its cache-hit rows (they fault like any other
+    on the disk tier) and drop them only from accel frontiers."""
+    ds = make_dataset("ogbn-products", scale=0.002, seed=0,
+                      feature_backend="mmap",
+                      spill_dir=str(tmp_path / "spill"), partition_rows=512)
+    cfg = HybridConfig(total_batch=128, n_accel=1, hybrid=True,
+                       use_drm=False, tfp_depth=0, seed=0,
+                       use_accel_sampler=False, cache_fraction=0.2,
+                       prefetch_windows=2)
+    tr = HybridGNNTrainer(ds, _gnn(ds), cfg)
+    tr.runtime.assignment.cpu_batch = 64
+    tr.runtime.assignment.accel_batch = 64
+    got = []
+    tr.prefetcher.submit = lambda ids: got.append(np.asarray(ids))
+    item = tr._stage_sample(tr._make_payload(0))
+    parts = []
+    for name, mb in item.payload["minibatch"].items():
+        ids = np.unique(np.asarray(mb.frontier(2)))
+        if name != "cpu":
+            ids = ids[tr.cache.slot_of[ids] < 0]
+        parts.append(ids)
+    expect = np.unique(np.concatenate(parts))
+    assert len(got) == 1
+    assert np.array_equal(got[0], expect)
+    # the CPU frontier's cached hubs are in the submission
+    cpu_ids = np.unique(np.asarray(item.payload["minibatch"]["cpu"]
+                                   .frontier(2)))
+    cached_cpu = cpu_ids[tr.cache.slot_of[cpu_ids] >= 0]
+    assert cached_cpu.size > 0 and np.isin(cached_cpu, got[0]).all()
+    tr.close()
+
+
+def test_overlap_drift_alone_triggers_mapping_reprice(tmp_path):
+    """An underperforming prefetcher (measured overlap far from the
+    priced one) must re-price Eq. 7 even when the cache hit rate sits
+    rock-stable inside its drift threshold."""
+    from repro.graph import LoadStats
+    ds = make_dataset("ogbn-products", scale=0.002, seed=0,
+                      feature_backend="mmap",
+                      spill_dir=str(tmp_path / "spill"), partition_rows=512)
+    cfg = HybridConfig(total_batch=256, n_accel=2, hybrid=True,
+                       use_drm=False, tfp_depth=0, seed=0,
+                       use_accel_sampler=False, cache_fraction=0.2,
+                       prefetch_windows=2)
+    tr = HybridGNNTrainer(ds, _gnn(ds), cfg)
+    assert tr._model_prefetch_overlap == 1.0      # design-time estimate
+    rb = tr.cache.row_bytes
+    tr.loader.window.merge(LoadStats(
+        rows=10, bytes=10 * rb, total_rows=1000, unique_rows=1000,
+        hit_rows=500, saved_bytes=500 * rb))
+    tr._model_hit_rate = tr.loader.window.hit_rate   # zero hit drift
+    src = tr.loader.source
+    src.prefetch_miss_windows = 100               # every touch missed
+    assert tr._measured_prefetch_overlap() == 0.0
+    assert tr._maybe_refresh_mapping()            # overlap drift alone
+    assert tr._model_prefetch_overlap == 0.0      # re-priced + anchored
+    assert not tr._maybe_refresh_mapping()        # drift consumed
+    tr.close()
+
+
+def test_close_raises_latched_background_errors(tmp_path):
+    """A background failure that latches after the last chance to raise
+    in-line (final staged gather, final prefetch) must surface from
+    close(), once — not vanish."""
+    ds = make_dataset("ogbn-products", scale=0.002, seed=0,
+                      feature_backend="mmap",
+                      spill_dir=str(tmp_path / "spill"), partition_rows=512)
+    cfg = HybridConfig(total_batch=128, n_accel=2, hybrid=False,
+                       use_drm=False, tfp_depth=0, seed=0,
+                       use_accel_sampler=False, cache_fraction=0.2,
+                       cache_refresh=True, async_refresh=True,
+                       prefetch_windows=2)
+    tr = HybridGNNTrainer(ds, _gnn(ds), cfg)
+    tr._refresh_error = RuntimeError("late stage failure")
+    with pytest.raises(RuntimeError, match="async cache-refresh"):
+        tr.close()
+    tr.prefetcher.error = RuntimeError("late prefetch failure")
+    with pytest.raises(RuntimeError, match="prefetch worker failed"):
+        tr.close()
+    tr.close()                  # both latches raised: now idempotent
+
+
+# ------------------------------------------------- concurrency stress suite
+
+def _stress_ds():
+    # a fresh spill per trainer run: features are deterministic in the
+    # seed, so separate instantiations are bit-identical, while each
+    # trainer gets its OWN mmap window/LRU state — sharing one source
+    # across the compared runs would let warm state leak between them
+    return make_dataset("ogbn-products", scale=0.002, seed=0,
+                        feature_backend="mmap", partition_rows=512)
+
+
+def _stress_run(n_accel, depth, stressed, iters=3):
+    ds = _stress_ds()
+    cfg = HybridConfig(
+        total_batch=96, n_accel=n_accel, hybrid=(n_accel == 0),
+        use_drm=False, tfp_depth=depth, seed=0, use_accel_sampler=False,
+        cache_fraction=0.2,
+        cache_refresh=stressed, cache_drift_threshold=0.0,
+        async_refresh=stressed,
+        prefetch_windows=2 if stressed else 0,
+        mmap_lru_windows=3 if stressed else 0)
+    tr = HybridGNNTrainer(ds, _gnn(ds), cfg)
+    tr.train(iters)
+    losses = [m.loss for m in tr.history]
+    tr.close()
+    ds.features.close()
+    return losses, tr
+
+
+@pytest.mark.stress
+@pytest.mark.parametrize("n_accel", [0, 1, 2])
+@pytest.mark.parametrize("depth", [1, 2, 3])
+def test_stress_interleavings_bit_identical(n_accel, depth):
+    """The whole background-I/O subsystem racing the TFP pipeline —
+    window prefetcher + LRU evictions + async staged refresh commits at
+    iteration boundaries — must be bit-invisible: losses equal a vanilla
+    (everything off, depth 2) run at every depth and trainer mix.  The
+    baseline is depth-independent because payload generation is
+    sequential and the DRM is off; comparing stressed depths 1-3 against
+    it also pins that property."""
+    base, _ = _stress_run(n_accel, depth=2, stressed=False)
+    stressed, tr = _stress_run(n_accel, depth=depth, stressed=True)
+    assert np.array_equal(base, stressed), (n_accel, depth)
+    if n_accel > 0:
+        io = tr.storage_io()
+        assert io["prefetch_submitted"] > 0   # the race actually happened
+        assert io["open_windows"] <= 3
+
+
+@pytest.mark.stress
+def test_mid_gather_eviction_never_corrupts_inflight_gather(tmp_path):
+    """Hammer threads force LRU evictions (lru_windows=1) while reader
+    threads gather large cross-window requests: an eviction mid-gather
+    must only re-fault pages, never corrupt bytes."""
+    dense, mm = _mmap_pair(tmp_path, name="spill-race", lru=1)
+    rng = np.random.default_rng(7)
+    rows = [rng.integers(0, N, 500).astype(np.int64) for _ in range(4)]
+    truth = [dense.take(r).tobytes() for r in rows]
+    stop = threading.Event()
+    errors = []
+
+    def hammer():
+        i = 0
+        while not stop.is_set():
+            mm.take(np.array([(i * PROWS) % N], dtype=np.int64))
+            i += 1
+
+    def reader(idx):
+        try:
+            for _ in range(10):
+                if mm.take(rows[idx]).tobytes() != truth[idx]:
+                    errors.append(f"reader {idx} corrupted")
+                    return
+        except Exception as e:  # pragma: no cover - failure path
+            errors.append(repr(e))
+
+    threads = [threading.Thread(target=hammer) for _ in range(2)] + \
+        [threading.Thread(target=reader, args=(i,)) for i in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads[2:]:
+        t.join()
+    stop.set()
+    for t in threads[:2]:
+        t.join()
+    assert not errors, errors
+    assert mm.window_evictions > 0        # the race actually evicted
+
+
+@pytest.mark.stress
+def test_staged_commit_between_load_and_transfer_bit_identical():
+    """Force a staged-refresh commit() to land while TFP-prefetched
+    batches sit between _stage_load and _stage_transfer (with the window
+    prefetcher and LRU racing underneath): versioned lookups must keep
+    losses bit-identical to an undisturbed run."""
+    def run(force):
+        ds = _stress_ds()
+        cfg = HybridConfig(total_batch=96, n_accel=2, hybrid=False,
+                           use_drm=False, tfp_depth=2, seed=0,
+                           use_accel_sampler=False, cache_fraction=0.2,
+                           prefetch_windows=2, mmap_lru_windows=3)
+        tr = HybridGNNTrainer(ds, _gnn(ds), cfg)
+        if force:
+            orig = tr._stage_transfer
+            fired = []
+
+            def transfer(item):
+                if not fired and item.payload["iteration"] == 2:
+                    fired.append(True)
+                    tr.cache.track_hotness = True
+                    cold = np.flatnonzero(tr.cache.slot_of < 0)[:48]
+                    for _ in range(6):
+                        tr.cache.lookup(np.repeat(cold, 4))
+                    assert tr.cache.stage() > 0
+                    assert tr.cache.commit() > 0    # mid-flight commit
+                    tr.loader.reset_window()
+                return orig(item)
+
+            tr._stage_transfer = transfer
+        tr.train(6)
+        losses = [m.loss for m in tr.history]
+        ver = tr.cache.version
+        tr.close()
+        ds.features.close()
+        return losses, ver
+
+    base, _ = run(False)
+    forced, ver = run(True)
+    assert np.array_equal(base, forced)
+    assert ver > 0

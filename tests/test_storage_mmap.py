@@ -136,6 +136,146 @@ def test_madvise_random_on_window_open(sources):
     fresh.close()
 
 
+# ----------------------------------------------- window LRU + prefetch
+
+_LRU = None
+
+
+def _lru_sources():
+    global _LRU
+    if _LRU is None:
+        hashed = HashedFeatures(N, F, seed=3)
+        dense = DenseFeatures(hashed.take(np.arange(N)))
+        mm = MmapFeatures.spill(hashed, partition_rows=PROWS)
+        _LRU = (dense, mm)
+    return _LRU
+
+
+def _window_nbytes(mm, pid):
+    rows = min(mm.partition_rows, mm.shape[0] - pid * mm.partition_rows)
+    return rows * mm.shape[1] * mm.dtype.itemsize
+
+
+@given(st.integers(1, 5),
+       st.lists(st.integers(0, -(-N // PROWS) - 1), min_size=1,
+                max_size=60))
+@settings(max_examples=30, deadline=None)
+def test_window_lru_bound_order_and_accounting(k, pids):
+    """Window-LRU properties against an exact model: the open-window
+    count never exceeds ``lru_windows``, eviction order is LRU (the model
+    is an ordered dict with move-to-front-on-access), and
+    ``evicted_window_bytes`` accounting is exact (ragged last window
+    included)."""
+    dense, base = _lru_sources()
+    mm = MmapFeatures(base.spill_dir, lru_windows=k)
+    model: dict = {}            # insertion order == recency
+    expect_evicted = expect_count = 0
+    for pid in pids:
+        mm.take(np.array([pid * PROWS], dtype=np.int64))
+        model.pop(pid, None)
+        model[pid] = True
+        while len(model) > k:
+            old = next(iter(model))
+            del model[old]
+            expect_evicted += _window_nbytes(mm, old)
+            expect_count += 1
+        assert mm.open_windows == len(model) <= k
+        assert list(mm._parts) == list(model)       # exact LRU order
+    assert mm.evicted_window_bytes == expect_evicted
+    assert mm.window_evictions == expect_count
+    # re-opened (previously evicted) windows reproduce gathers bit-for-bit
+    rows = np.arange(0, N, 3, dtype=np.int64)
+    assert mm.take(rows).tobytes() == dense.take(rows).tobytes()
+    assert mm.open_windows <= max(k, 1)
+    mm.close()
+
+
+def test_window_lru_eviction_issues_dontneed(sources):
+    import mmap as mmap_mod
+    _, base = sources
+    mm = MmapFeatures(base.spill_dir, lru_windows=1)
+    for pid in range(3):
+        mm.take(np.array([pid * PROWS], dtype=np.int64))
+    assert mm.window_evictions == 2
+    if hasattr(mmap_mod, "MADV_DONTNEED"):
+        assert mm.madvise_dontneed_calls == 2
+    mm.close()
+
+
+def test_window_lru_tightened_after_open_trims_on_access(sources):
+    """Setting ``lru_windows`` after windows are already mapped (the
+    trainer wires the bound before the cache boot gather, but users can
+    tighten it any time) takes effect on the next access."""
+    _, base = sources
+    mm = MmapFeatures(base.spill_dir)
+    rows = np.arange(0, N, 7, dtype=np.int64)          # touches every window
+    mm.take(rows)
+    assert mm.open_windows == mm.num_partitions
+    mm.lru_windows = 2
+    mm.take(np.array([0], dtype=np.int64))
+    assert mm.open_windows <= 2
+    mm.close()
+
+
+def test_window_lru_zero_is_unbounded_legacy(sources):
+    _, base = sources
+    mm = MmapFeatures(base.spill_dir)                  # lru_windows=0
+    mm.take(np.arange(0, N, 7, dtype=np.int64))
+    assert mm.window_evictions == 0
+    assert mm.evicted_window_bytes == 0
+    assert mm.open_windows == mm.num_partitions
+    mm.close()
+
+
+def test_prefetch_rows_warms_pages_and_counters(sources):
+    dense, base = sources
+    mm = MmapFeatures(base.spill_dir, lru_windows=4)
+    rng = np.random.default_rng(11)
+    rows = np.unique(rng.integers(0, 2 * PROWS, 120)).astype(np.int64)
+    new = mm.prefetch_rows(rows)
+    assert new > 0 and mm.prefetched_window_bytes == new
+    cold0 = mm.cold_fault_page_bytes
+    out = mm.take(rows)
+    assert out.tobytes() == dense.take(rows).tobytes()
+    assert mm.cold_fault_page_bytes == cold0           # fully pre-faulted
+    assert mm.prefetch_hit_rate == 1.0
+    # an unprefetched window is a cold fault + prefetch miss
+    mm.take(np.array([3 * PROWS], dtype=np.int64))
+    assert mm.cold_fault_page_bytes > cold0
+    assert mm.prefetch_miss_windows == 1
+    # re-prefetching already-resident pages faults nothing new
+    assert mm.prefetch_rows(rows) == 0
+    mm.reset_prefetch_stats()
+    assert mm.prefetched_window_bytes == 0
+    assert mm.prefetch_hit_rate == 0.0
+    mm.close()
+
+
+def test_prefetch_rows_out_of_range_raises(sources):
+    _, base = sources
+    mm = MmapFeatures(base.spill_dir)
+    with pytest.raises(IndexError):
+        mm.prefetch_rows(np.array([N], dtype=np.int64))
+    mm.close()
+
+
+def test_eviction_makes_pages_cold_again(sources):
+    """An evicted window's pages were dropped: the next gather of the
+    same rows must account them cold again (and still be bit-correct)."""
+    dense, base = sources
+    mm = MmapFeatures(base.spill_dir, lru_windows=1)
+    rows = np.arange(8, dtype=np.int64)                 # window 0
+    mm.take(rows)
+    cold1 = mm.cold_fault_page_bytes
+    mm.take(rows)                                       # warm: no new cold
+    assert mm.cold_fault_page_bytes == cold1
+    mm.take(np.array([PROWS], dtype=np.int64))          # evicts window 0
+    out = mm.take(rows)                                 # re-fault: cold again
+    assert mm.cold_fault_page_bytes > cold1
+    assert out.tobytes() == dense.take(rows).tobytes()
+    mm.close()
+
+
 def test_owned_tempdir_spill_cleans_up_on_gc():
     mm = MmapFeatures.spill(HashedFeatures(64, 4, seed=0), partition_rows=16)
     spill = mm.spill_dir
