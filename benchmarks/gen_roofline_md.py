@@ -1,8 +1,12 @@
 """Generate the EXPERIMENTS.md §Roofline / §Dry-run markdown tables from
-dry-run JSON results.
+dry-run JSON results, plus the §Kernel overlap table from the
+``bench_kernel_overlap`` depth-sweep JSON (detected by shape: the
+dry-run files are lists, ``BENCH_kernel_overlap.json`` is a dict with
+``combine``/``update`` sweeps).
 
     PYTHONPATH=src python -m benchmarks.gen_roofline_md \
-        dryrun_single.json dryrun_multi.json > roofline_tables.md
+        dryrun_single.json dryrun_multi.json BENCH_kernel_overlap.json \
+        > roofline_tables.md
 """
 from __future__ import annotations
 
@@ -47,11 +51,57 @@ def table(results, title):
     return "\n".join(out)
 
 
+def _overlap_rows(rows, kind):
+    out = [f"#### {kind} kernel", "",
+           "| config | dtype | depth | us | GB/s | roofline_frac | "
+           "VMEM scratch | == depth-1 | == oracle |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if kind == "combine":
+            cfg = (f"n={r['n']} f={r['f']} "
+                   f"tile {r['t_n']}x{r['t_f']}")
+        else:
+            cfg = (f"k={r['k']} f={r['f']} m={r['m']}"
+                   f"{' aliased' if r.get('aliased') else ''}")
+        d1 = r.get("bit_identical_vs_depth1")
+        out.append(
+            f"| {cfg} | {r['dtype']} | {r['depth']} | {r['us']:.1f} | "
+            f"{r['achieved_gbps']:.2f} | "
+            f"{r.get('roofline_fraction', 0.0):.3f} | "
+            f"{r['vmem_scratch_bytes']/1024:.0f} KiB | "
+            f"{'-' if d1 is None else ('Y' if d1 else 'N')} | "
+            f"{'Y' if r['bit_identical_vs_oracle'] else 'N'} |")
+    out.append("")
+    return out
+
+
+def overlap_table(res, title):
+    """§Kernel overlap: the bench_kernel_overlap depth sweep — wall time
+    and achieved bandwidth per (kernel x tile x feature width x dtype x
+    depth), with the bit-identity columns the tier-1 gate asserts."""
+    out = [f"### {title}", "",
+           f"Memory roofline (calibrated container): "
+           f"{res['roofline_mem_gbps']:.1f} GB/s; VMEM scratch budget "
+           f"{res['vmem_budget_bytes']/2**20:.0f} MiB.", ""]
+    out += _overlap_rows(res["combine"], "combine")
+    out += _overlap_rows(res["update"], "update")
+    if "e2e_loss_bit_identical" in res:
+        out.append(f"End-to-end trainer losses across pipeline depths "
+                   f"{res.get('e2e_depths')}: "
+                   f"{'bit-identical' if res['e2e_loss_bit_identical'] else 'DIVERGED'}.")
+        out.append("")
+    return "\n".join(out)
+
+
 def main():
     parts = []
     for path in sys.argv[1:]:
         with open(path) as f:
             results = json.load(f)
+        if isinstance(results, dict) and "combine" in results:
+            parts.append(overlap_table(results,
+                                       f"Kernel overlap — {path}"))
+            continue
         mesh = "x".join(str(m) for m in results[0]["mesh"])
         parts.append(table(results, f"mesh {mesh} ({results[0]['chips']} "
                            f"chips) — {path}"))

@@ -66,6 +66,23 @@ def main():
                          "partition windows while batch i trains, so the "
                          "load stage never blocks on cold disk reads "
                          "(0 = off; requires --feature-backend mmap)")
+    ap.add_argument("--prefetch-dedup-history", type=int, default=2,
+                    help="cross-batch prefetch dedup: the prefetcher "
+                         "remembers the last N submitted frontiers and "
+                         "strips already-warm rows from new submits, "
+                         "cutting background read volume by the "
+                         "cross-batch duplication factor (0 = off)")
+    ap.add_argument("--cache-assemble", default="auto",
+                    choices=["auto", "jnp", "pallas"],
+                    help="device-side cache+miss combine path: 'auto' "
+                         "picks pallas on TPU and jnp elsewhere; force "
+                         "'pallas' to exercise the (interpret-mode) "
+                         "kernels off-TPU, e.g. with a pipeline depth")
+    ap.add_argument("--kernel-pipeline-depth", type=int, default=1,
+                    help="Pallas combine/scatter DMA pipeline depth: 1 = "
+                         "single-buffered, 2-4 = multi-buffered "
+                         "DMA/compute overlap (output stays "
+                         "bit-identical at every depth)")
     ap.add_argument("--mmap-lru-windows", type=int, default=0,
                     help="bound on simultaneously open mmap partition "
                          "windows: the LRU evicts with MADV_DONTNEED so "
@@ -105,8 +122,11 @@ def main():
                         cache_refresh_frac=args.cache_refresh_frac,
                         cache_refresh_decay=args.cache_refresh_decay,
                         cache_drift_threshold=args.cache_drift_threshold,
+                        cache_assemble=args.cache_assemble,
                         async_refresh=args.async_refresh,
                         prefetch_windows=args.prefetch_windows,
+                        prefetch_dedup_history=args.prefetch_dedup_history,
+                        kernel_pipeline_depth=args.kernel_pipeline_depth,
                         mmap_lru_windows=args.mmap_lru_windows,
                         ckpt_every=50 if args.ckpt_dir else 0)
     tr = HybridGNNTrainer(ds, gnn, hcfg)
@@ -149,6 +169,10 @@ def main():
               f"({io['prefetched_window_bytes']/1e6:.1f} MB pre-faulted), "
               f"evicted {io['evicted_window_bytes']/1e6:.1f} MB over "
               f"{io['window_evictions']:.0f} window evictions")
+        if "resubmitted_rows_skipped" in io:
+            print(f"prefetch dedup: "
+                  f"{io['resubmitted_rows_skipped']:.0f} already-warm rows "
+                  f"stripped from resubmits")
     if tr._failed:
         print(f"survived failures: {sorted(tr._failed)}")
     tr.close()

@@ -13,7 +13,13 @@
 #  * background I/O (~60 s): window-prefetch on/off disk-tier sweep —
 #    prefetch on must show strictly lower load-stage stall, page-cache
 #    residency stays under the window-LRU bound, and trainer losses are
-#    bit-identical across the {prefetch, async_refresh} 4-config matrix.
+#    bit-identical across the {prefetch, async_refresh} 4-config matrix,
+#  * kernel overlap (~60 s): pipelined (multi-buffered DMA) combine and
+#    scatter-update kernels at depths 2/4 bit-identical to the
+#    single-buffered depth-1 path and the jnp oracles (f32 + bf16,
+#    aliased slots), VMEM scratch within budget, no-worse wall time on
+#    interpret-mode CPU, and e2e trainer losses bit-identical across
+#    pipeline depths.
 #
 #   ./scripts/tier1.sh            # everything
 #   ./scripts/tier1.sh --fast     # skip the 'slow' subprocess-compile tests
@@ -32,4 +38,5 @@ python -m benchmarks.fig_cache_ablation --smoke
 python -m benchmarks.fig_cache_ablation --smoke-refresh
 python -m benchmarks.bench_outofcore --smoke
 python -m benchmarks.bench_outofcore --smoke-prefetch
+python -m benchmarks.bench_kernel_overlap --smoke
 echo "tier1: OK"

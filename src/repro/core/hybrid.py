@@ -110,6 +110,10 @@ class HybridConfig:
     feature_dtype: str = "float32"    # transfer-path compression ("bfloat16")
     cache_fraction: float = 0.0       # device hot-feature cache (0 = off)
     cache_assemble: str = "auto"      # "auto" | "jnp" | "pallas" combine path
+    kernel_pipeline_depth: int = 1    # Pallas combine/scatter DMA pipeline
+                                      #   depth: 1 = single-buffered, 2..4 =
+                                      #   multi-buffered DMA/compute overlap
+                                      #   (bit-identical output either way)
     cache_refresh: bool = False       # dynamic cache refresh (DistDGL-style
                                       #   admission on the drift signal)
     cache_refresh_frac: float = 0.25  # max fraction of slots swapped per
@@ -132,6 +136,10 @@ class HybridConfig:
                                       #   windows are warm when the load
                                       #   stage gathers (0 = off; needs the
                                       #   mmap feature backend)
+    prefetch_dedup_history: int = 2   # cross-batch prefetch dedup: remember
+                                      #   the last N submitted frontiers and
+                                      #   strip already-warm rows from new
+                                      #   submits (0 = off)
     mmap_lru_windows: int = 0         # bound on simultaneously open mmap
                                       #   windows; LRU eviction issues
                                       #   MADV_DONTNEED so page-cache use
@@ -223,7 +231,8 @@ class HybridGNNTrainer:
         self.prefetcher: Optional[WindowPrefetcher] = None
         if cfg.prefetch_windows > 0 and hasattr(src, "prefetch_rows"):
             self.prefetcher = WindowPrefetcher(
-                src, max_queue=cfg.prefetch_windows)
+                src, max_queue=cfg.prefetch_windows,
+                dedup_history=cfg.prefetch_dedup_history)
 
         # --- feature store: device hot cache + dedup/miss-only loader --------
         self.cache = build_cache(dataset, cfg.cache_fraction,
@@ -251,6 +260,7 @@ class HybridGNNTrainer:
                                      and jax.default_backend() == "tpu"))
         if self.cache is not None:
             self.cache.use_pallas_update = self._assemble_pallas
+            self.cache.kernel_pipeline_depth = cfg.kernel_pipeline_depth
             # hotness tracking costs two scattered adds per lookup and a
             # 4 B/node estimate array: only pay it when the refresh policy
             # will consume it
@@ -487,7 +497,9 @@ class HybridGNNTrainer:
         # DMA schedule from them before they ever reach the device
         return assemble_features(cache_data, miss, look.slots,
                                  look.miss_index,
-                                 use_pallas=self._assemble_pallas)
+                                 use_pallas=self._assemble_pallas,
+                                 pipeline_depth=self.cfg
+                                 .kernel_pipeline_depth)
 
     def _accel_device(self, name: str):
         """Device of accelerator trainer ``name`` ("accelN" -> ordinal N).
@@ -874,6 +886,8 @@ class HybridGNNTrainer:
             "evicted_window_bytes":
                 float(getattr(src, "evicted_window_bytes", 0)),
             "window_evictions": float(getattr(src, "window_evictions", 0)),
+            "pin_blocked_evictions":
+                float(getattr(src, "pin_blocked_evictions", 0)),
             "open_windows": float(getattr(src, "open_windows", 0)),
             "prefetch_hit_rate":
                 float(getattr(src, "prefetch_hit_rate", 0.0)),
@@ -882,6 +896,8 @@ class HybridGNNTrainer:
             out["prefetch_submitted"] = float(self.prefetcher.submitted)
             out["prefetch_completed"] = float(self.prefetcher.completed)
             out["prefetch_dropped"] = float(self.prefetcher.dropped)
+            out["resubmitted_rows_skipped"] = float(
+                self.prefetcher.resubmitted_rows_skipped)
         return out
 
     def mean_mteps(self, skip: int = 2) -> float:

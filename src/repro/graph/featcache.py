@@ -268,6 +268,7 @@ class FeatureCache:
         self.version = 0
         self.keep_versions = 2           # trainer sizes this to tfp_depth+2
         self.use_pallas_update = False   # scatter-update kernel dispatch
+        self.kernel_pipeline_depth = 1   # >1: multi-buffered scatter DMAs
         self.refresh_decay = float(refresh_decay)
         self.max_refresh_frac = float(max_refresh_frac)
         # admission hysteresis: a candidate must be hotter than its victim
@@ -588,7 +589,8 @@ class FeatureCache:
                         self._device_data[(dev_key, new_ver)] = \
                             update_cache_rows(
                                 cur, jax.device_put(rows, dev), slots32,
-                                use_pallas=self.use_pallas_update)
+                                use_pallas=self.use_pallas_update,
+                                pipeline_depth=self.kernel_pipeline_depth)
                 self.slot_of = new_slot_of
                 self.cached_ids = new_cached
                 self._host_rows = new_host

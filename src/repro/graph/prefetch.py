@@ -16,6 +16,15 @@ exposing ``prefetch_rows`` (the out-of-core ``MmapFeatures``) and:
     and lossy by design: a full queue drops the request (``dropped``
     counter) rather than ever stalling the sample stage — prefetch is
     advisory, the consumer's gather is always correct without it.
+  * cross-batch dedup (``dedup_history > 0``): consecutive frontiers
+    overlap heavily (hub nodes recur in nearly every batch), so the
+    prefetcher remembers the ids of the last few submits and strips
+    already-warm rows from each new one before it reaches the worker —
+    the background read volume drops by the cross-batch duplication
+    factor.  ``resubmitted_rows_skipped`` counts the stripped rows.  The
+    memory is advisory like everything else here: any LRU eviction on
+    the source invalidates the warm assumption, so the history clears
+    whenever ``source.window_evictions`` moves.
   * the worker thread drains the queue calling
     ``source.prefetch_rows`` (a readahead gather of exactly the rows a
     future ``take`` will touch).
@@ -35,6 +44,7 @@ it — overlapping is the whole point).
 """
 from __future__ import annotations
 
+import collections
 import queue
 import threading
 from typing import Optional
@@ -50,6 +60,7 @@ class WindowPrefetcher:
     """Background thread pre-faulting partition windows for future gathers."""
 
     def __init__(self, source, max_queue: int = 4,
+                 dedup_history: int = 0,
                  name: str = "window-prefetch"):
         if not hasattr(source, "prefetch_rows"):
             raise TypeError(
@@ -65,6 +76,13 @@ class WindowPrefetcher:
         self.submitted = 0
         self.completed = 0
         self.dropped = 0               # queue-full discards (by design)
+        self.resubmitted_rows_skipped = 0   # cross-batch dedup strips
+        # last N successfully-submitted id sets (producer-side only:
+        # submit() is single-producer, so no lock is needed)
+        self._history: "collections.deque" = collections.deque(
+            maxlen=max(0, int(dedup_history)) or None)
+        self._dedup = int(dedup_history) > 0
+        self._evictions_seen = int(getattr(source, "window_evictions", 0))
         self._thread = threading.Thread(target=self._run, daemon=True,
                                         name=name)
         self._thread.start()
@@ -103,14 +121,38 @@ class WindowPrefetcher:
         if self._closed:
             return False
         rows = np.asarray(rows)
+        work = rows
+        if self._dedup:
+            # an eviction on the source means some remembered window is
+            # cold again — the whole memory is suspect, drop it
+            ev = int(getattr(self.source, "window_evictions", 0))
+            if ev != self._evictions_seen:
+                self._history.clear()
+                self._evictions_seen = ev
+            if self._history:
+                warm = np.concatenate(list(self._history))
+                work = rows[~np.isin(rows, warm)]
+                self.resubmitted_rows_skipped += rows.size - work.size
+            if work.size == 0:
+                # everything is already warm: the submit succeeded without
+                # touching the worker; refresh the rows' recency
+                self._history.append(rows)
+                self.submitted += 1
+                return True
         with self._cv:
             try:
-                self._q.put_nowait(rows)
+                self._q.put_nowait(work)
             except queue.Full:
                 self.dropped += 1
                 return False
             self._pending += 1
             self.submitted += 1
+        if self._dedup:
+            # remember the ORIGINAL ids (stripped rows are warm via an
+            # earlier entry, and this entry must keep them warm once that
+            # one ages out) — and only on enqueue: a dropped submit
+            # prefetches nothing, so it must not poison the memory
+            self._history.append(rows)
         return True
 
     def wait_idle(self, timeout: Optional[float] = None) -> bool:

@@ -276,6 +276,12 @@ class MmapFeatures:
         self._win_lock = threading.Lock()
         self.lru_windows = int(lru_windows)      # 0 = unbounded (legacy)
         self._prefetched: set = set()            # warm (prefetched) pids
+        # prefetch-pinned windows: prefetched but not yet gathered from.
+        # The LRU trim skips them so a tight lru_windows bound cannot
+        # throw away prefetch work before its consumer arrives; the pin
+        # releases on the first post-prefetch take() touching the window
+        self._pinned: set = set()
+        self.pin_blocked_evictions = 0           # trims blocked on pins
         self.spill_peak_buffered_rows = 0        # set by spill()
         self.madvise_calls = 0                   # windows hinted MADV_RANDOM
         self.madvise_dontneed_calls = 0          # evictions that dropped pages
@@ -469,6 +475,7 @@ class MmapFeatures:
         self.window_evictions += 1
         self.evicted_window_bytes += int(mm.nbytes)
         self._prefetched.discard(pid)
+        self._pinned.discard(pid)
         # the pages are gone: a future gather faults them cold again
         base = pid * self._pages_per_part
         self._page_touched[base:base + self._pages_per_part] = False
@@ -491,8 +498,16 @@ class MmapFeatures:
             # cache boot gather runs before the trainer sets the bound)
             if self.lru_windows > 0:
                 while len(self._parts) > self.lru_windows:
-                    old = next(iter(self._parts))   # LRU end
-                    if old == pid:                  # never evict the newcomer
+                    # LRU-ordered victim scan, skipping the newcomer and
+                    # prefetch-pinned windows (not-yet-consumed prefetch
+                    # work must survive even a bound == working-set size)
+                    old = next((p for p in self._parts
+                                if p != pid and p not in self._pinned),
+                               None)
+                    if old is None:
+                        # every candidate is pinned: run over-bound until
+                        # their gathers release them (counted, not silent)
+                        self.pin_blocked_evictions += 1
                         break
                     self._evict_window(old, self._parts[old])
             return mm
@@ -554,6 +569,7 @@ class MmapFeatures:
             with self._win_lock:
                 _, new = self._note_touch_window(pid, offset[sel])
                 self._prefetched.add(pid)
+                self._pinned.add(pid)
                 self.prefetched_window_bytes += new
             total_new += new
         return total_new
@@ -576,6 +592,9 @@ class MmapFeatures:
             with self._win_lock:
                 touched, fresh = self._note_touch_window(pid, offset[sel])
                 gather_pages += touched
+                # first post-prefetch gather: the prefetched data reached
+                # its consumer, the window is evictable again
+                self._pinned.discard(pid)
                 if not tracked:
                     continue
                 # stall accounting: pages nobody faulted before this
@@ -621,6 +640,7 @@ class MmapFeatures:
         with self._win_lock:
             self._parts.clear()
             self._prefetched.clear()
+            self._pinned.clear()
 
 
 def as_feature_source(features) -> "FeatureSource":

@@ -35,7 +35,28 @@ from jax.experimental.pallas import tpu as pltpu
 
 __all__ = ["segment_sum_kernel_call", "fused_update_kernel_call",
            "cache_combine_kernel_call", "cache_combine_tiled_kernel_call",
-           "cache_update_kernel_call"]
+           "cache_combine_pipelined_kernel_call",
+           "cache_update_kernel_call", "cache_update_pipelined_kernel_call",
+           "VMEM_SCRATCH_BUDGET_BYTES", "check_vmem_scratch"]
+
+
+# Multi-buffered kernels hold ``depth`` in-flight tile windows in VMEM
+# scratch.  Half of a 16 MB TPU VMEM is reserved for scratch; the other
+# half stays available to the pipeline machinery (output tiles, scalar
+# tables).  The budget is enforced at call time so a misconfigured
+# (depth, tile, feature-width) combination fails loudly instead of
+# spilling on a real device.
+VMEM_SCRATCH_BUDGET_BYTES = 8 * 1024 * 1024
+
+
+def check_vmem_scratch(nbytes: int, what: str) -> None:
+    """Raise when a pipelined kernel's scratch would not fit the VMEM
+    scratch budget (callers shrink depth or tile sizes instead)."""
+    if nbytes > VMEM_SCRATCH_BUDGET_BYTES:
+        raise ValueError(
+            f"{what}: {nbytes} B of VMEM scratch exceeds the "
+            f"{VMEM_SCRATCH_BUDGET_BYTES} B budget; lower pipeline_depth "
+            "or the tile sizes")
 
 
 # --------------------------------------------------------- segment sum only
@@ -314,3 +335,211 @@ def cache_combine_tiled_kernel_call(src: jax.Array, base: jax.Array,
         out_shape=jax.ShapeDtypeStruct((g * t_n, fp), src.dtype),
         interpret=interpret,
     )(base, local, src, src, src, src)
+
+
+# ------------------- multi-buffered pipelined combine (DMA/compute overlap)
+
+
+def _cache_combine_pipelined_kernel(base_ref, loc_ref, src_ref, o_ref,
+                                    win_ref, sem_ref, *, window: int,
+                                    t_f: int, depth: int, nf: int,
+                                    nsteps: int):
+    # Same math as _cache_combine_tiled_kernel, but the window DMAs are
+    # issued by hand: ``src`` stays in HBM (memory_space=ANY) and each
+    # grid step's 4W-row window is copied into one of ``depth`` VMEM
+    # scratch slots by an async copy started ``depth`` steps ahead.  The
+    # TPU grid runs steps sequentially, so while step s's one-hot matmul
+    # occupies the MXU the copy for step s+1..s+depth-1 is already in
+    # flight — the DMA latency the single-buffered kernel serializes
+    # before every tile is hidden behind the previous tiles' compute.
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    s = i * nf + j
+
+    def window_dma(step, slot):
+        ti = step // nf
+        tj = jax.lax.rem(step, nf)
+        return pltpu.make_async_copy(
+            src_ref.at[pl.ds(base_ref[ti] * window, 4 * window),
+                       pl.ds(tj * t_f, t_f)],
+            win_ref.at[slot], sem_ref.at[slot])
+
+    @pl.when(s == 0)
+    def _warmup():      # fill every slot before the first compute
+        for d in range(min(depth, nsteps)):
+            window_dma(jnp.int32(d), d).start()
+
+    slot = jax.lax.rem(s, depth)
+    window_dma(s, slot).wait()
+    loc = loc_ref[i]                                          # [T_N] int32
+    onehot = (loc[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (loc.shape[0], 4 * window), 1)).astype(jnp.float32)
+    o_ref[...] = jax.lax.dot(
+        onehot, win_ref[slot].astype(jnp.float32),
+        precision=jax.lax.Precision.HIGHEST).astype(o_ref.dtype)
+
+    @pl.when(s + depth < nsteps)
+    def _prefetch_next():   # the slot is free again: refill depth ahead
+        window_dma(s + depth, slot).start()
+
+
+def cache_combine_pipelined_kernel_call(src: jax.Array, base: jax.Array,
+                                        local: jax.Array,
+                                        t_n: int = 128, t_f: int = 128,
+                                        depth: int = 2,
+                                        interpret: bool = True) -> jax.Array:
+    """Multi-buffered tiled Feature-Duplicator expansion (paper §IV
+    two-stage prefetching applied *inside* the kernel).
+
+    Contract and output are identical to
+    ``cache_combine_tiled_kernel_call`` (bit-identical: the same one-hot
+    f32 MXU matmul over the same window values), but instead of four
+    BlockSpec-driven block DMAs serialized before each tile's compute,
+    ``depth`` (2-4) tile windows are held in VMEM scratch and tile
+    s+depth's HBM->VMEM copy is started as soon as its slot frees — i.e.
+    while tiles s+1..s+depth-1 still compute.  ``depth=1`` degenerates to
+    issue-wait-compute per tile; callers (ops.assemble_features) keep the
+    single-buffered kernel selectable for that.
+
+    src: [Sp, Fp] dense padded source (see cache_combine_tiled_kernel_call
+    for the window guarantees); base: int32 [G]; local: int32 [G, T_N]
+    -> out [G*T_N, Fp].
+    """
+    if depth < 1:
+        raise ValueError(f"pipeline depth must be >= 1, got {depth}")
+    g = base.shape[0]
+    fp = src.shape[1]
+    w = t_n
+    nf = fp // t_f
+    check_vmem_scratch(
+        depth * 4 * w * t_f * src.dtype.itemsize,
+        f"cache_combine_pipelined(depth={depth}, t_n={t_n}, t_f={t_f})")
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(g, nf),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],
+        out_specs=pl.BlockSpec((t_n, t_f), lambda i, j, b, loc: (i, j)),
+        scratch_shapes=[pltpu.VMEM((depth, 4 * w, t_f), src.dtype),
+                        pltpu.SemaphoreType.DMA((depth,))],
+    )
+    return pl.pallas_call(
+        functools.partial(_cache_combine_pipelined_kernel, window=w,
+                          t_f=t_f, depth=depth, nf=nf, nsteps=g * nf),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((g * t_n, fp), src.dtype),
+        interpret=interpret,
+    )(base, local, src)
+
+
+# ------------------ multi-buffered pipelined scatter update (refresh path)
+
+
+def _cache_update_pipelined_kernel(slots_ref, rows_ref, cache_ref, o_ref,
+                                   blk_ref, rd_sem, wr_sem, *, row_block: int,
+                                   t_f: int, depth: int, nf: int,
+                                   nsteps: int, m: int):
+    # The single-buffered scatter kernel moves one row per grid step:
+    # DMA in, DMA out, wait, repeat.  Here admitted rows are batched into
+    # ``row_block``-row block reads held in ``depth`` VMEM slots — block
+    # b+depth's read is in flight while block b's per-row write-back DMAs
+    # scatter into the aliased cache.  Callers guarantee ``slots`` are
+    # unique (ops.update_cache_rows dedupes keep-last on the host), so
+    # the write-backs of one block are mutually independent: start all,
+    # wait all, then the slot can be refilled.
+    bi = pl.program_id(0)
+    j = pl.program_id(1)
+    s = bi * nf + j
+
+    def block_read(step, slot):
+        tb = step // nf
+        tj = jax.lax.rem(step, nf)
+        return pltpu.make_async_copy(
+            rows_ref.at[pl.ds(tb * row_block, row_block),
+                        pl.ds(tj * t_f, t_f)],
+            blk_ref.at[slot], rd_sem.at[slot])
+
+    @pl.when(s == 0)
+    def _warmup():
+        for d in range(min(depth, nsteps)):
+            block_read(jnp.int32(d), d).start()
+
+    slot = jax.lax.rem(s, depth)
+    block_read(s, slot).wait()
+    for r in range(row_block):       # scatter the block's live rows
+
+        @pl.when(bi * row_block + r < m)
+        def _start_write():
+            pltpu.make_async_copy(
+                blk_ref.at[slot, pl.ds(r, 1), :],
+                o_ref.at[pl.ds(slots_ref[bi * row_block + r], 1),
+                         pl.ds(j * t_f, t_f)],
+                wr_sem.at[r]).start()
+
+    for r in range(row_block):       # block's writes drain before reuse
+
+        @pl.when(bi * row_block + r < m)
+        def _wait_write():
+            pltpu.make_async_copy(
+                blk_ref.at[slot, pl.ds(r, 1), :],
+                o_ref.at[pl.ds(slots_ref[bi * row_block + r], 1),
+                         pl.ds(j * t_f, t_f)],
+                wr_sem.at[r]).wait()
+
+    @pl.when(s + depth < nsteps)
+    def _prefetch_next():
+        block_read(s + depth, slot).start()
+
+
+def cache_update_pipelined_kernel_call(cache: jax.Array, rows: jax.Array,
+                                       slots: jax.Array, t_f: int = 128,
+                                       depth: int = 2, row_block: int = 8,
+                                       interpret: bool = True) -> jax.Array:
+    """Multi-buffered in-place scatter of admitted rows into the hot block.
+
+    Semantics match ``cache_update_kernel_call`` for *unique* slots
+    (``out = cache; out[slots[i]] = rows[i]``; callers pre-dedupe aliased
+    slots keep-last — ops.update_cache_rows does), but rows move as
+    ``row_block``-row block DMAs through ``depth`` VMEM slots: block
+    b+depth streams HBM->VMEM while block b's rows scatter VMEM->HBM into
+    the aliased cache, instead of one serialized row round-trip per grid
+    step.
+
+    cache: [K, Fp] (Fp % t_f == 0); rows: [Mp, Fp] with Mp a row_block
+    multiple padded past M = slots.shape[0] (pad rows are never written);
+    slots: int32 [M], unique -> out [K, Fp].
+    """
+    if depth < 1:
+        raise ValueError(f"pipeline depth must be >= 1, got {depth}")
+    m = slots.shape[0]
+    mp = rows.shape[0]
+    if mp % row_block != 0 or mp < m:
+        raise ValueError(
+            f"rows must be padded to the {row_block}-row block (got "
+            f"{mp} rows for {m} slots)")
+    fp = cache.shape[1]
+    nf = fp // t_f
+    nb = mp // row_block
+    check_vmem_scratch(
+        depth * row_block * t_f * cache.dtype.itemsize,
+        f"cache_update_pipelined(depth={depth}, row_block={row_block}, "
+        f"t_f={t_f})")
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb, nf),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY),
+                  pl.BlockSpec(memory_space=pltpu.ANY)],
+        out_specs=pl.BlockSpec(memory_space=pltpu.ANY),
+        scratch_shapes=[pltpu.VMEM((depth, row_block, t_f), cache.dtype),
+                        pltpu.SemaphoreType.DMA((depth,)),
+                        pltpu.SemaphoreType.DMA((row_block,))],
+    )
+    return pl.pallas_call(
+        functools.partial(_cache_update_pipelined_kernel,
+                          row_block=row_block, t_f=t_f, depth=depth,
+                          nf=nf, nsteps=nb * nf, m=m),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(cache.shape, cache.dtype),
+        # operand order is (slots, rows, cache): alias cache -> output
+        input_output_aliases={2: 0},
+        interpret=interpret,
+    )(slots, rows, cache)

@@ -20,8 +20,10 @@ import numpy as np
 from . import ref
 from .flash_attention import flash_attention_call
 from .gather_scatter_mm import (cache_combine_kernel_call,
+                                cache_combine_pipelined_kernel_call,
                                 cache_combine_tiled_kernel_call,
                                 cache_update_kernel_call,
+                                cache_update_pipelined_kernel_call,
                                 fused_update_kernel_call,
                                 segment_sum_kernel_call)
 
@@ -44,8 +46,8 @@ def _pick_tile(dim: int, pref: int = 128, floor: int = 8) -> int:
 
 
 def assemble_features(cache: Optional[jax.Array], miss: jax.Array,
-                      slots, miss_index, use_pallas: bool = False
-                      ) -> jax.Array:
+                      slots, miss_index, use_pallas: bool = False,
+                      pipeline_depth: int = 1) -> jax.Array:
     """Assemble the dense positional layer-0 feature block from the
     device-resident hot cache + the transferred unique-miss rows (see
     graph/featcache.py).  Under frontier dedup the index tables point many
@@ -66,12 +68,19 @@ def assemble_features(cache: Optional[jax.Array], miss: jax.Array,
     real TPU path); the default jnp path (XLA gather + select) is faster
     under interpret mode on CPU, where each Pallas grid step runs in
     Python.
+
+    ``pipeline_depth`` (Pallas path only) selects how many tile windows
+    the combine kernel keeps in flight: 1 = the single-buffered
+    BlockSpec-driven kernel (DMAs serialized before each tile's compute),
+    2-4 = the multi-buffered kernel that overlaps tile i+1's window copy
+    with tile i's MXU expansion.  All depths are bit-identical.
     """
     if not use_pallas:
         return _assemble_ref(cache, miss, jnp.asarray(slots),
                              jnp.asarray(miss_index))
     return _assemble_tiled(cache, miss, np.asarray(slots),
-                           np.asarray(miss_index))
+                           np.asarray(miss_index),
+                           depth=int(pipeline_depth))
 
 
 @jax.jit
@@ -86,7 +95,8 @@ def _assemble_ref(cache: Optional[jax.Array], miss: jax.Array,
 
 
 def _assemble_tiled(cache: Optional[jax.Array], miss: jax.Array,
-                    slots: np.ndarray, miss_index: np.ndarray) -> jax.Array:
+                    slots: np.ndarray, miss_index: np.ndarray,
+                    depth: int = 1) -> jax.Array:
     """Host-side sort-by-source-row schedule for the tiled combine kernel.
 
     The positional gather is recast as a *dense-rank expansion*: the
@@ -139,12 +149,13 @@ def _assemble_tiled(cache: Optional[jax.Array], miss: jax.Array,
     inv = np.empty(n, np.int32)     # permutation inverse via O(N) scatter
     inv[order] = np.arange(n, dtype=np.int32)
     return _assemble_tiled_device(cache, miss, hit_table, miss_table, base,
-                                  local, inv, w=w, t_f=t_f)
+                                  local, inv, w=w, t_f=t_f, depth=depth)
 
 
-@functools.partial(jax.jit, static_argnames=("w", "t_f"))
+@functools.partial(jax.jit, static_argnames=("w", "t_f", "depth"))
 def _assemble_tiled_device(cache, miss, hit_table, miss_table, base,
-                           local, inv, w: int, t_f: int) -> jax.Array:
+                           local, inv, w: int, t_f: int,
+                           depth: int = 1) -> jax.Array:
     f = miss.shape[1]
     if cache is None:
         compact = jnp.zeros((0, f), miss.dtype)
@@ -157,16 +168,22 @@ def _assemble_tiled_device(cache, miss, hit_table, miss_table, base,
     sp = _round_up(int(src.shape[0]), w) + 4 * w
     fp = _round_up(f, t_f)
     src = jnp.pad(src, ((0, sp - src.shape[0]), (0, fp - f)))
-    out = cache_combine_tiled_kernel_call(src, base, local, t_n=w, t_f=t_f,
-                                          interpret=_INTERPRET)
+    if depth > 1:
+        out = cache_combine_pipelined_kernel_call(
+            src, base, local, t_n=w, t_f=t_f, depth=depth,
+            interpret=_INTERPRET)
+    else:
+        out = cache_combine_tiled_kernel_call(src, base, local, t_n=w,
+                                              t_f=t_f, interpret=_INTERPRET)
     return jnp.take(out, inv, axis=0)[:, :f]
 
 
 def update_cache_rows(cache: jax.Array, rows, slots,
-                      use_pallas: bool = False) -> jax.Array:
+                      use_pallas: bool = False,
+                      pipeline_depth: int = 1) -> jax.Array:
     """Scatter admitted rows into a device-resident hot block during a
     dynamic cache refresh: ``out = cache; out[slots[i]] = rows[i]`` (last
-    writer wins on aliased slots — both paths and the oracle agree).
+    writer wins on aliased slots — all paths and the oracle agree).
 
     ``rows``/``slots`` are accepted as host numpy (refresh builds them on
     the host); an empty update returns the input block unchanged so a
@@ -175,17 +192,28 @@ def update_cache_rows(cache: jax.Array, rows, slots,
     the output; the jnp path compacts aliased slots to their last writer
     on the host so its XLA scatter (duplicate-index order unspecified)
     stays deterministic.
+
+    ``pipeline_depth > 1`` (Pallas path only) batches the admitted rows
+    into multi-row block reads held in ``depth`` VMEM slots, overlapped
+    with the per-row aliased write-back.  The pipelined kernel's write
+    DMAs within a block are concurrent, so aliased slots are compacted
+    keep-last on the host first (same dedupe the jnp path needs) — the
+    result stays bit-identical to the sequential kernel and the oracle.
     """
     slots = np.asarray(slots, dtype=np.int32)
     if slots.shape[0] == 0:
         return cache
     rows = jnp.asarray(rows, dtype=cache.dtype)
-    if not use_pallas:
+    if not use_pallas or pipeline_depth > 1:
         # keep-last dedupe: unique() keeps the first occurrence, so scan
         # the reversed slot list and map indices back
         _, first_in_rev = np.unique(slots[::-1], return_index=True)
         keep = np.sort(slots.shape[0] - 1 - first_in_rev)
-        return _update_ref(cache, rows[keep], jnp.asarray(slots[keep]))
+        if not use_pallas:
+            return _update_ref(cache, rows[keep], jnp.asarray(slots[keep]))
+        return _update_pallas_pipelined(cache, rows[keep],
+                                        jnp.asarray(slots[keep]),
+                                        depth=int(pipeline_depth))
     return _update_pallas(cache, rows, jnp.asarray(slots))
 
 
@@ -205,6 +233,27 @@ def _update_pallas(cache: jax.Array, rows: jax.Array,
     rp = jnp.pad(rows, ((0, 0), (0, fp - f)))
     out = cache_update_kernel_call(cp, rp, slots, t_f=t_f,
                                    interpret=_INTERPRET)
+    return out[:, :f]
+
+
+_UPDATE_ROW_BLOCK = 8      # rows per block DMA in the pipelined scatter
+
+
+@functools.partial(jax.jit, static_argnames=("depth",))
+def _update_pallas_pipelined(cache: jax.Array, rows: jax.Array,
+                             slots: jax.Array, depth: int) -> jax.Array:
+    f = cache.shape[1]
+    t_f = _pick_tile(f)
+    fp = _round_up(f, t_f)
+    b = _UPDATE_ROW_BLOCK
+    mp = _round_up(rows.shape[0], b)
+    cp = jnp.pad(cache, ((0, 0), (0, fp - f)))
+    # pad rows up to the block multiple: pad rows stream through the block
+    # reads but are never written back (the kernel guards on the live count)
+    rp = jnp.pad(rows, ((0, mp - rows.shape[0]), (0, fp - f)))
+    out = cache_update_pipelined_kernel_call(cp, rp, slots, t_f=t_f,
+                                             depth=depth, row_block=b,
+                                             interpret=_INTERPRET)
     return out[:, :f]
 
 

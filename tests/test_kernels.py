@@ -141,6 +141,124 @@ def test_cache_update_empty_is_identity(use_pallas):
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
+# ------------------------- pipelined (multi-buffered DMA) kernel parity
+
+ASSEMBLE_CASES = [
+    # (cache_rows, feat_dim, n_positions, n_miss)
+    (64, 100, 130, 9),
+    (128, 128, 257, 33),    # ragged position tail
+    (17, 33, 41, 5),        # ragged rows/cols (padded F path)
+    (256, 64, 512, 48),
+]
+PIPELINE_DEPTHS = [1, 2, 3, 4]
+
+
+def _assemble_case(k, f, n, m, dtype, seed=0):
+    rng = np.random.default_rng(seed + k * 31 + n)
+    cache = jnp.asarray(rng.normal(size=(k, f)), jnp.float32).astype(dtype)
+    miss = jnp.asarray(rng.normal(size=(m, f)), jnp.float32).astype(dtype)
+    # slots drawn with replacement: many positions alias one cached row /
+    # one shipped miss row (the dedup fan-out the kernel exists for)
+    slots = rng.integers(-1, k, n).astype(np.int32)
+    miss_index = rng.integers(0, m, n).astype(np.int32)
+    return cache, miss, slots, miss_index
+
+
+@pytest.mark.parametrize("case", ASSEMBLE_CASES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_assemble_pipelined_matches_oracle_all_depths(case, dtype):
+    """The pipeline depth is a pure scheduling knob: every depth must
+    reproduce the jnp oracle AND the depth-1 kernel bit-for-bit (the
+    pipelined combine runs the same one-hot f32 matmul over the same
+    window values, just with the slab DMAs multi-buffered)."""
+    k, f, n, m = case
+    cache, miss, slots, miss_index = _assemble_case(k, f, n, m, dtype)
+    want = np.asarray(ref.assemble_features(
+        cache, miss, jnp.asarray(slots), jnp.asarray(miss_index)
+        ).astype(jnp.float32))
+    d1 = None
+    for depth in PIPELINE_DEPTHS:
+        got = np.asarray(ops.assemble_features(
+            cache, miss, slots, miss_index, use_pallas=True,
+            pipeline_depth=depth).astype(jnp.float32))
+        np.testing.assert_array_equal(got, want, err_msg=f"depth={depth}")
+        if d1 is None:
+            d1 = got
+        np.testing.assert_array_equal(got, d1, err_msg=f"depth={depth}")
+
+
+@pytest.mark.parametrize("case", UPDATE_CASES)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("depth", PIPELINE_DEPTHS[1:])
+def test_cache_update_pipelined_matches_oracle(case, dtype, depth):
+    """Pipelined scatter-update parity: slots drawn with replacement, so
+    aliased update sets exercise the host-side keep-last compaction the
+    concurrent write DMAs require — still bit-identical to the
+    sequential last-writer-wins oracle and the depth-1 kernel."""
+    k, f, m = case
+    rng = np.random.default_rng(k * 1000 + f)
+    cache = jnp.asarray(rng.normal(size=(k, f)), jnp.float32).astype(dtype)
+    rows = jnp.asarray(rng.normal(size=(m, f)), jnp.float32).astype(dtype)
+    slots = rng.integers(0, k, m).astype(np.int32)
+    want = ref.cache_update(cache, rows, jnp.asarray(slots))
+    d1 = ops.update_cache_rows(cache, np.asarray(rows), slots,
+                               use_pallas=True)
+    got = ops.update_cache_rows(cache, np.asarray(rows), slots,
+                                use_pallas=True, pipeline_depth=depth)
+    np.testing.assert_array_equal(np.asarray(got, np.float32),
+                                  np.asarray(want, np.float32))
+    np.testing.assert_array_equal(np.asarray(got, np.float32),
+                                  np.asarray(d1, np.float32))
+    assert got.dtype == cache.dtype
+
+
+@pytest.mark.parametrize("depth", PIPELINE_DEPTHS[1:])
+def test_cache_update_pipelined_all_aliased_one_slot(depth):
+    cache = jnp.zeros((6, 8), jnp.float32)
+    rows = jnp.arange(1, 5, dtype=jnp.float32)[:, None] * jnp.ones((4, 8))
+    slots = np.full(4, 3, np.int32)
+    got = np.asarray(ops.update_cache_rows(cache, np.asarray(rows), slots,
+                                           use_pallas=True,
+                                           pipeline_depth=depth))
+    assert np.all(got[3] == 4.0)
+    assert np.all(np.delete(got, 3, axis=0) == 0.0)
+
+
+def test_pipelined_kernels_reject_bad_depth():
+    from repro.kernels import gather_scatter_mm as gsm
+    src = jnp.zeros((512, 128), jnp.float32)
+    base = np.zeros(1, np.int32)
+    local = np.zeros((1, 128), np.int32)
+    with pytest.raises(ValueError, match="depth must be >= 1"):
+        gsm.cache_combine_pipelined_kernel_call(src, base, local, depth=0)
+    cache = jnp.zeros((8, 128), jnp.float32)
+    rows = jnp.zeros((8, 128), jnp.float32)
+    slots = jnp.arange(8, dtype=jnp.int32)
+    with pytest.raises(ValueError, match="depth must be >= 1"):
+        gsm.cache_update_pipelined_kernel_call(cache, rows, slots, depth=0)
+
+
+def test_vmem_scratch_budget():
+    """The depth-4 target window (128x128 f32 tiles, 4W-row slabs) must
+    fit the VMEM scratch budget; an over-budget request raises with the
+    knobs to turn, and the kernel entry point enforces it."""
+    from repro.kernels import gather_scatter_mm as gsm
+    # target window at depth 4: 4 slabs x (4*128 rows x 128 cols) x 4 B
+    target = 4 * 4 * 128 * 128 * 4
+    assert target <= gsm.VMEM_SCRATCH_BUDGET_BYTES
+    gsm.check_vmem_scratch(target, "combine depth=4")    # must not raise
+    with pytest.raises(ValueError, match="exceeds the"):
+        gsm.check_vmem_scratch(gsm.VMEM_SCRATCH_BUDGET_BYTES + 1, "probe")
+    # the combine entry point itself rejects an over-budget config:
+    # depth 33 x 4*128x128 f32 slabs = 8.25 MiB > 8 MiB
+    src = jnp.zeros((4 * 128 + 128, 128), jnp.float32)
+    base = np.zeros(1, np.int32)
+    local = np.zeros((1, 128), np.int32)
+    with pytest.raises(ValueError, match="exceeds the"):
+        gsm.cache_combine_pipelined_kernel_call(src, base, local,
+                                                t_n=128, t_f=128, depth=33)
+
+
 @pytest.mark.parametrize("shape", [(2, 32, 2, 2, 16), (1, 64, 1, 4, 32)])
 def test_flash_attention_matches_blocked(shape):
     from repro.models.layers import attention

@@ -40,9 +40,12 @@ class _StubSource:
         self.calls = 0
         self.delay = delay
         self.fail = fail
+        self.window_evictions = 0
+        self.seen = []                  # rows each worker call received
 
     def prefetch_rows(self, rows):
         self.calls += 1
+        self.seen.append(np.asarray(rows).copy())
         if self.delay:
             time.sleep(self.delay)
         if self.fail:
@@ -87,6 +90,116 @@ def test_prefetcher_full_queue_drops_not_blocks():
     assert sent[0] and not all(sent)
     assert pf.dropped == sent.count(False) > 0
     assert pf.wait_idle(30.0)
+    pf.close()
+
+
+# --------------------------------------------------- cross-batch dedup
+
+
+def test_dedup_strips_already_warm_rows():
+    """Consecutive frontiers overlap on hub nodes: with dedup on, a
+    resubmitted id must not reach the worker again while its submit is
+    in the history window."""
+    src = _StubSource()
+    pf = WindowPrefetcher(src, max_queue=4, dedup_history=2)
+    a = np.arange(0, 100)
+    b = np.arange(50, 150)          # 50 rows overlap with a
+    assert pf.submit(a) and pf.wait_idle(30.0)
+    assert pf.submit(b) and pf.wait_idle(30.0)
+    assert pf.resubmitted_rows_skipped == 50
+    assert np.array_equal(src.seen[0], a)
+    assert np.array_equal(src.seen[1], np.arange(100, 150))   # fresh only
+    # fully-warm submit: succeeds without touching the worker at all
+    assert pf.submit(np.arange(120, 140))
+    assert pf.wait_idle(30.0)
+    assert src.calls == 2
+    assert pf.resubmitted_rows_skipped == 70
+    pf.close()
+
+
+def test_dedup_history_window_ages_out():
+    """Only the last ``dedup_history`` submits stay warm: an id older
+    than the window is prefetched again."""
+    src = _StubSource()
+    pf = WindowPrefetcher(src, max_queue=4, dedup_history=1)
+    a, b = np.arange(0, 50), np.arange(50, 100)
+    for rows in (a, b, a):          # a has aged out by the third submit
+        assert pf.submit(rows) and pf.wait_idle(30.0)
+    assert src.calls == 3
+    assert np.array_equal(src.seen[2], a)
+    assert pf.resubmitted_rows_skipped == 0
+    pf.close()
+
+
+def test_dedup_history_clears_on_source_eviction():
+    """Any LRU eviction invalidates the warm assumption: the next submit
+    after ``window_evictions`` moves must prefetch everything again."""
+    src = _StubSource()
+    pf = WindowPrefetcher(src, max_queue=4, dedup_history=4)
+    rows = np.arange(0, 80)
+    assert pf.submit(rows) and pf.wait_idle(30.0)
+    src.window_evictions += 1       # an eviction landed on the source
+    assert pf.submit(rows) and pf.wait_idle(30.0)
+    assert src.calls == 2
+    assert np.array_equal(src.seen[1], rows)
+    assert pf.resubmitted_rows_skipped == 0
+    pf.close()
+
+
+def test_dedup_off_by_default():
+    src = _StubSource()
+    pf = WindowPrefetcher(src, max_queue=4)
+    rows = np.arange(0, 30)
+    assert pf.submit(rows) and pf.wait_idle(30.0)
+    assert pf.submit(rows) and pf.wait_idle(30.0)
+    assert src.calls == 2           # no dedup without the knob
+    assert pf.resubmitted_rows_skipped == 0
+    pf.close()
+
+
+def test_dropped_submit_leaves_no_warm_marks():
+    """A queue-full drop prefetches nothing, so it must not record its
+    rows as warm: the retry after the queue drains is worked in full."""
+    gate = threading.Event()
+
+    class _Gated(_StubSource):
+        def prefetch_rows(self, rows):
+            gate.wait(30.0)
+            _StubSource.prefetch_rows(self, rows)
+
+    src = _Gated()
+    pf = WindowPrefetcher(src, max_queue=1, dedup_history=4)
+    assert pf.submit(np.arange(0, 10))      # worker picks this up, blocks
+    for _ in range(500):                    # wait for the dequeue
+        if pf._q.empty():
+            break
+        time.sleep(0.01)
+    assert pf.submit(np.arange(10, 20))     # fills the queue
+    fresh = np.arange(100, 160)
+    assert not pf.submit(fresh)             # queue full: dropped
+    gate.set()
+    assert pf.wait_idle(30.0)
+    assert pf.submit(fresh)                 # no warm marks from the drop
+    assert pf.wait_idle(30.0)
+    assert any(np.array_equal(s, fresh) for s in src.seen)
+    pf.close()
+
+
+def test_dedup_real_mmap_cuts_prefetch_volume(tmp_path):
+    """On the real mmap tier: resubmitting an overlapping frontier with
+    dedup on faults no new pages for the warm rows and the gather stays
+    byte-identical."""
+    dense, mm = _mmap_pair(tmp_path, name="spill-dedup")
+    rng = np.random.default_rng(3)
+    a = rng.integers(0, N // 2, 200).astype(np.int64)
+    b = np.concatenate([a[:100], rng.integers(N // 2, N, 100)])
+    pf = WindowPrefetcher(mm, max_queue=4, dedup_history=2)
+    assert pf.submit(np.unique(a)) and pf.wait_idle(30.0)
+    assert pf.submit(np.unique(b)) and pf.wait_idle(30.0)
+    assert pf.resubmitted_rows_skipped > 0
+    out = mm.take(b)
+    assert out.tobytes() == dense.take(b).tobytes()
+    assert mm.prefetch_hit_rate == 1.0
     pf.close()
 
 
@@ -230,6 +343,27 @@ def test_trainer_wires_background_io(tmp_path):
         assert m.times.t_load_stall >= 0.0
     tr.close()
     tr.close()                  # idempotent
+
+
+def test_trainer_storage_io_exposes_dedup_and_pin_counters(tmp_path):
+    """The trainer threads prefetch_dedup_history into the prefetcher and
+    surfaces resubmitted_rows_skipped / pin_blocked_evictions through
+    storage_io(); consecutive frontiers share hubs, so the dedup counter
+    actually moves."""
+    ds = make_dataset("ogbn-products", scale=0.002, seed=0,
+                      feature_backend="mmap",
+                      spill_dir=str(tmp_path / "spill"), partition_rows=512)
+    cfg = HybridConfig(total_batch=128, n_accel=2, hybrid=False,
+                       use_drm=False, tfp_depth=2, seed=0,
+                       use_accel_sampler=False, prefetch_windows=2,
+                       prefetch_dedup_history=2)
+    tr = HybridGNNTrainer(ds, _gnn(ds), cfg)
+    hist = tr.train(4)
+    assert all(np.isfinite(m.loss) for m in hist)
+    io = tr.storage_io()
+    assert io["resubmitted_rows_skipped"] > 0
+    assert io["pin_blocked_evictions"] >= 0.0
+    tr.close()
 
 
 def test_trainer_without_mmap_has_no_prefetcher():

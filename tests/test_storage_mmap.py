@@ -276,6 +276,53 @@ def test_eviction_makes_pages_cold_again(sources):
     mm.close()
 
 
+def test_prefetch_pinned_window_survives_lru_pressure(sources):
+    """Regression at LRU bound == prefetched-working-set size: windows a
+    prefetch pre-faulted are pinned until their first post-prefetch
+    gather, so unrelated accesses squeezing the LRU cannot throw the
+    prefetch work away right before its consumer arrives.  The LRU runs
+    transiently over-bound instead (counted), and re-trims once the
+    gather releases the pins."""
+    dense, base = sources
+    mm = MmapFeatures(base.spill_dir, lru_windows=2)
+    rng = np.random.default_rng(5)
+    # the prefetched working set spans exactly lru_windows windows {0, 1}
+    rows = np.unique(rng.integers(0, 2 * PROWS, 100)).astype(np.int64)
+    mm.prefetch_rows(rows)
+    # unrelated accesses push past the bound: the unpinned newcomer is
+    # the only legal victim, the pinned prefetched windows must survive
+    mm.take(np.array([2 * PROWS], dtype=np.int64))
+    mm.take(np.array([3 * PROWS], dtype=np.int64))
+    assert 0 in mm._parts and 1 in mm._parts
+    assert mm.pin_blocked_evictions >= 1
+    assert mm.open_windows == 3                  # transiently over-bound
+    # the consumer's gather: zero cold faults (the pinned pages survived),
+    # bit-identical bytes, and the pins release
+    cold0 = mm.cold_fault_page_bytes
+    out = mm.take(rows)
+    assert out.tobytes() == dense.take(rows).tobytes()
+    assert mm.cold_fault_page_bytes == cold0
+    assert mm.prefetch_hit_windows >= 2
+    assert not mm._pinned
+    # with the pins gone the next access re-trims under the bound
+    mm.take(np.array([4 * PROWS], dtype=np.int64))
+    assert mm.open_windows <= 2
+    mm.close()
+
+
+def test_unpinned_eviction_order_unchanged(sources):
+    """Without a prefetch in flight the pin set is empty: eviction stays
+    plain LRU and the bound holds exactly (the pre-pinning contract)."""
+    _, base = sources
+    mm = MmapFeatures(base.spill_dir, lru_windows=2)
+    for pid in range(4):
+        mm.take(np.array([pid * PROWS], dtype=np.int64))
+        assert mm.open_windows <= 2
+    assert mm.window_evictions == 2
+    assert mm.pin_blocked_evictions == 0
+    mm.close()
+
+
 def test_owned_tempdir_spill_cleans_up_on_gc():
     mm = MmapFeatures.spill(HashedFeatures(64, 4, seed=0), partition_rows=16)
     spill = mm.spill_dir
