@@ -97,6 +97,19 @@ def main():
                          "lookups)")
     ap.add_argument("--inject-failure", type=int, default=0,
                     help="kill accel0 at this iteration (0 = off)")
+    ap.add_argument("--fault-schedule", default=None,
+                    help="JSON fault schedule for the data plane (a list "
+                         "of FaultSpec dicts or {'seed':..,'schedule':..}) "
+                         "— injects transient/permanent I/O errors, "
+                         "delays or worker kills at named hooks "
+                         "(storage.take, prefetch.worker, refresh.stage, "
+                         "pipeline.<stage>, ...); deterministic per-op "
+                         "call indexing makes every run replayable")
+    ap.add_argument("--pipeline-watchdog", type=float, default=0.0,
+                    help="TFP stage-stall watchdog (seconds): a pipeline "
+                         "stage wedged past this deadline raises a "
+                         "diagnostic PipelineStallError naming the stage "
+                         "and queue depths instead of hanging (0 = off)")
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args()
 
@@ -128,8 +141,15 @@ def main():
                         prefetch_dedup_history=args.prefetch_dedup_history,
                         kernel_pipeline_depth=args.kernel_pipeline_depth,
                         mmap_lru_windows=args.mmap_lru_windows,
+                        pipeline_watchdog_seconds=args.pipeline_watchdog,
                         ckpt_every=50 if args.ckpt_dir else 0)
-    tr = HybridGNNTrainer(ds, gnn, hcfg)
+    injector = None
+    if args.fault_schedule:
+        from repro.graph import FaultInjector
+        injector = FaultInjector.from_json(args.fault_schedule)
+        print(f"!! fault schedule armed: {len(injector.schedule)} specs "
+              f"(seed {injector.seed}) from {args.fault_schedule}")
+    tr = HybridGNNTrainer(ds, gnn, hcfg, fault_injector=injector)
     if args.ckpt_dir:
         mgr = CheckpointManager(args.ckpt_dir, keep=2)
         tr.set_checkpoint_callback(
@@ -175,6 +195,20 @@ def main():
                   f"stripped from resubmits")
     if tr._failed:
         print(f"survived failures: {sorted(tr._failed)}")
+    h = tr.health()
+    line = f"health: {h['status']}"
+    if h["events"]:
+        line += " — " + "; ".join(
+            f"{e['component']} (it {e['iteration']}): {e['action']}"
+            for e in h["events"])
+    st = h["components"].get("storage", {})
+    if st.get("io_errors") or st.get("fallback_gathers"):
+        line += (f" | storage: {st['io_errors']} I/O errors, "
+                 f"{st['io_retries']} retried, "
+                 f"{st['fallback_gathers']} fallback gathers")
+    print(line)
+    if injector is not None:
+        print(f"faults injected: {injector.report()}")
     tr.close()
 
 

@@ -21,19 +21,27 @@
 #    interpret-mode CPU, and e2e trainer losses bit-identical across
 #    pipeline depths.
 #
+#  * chaos suite (~30 s, hard 300 s timeout): deterministic fault
+#    injection against the whole trainer — transient storage faults with
+#    bit-identical losses, prefetcher death with graceful degradation,
+#    and the pipeline stage-watchdog.  Runs as its OWN step so a
+#    fault-handling regression that wedges cannot hang the main suite:
+#    the timeout converts a hang into a failure.
+#
 #   ./scripts/tier1.sh            # everything
 #   ./scripts/tier1.sh --fast     # skip the 'slow' subprocess-compile tests
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-MARK=()
+MARK=(-m "not chaos")
 if [[ "${1:-}" == "--fast" ]]; then
-    MARK=(-m "not slow")
+    MARK=(-m "not slow and not chaos")
 fi
 
 # ${MARK[@]+...} guards the empty-array expansion under `set -u` on bash < 4.4
 python -m pytest -x -q ${MARK[@]+"${MARK[@]}"}
+timeout 300 python -m pytest -x -q -m chaos
 python -m benchmarks.fig_cache_ablation --smoke
 python -m benchmarks.fig_cache_ablation --smoke-refresh
 python -m benchmarks.bench_outofcore --smoke

@@ -6,7 +6,8 @@ from .perfmodel import (PLATFORMS, PlatformSpec, StagePrediction,
                         WorkloadSpec, calibrate_sampling,
                         initial_task_mapping, mteps, predict,
                         predict_epoch_time)
-from .pipeline import PipelineItem, PrefetchPipeline, Stage
+from .pipeline import (PipelineItem, PipelineStallError, PrefetchPipeline,
+                       Stage)
 from .protocol import Runtime, Synchronizer, TrainerHandle
 from .hybrid import HybridConfig, HybridGNNTrainer, IterationMetrics
 
@@ -15,7 +16,7 @@ __all__ = [
     "PLATFORMS", "PlatformSpec", "StagePrediction", "WorkloadSpec",
     "calibrate_sampling", "initial_task_mapping", "mteps", "predict",
     "predict_epoch_time",
-    "PipelineItem", "PrefetchPipeline", "Stage",
+    "PipelineItem", "PipelineStallError", "PrefetchPipeline", "Stage",
     "Runtime", "Synchronizer", "TrainerHandle",
     "HybridConfig", "HybridGNNTrainer", "IterationMetrics",
 ]

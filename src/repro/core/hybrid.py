@@ -66,6 +66,26 @@ there.
 On this container all logical devices are CPU cores; the protocol, queues and
 measurements are identical to a real multi-accelerator host — device kind
 only changes the programming layer underneath (paper Section III-C).
+
+Failure model & degraded modes
+------------------------------
+
+With ``degrade_on_failure=True`` (default) the trainer survives permanent
+failures of its *advisory* background subsystems instead of dying
+mid-run: a prefetch worker dead past ``prefetch_restart_budget`` restarts
+stops being fed (loads degrade to synchronous cold gathers and the
+mapping's ``prefetch_overlap`` re-prices to 0 via the usual overlap-drift
+feedback); a failed refresh ``stage()`` discards its plan, keeps serving
+the old cache version and retries at the next drift boundary, until
+``refresh_failure_budget`` consecutive failures disable refresh for the
+run; the storage tier retries transient I/O and falls back to the spill's
+backing source for unreadable blobs (see ``graph/storage.py``).  Every
+degradation is recorded and surfaced through ``health()`` — never silent.
+``degrade_on_failure=False`` restores the legacy fail-fast raises.
+``pipeline_watchdog_seconds > 0`` converts a wedged TFP stage into a
+diagnostic ``PipelineStallError`` naming the stage and queue depths.
+Deterministic chaos testing injects faults at every one of these seams
+via the ``fault_injector`` constructor hook (``graph/faults.py``).
 """
 from __future__ import annotations
 
@@ -147,6 +167,21 @@ class HybridConfig:
                                       #   (0 = unbounded)
     dedup: bool = True                # ship unique rows only (False = legacy
                                       #   one-row-per-frontier-position)
+    degrade_on_failure: bool = True   # advisory background subsystems
+                                      #   (prefetcher, async refresh) degrade
+                                      #   on permanent failure instead of
+                                      #   killing the run; False = legacy
+                                      #   fail-fast raises
+    prefetch_restart_budget: int = 2  # background prefetch-worker respawns
+                                      #   (with backoff) before the
+                                      #   prefetcher is declared dead
+    refresh_failure_budget: int = 3   # consecutive refresh stage() failures
+                                      #   before dynamic refresh is disabled
+                                      #   for the rest of the run
+    pipeline_watchdog_seconds: float = 0.0  # TFP stage-stall watchdog: a
+                                      #   stage busy on one item past this
+                                      #   deadline raises PipelineStallError
+                                      #   instead of hanging (0 = off)
     lr: float = 1e-3
     share_quantum: int = 64
     drm_damping: float = 0.25
@@ -186,15 +221,21 @@ class _TrainerFailure(RuntimeError):
 
 class HybridGNNTrainer:
     def __init__(self, dataset: GraphDataset, gnn_cfg: GNNConfig,
-                 cfg: HybridConfig):
+                 cfg: HybridConfig, fault_injector=None):
         self.dataset = dataset
         self.gnn_cfg = gnn_cfg
         self.cfg = cfg
+        self.fault_injector = fault_injector
         self._rng = np.random.default_rng(cfg.seed)
         self._epoch_perm = self._rng.permutation(dataset.num_nodes)
         self._cursor = 0
         self._failed: set = set()
         self._fail_at: Dict[str, int] = {}
+        # degraded-mode record: component -> event dict, surfaced by
+        # health(); idempotent per component (first failure wins)
+        self._degraded: Dict[str, Dict[str, Any]] = {}
+        self._refresh_failures = 0        # consecutive stage() failures
+        self._refresh_disabled = False    # budget spent: refresh is off
 
         devices = jax.devices()
         self.cpu_device = devices[0]
@@ -228,11 +269,16 @@ class HybridGNNTrainer:
         src = dataset.feature_source
         if cfg.mmap_lru_windows > 0 and hasattr(src, "lru_windows"):
             src.lru_windows = int(cfg.mmap_lru_windows)
+        if fault_injector is not None and hasattr(src, "fault_injector"):
+            src.fault_injector = fault_injector
         self.prefetcher: Optional[WindowPrefetcher] = None
         if cfg.prefetch_windows > 0 and hasattr(src, "prefetch_rows"):
             self.prefetcher = WindowPrefetcher(
                 src, max_queue=cfg.prefetch_windows,
-                dedup_history=cfg.prefetch_dedup_history)
+                dedup_history=cfg.prefetch_dedup_history,
+                restart_budget=cfg.prefetch_restart_budget,
+                raise_on_failure=not cfg.degrade_on_failure,
+                fault_injector=fault_injector)
 
         # --- feature store: device hot cache + dedup/miss-only loader --------
         self.cache = build_cache(dataset, cfg.cache_fraction,
@@ -259,6 +305,8 @@ class HybridGNNTrainer:
                                  or (cfg.cache_assemble == "auto"
                                      and jax.default_backend() == "tpu"))
         if self.cache is not None:
+            if fault_injector is not None:
+                self.cache.fault_injector = fault_injector
             self.cache.use_pallas_update = self._assemble_pallas
             self.cache.kernel_pipeline_depth = cfg.kernel_pipeline_depth
             # hotness tracking costs two scattered adds per lookup and a
@@ -419,10 +467,15 @@ class HybridGNNTrainer:
         # minus rows the device cache will serve) to the window
         # prefetcher.  By the time _stage_load reaches this batch its
         # mmap windows are warm and the gather never blocks on cold disk
-        # reads.  submit() never blocks (full queue = drop); a failed
-        # prefetch worker raises here and surfaces through the pipeline's
-        # stage-failure protocol.
-        if self.prefetcher is not None and p["minibatch"]:
+        # reads.  submit() never blocks (full queue = drop).  Failure
+        # handling depends on degrade_on_failure: legacy fail-fast raises
+        # here (surfacing through the pipeline's stage-failure protocol);
+        # under degradation a worker that died past its restart budget
+        # just stops being fed — loads fall back to synchronous (cold)
+        # gathers, the overlap term re-prices to 0, and health() reports
+        # the component.
+        if (self.prefetcher is not None and p["minibatch"]
+                and not self.prefetcher.failed):
             depth = len(self.gnn_cfg.fanouts)
             parts = []
             for name, mb in p["minibatch"].items():
@@ -434,6 +487,14 @@ class HybridGNNTrainer:
                     ids = ids[self.cache.slot_of[ids] < 0]
                 parts.append(ids)
             self.prefetcher.submit(np.unique(np.concatenate(parts)))
+            if self.prefetcher.failed:
+                self._note_degraded(
+                    "prefetcher",
+                    self.prefetcher.errors[0] if self.prefetcher.errors
+                    else None,
+                    action="window prefetch disabled; loads run "
+                           "synchronously and prefetch_overlap re-prices "
+                           "to 0")
         return item
 
     def _stage_load(self, item: PipelineItem) -> PipelineItem:
@@ -607,6 +668,11 @@ class HybridGNNTrainer:
         to the design-time estimate before any disk-tier traffic)."""
         if self.prefetcher is None:
             return 0.0
+        if self.prefetcher.failed:
+            # a dead prefetcher hides nothing: every future disk touch is
+            # a cold fault, so the mapping must price the full storage
+            # penalty (this is what drives the re-price-to-0 on failure)
+            return 0.0
         src = self.loader.source
         touches = (getattr(src, "prefetch_hit_windows", 0)
                    + getattr(src, "prefetch_miss_windows", 0))
@@ -650,7 +716,8 @@ class HybridGNNTrainer:
         sees only post-refresh traffic.  Returns True when the refresh
         moved rows.
         """
-        if self.cache is None or not self.cfg.cache_refresh:
+        if self.cache is None or not self.cfg.cache_refresh \
+                or self._refresh_disabled:
             return False
         if self.cfg.async_refresh:
             return self._async_refresh_step()
@@ -661,9 +728,41 @@ class HybridGNNTrainer:
         if abs(measured - self._model_hit_rate) <= \
                 self.cfg.cache_drift_threshold:
             return False
-        swapped = self.cache.refresh()
+        try:
+            swapped = self.cache.refresh()
+        except Exception as e:
+            # degraded mode: keep serving the current cache version and
+            # retry at the next drift boundary (bounded by the budget)
+            self._handle_refresh_failure(e)
+            return False
+        self._refresh_failures = 0
         self._finish_refresh(swapped, measured, self._window_alpha(win))
         return swapped > 0
+
+    def _handle_refresh_failure(self, err: BaseException,
+                                context: Optional[str] = None) -> None:
+        """Shared refresh-failure protocol (sync and async paths): discard
+        any staged plan (the current cache version keeps serving), count
+        the consecutive failure, and either re-raise (legacy fail-fast,
+        ``degrade_on_failure=False``) or degrade — retry at the next
+        drift boundary until ``refresh_failure_budget`` consecutive
+        failures disable dynamic refresh for the rest of the run."""
+        self._refresh_failures += 1
+        if self.cache is not None:
+            self.cache.discard_staged()
+        if not self.cfg.degrade_on_failure:
+            if context is not None:
+                raise RuntimeError(context) from err
+            raise err
+        if self._refresh_failures >= self.cfg.refresh_failure_budget \
+                and not self._refresh_disabled:
+            self._refresh_disabled = True
+            self._note_degraded(
+                "refresh", err,
+                action=f"dynamic cache refresh disabled after "
+                       f"{self._refresh_failures} consecutive stage "
+                       f"failures; serving cache version "
+                       f"{self.cache.version if self.cache else 0}")
 
     def _finish_refresh(self, swapped: int, measured: float,
                         alpha: float) -> None:
@@ -713,11 +812,14 @@ class HybridGNNTrainer:
             self._refresh_thread = None
             if self._refresh_error is not None:
                 err, self._refresh_error = self._refresh_error, None
-                raise RuntimeError(
-                    "async cache-refresh stage() failed") from err
+                self._staged_feedback = None
+                self._handle_refresh_failure(
+                    err, context="async cache-refresh stage() failed")
+                return False
             measured, alpha = self._staged_feedback
             self._staged_feedback = None
             swapped = self.cache.commit()
+            self._refresh_failures = 0
             self._finish_refresh(swapped, measured, alpha)
             return swapped > 0
         win = self.loader.window
@@ -793,7 +895,10 @@ class HybridGNNTrainer:
         stages = [Stage("sample", self._stage_sample),
                   Stage("load", self._stage_load),
                   Stage("transfer", self._stage_transfer)]
-        pipe = PrefetchPipeline(stages, depth=self.cfg.tfp_depth)
+        pipe = PrefetchPipeline(
+            stages, depth=self.cfg.tfp_depth,
+            watchdog_seconds=self.cfg.pipeline_watchdog_seconds,
+            fault_injector=self.fault_injector)
         payloads = (self._make_payload(i) for i in range(num_iterations))
 
         for item in pipe.run(payloads):
@@ -841,20 +946,32 @@ class HybridGNNTrainer:
         """Surface latched background-I/O failures — a prefetch worker or
         an async ``stage()`` gather that died after its last chance to
         raise in-line (e.g. during the final iterations).  Called at the
-        end of ``train()`` and by ``close()`` so a broken storage tier
-        can never fail silently; each latch raises once."""
+        end of ``train()`` and by ``close()``.  Legacy fail-fast mode
+        raises (a broken storage tier must never fail silently); in
+        degraded mode (``degrade_on_failure=True``) the failures are
+        consumed into the ``health()`` record instead — the advisory
+        subsystems already degraded, the run is complete, and the state
+        is visible rather than fatal."""
         if self._refresh_error is not None and (
                 self._refresh_thread is None
                 or not self._refresh_thread.is_alive()):
             self._refresh_thread = None
             err, self._refresh_error = self._refresh_error, None
-            raise RuntimeError(
-                "async cache-refresh stage() failed") from err
+            self._handle_refresh_failure(
+                err, context="async cache-refresh stage() failed")
         if self.prefetcher is not None and self.prefetcher.error is not None:
-            err, self.prefetcher.error = self.prefetcher.error, None
-            raise RuntimeError(
-                "window prefetch worker failed; storage tier is broken"
-            ) from err
+            if not self.cfg.degrade_on_failure:
+                err, self.prefetcher.error = self.prefetcher.error, None
+                raise RuntimeError(
+                    "window prefetch worker failed; storage tier is broken"
+                ) from err
+            if self.prefetcher.failed:
+                self._note_degraded(
+                    "prefetcher",
+                    self.prefetcher.errors[0] if self.prefetcher.errors
+                    else self.prefetcher.error,
+                    action="window prefetch disabled; loads run "
+                           "synchronously")
 
     def close(self) -> None:
         """Release background resources (loader pool, window prefetcher,
@@ -870,6 +987,64 @@ class HybridGNNTrainer:
         self._raise_background_errors()
 
     # ------------------------------------------------------------- reporting
+
+    def _note_degraded(self, component: str,
+                       error: Optional[BaseException],
+                       action: str = "") -> None:
+        """Record one component's permanent degradation (idempotent: the
+        first failure per component wins).  The record feeds ``health()``
+        — degraded mode must be visible, never silent."""
+        if component in self._degraded:
+            return
+        self._degraded[component] = {
+            "component": component,
+            "error": repr(error) if error is not None else "",
+            "action": action,
+            "iteration": len(self.history),
+        }
+
+    def health(self) -> Dict[str, Any]:
+        """Degraded-mode / fault-tolerance report.
+
+        ``status`` is ``"ok"`` until any component permanently degraded,
+        then ``"degraded"``; ``events`` carries one record per degraded
+        component (error, mitigation, iteration).  ``components`` holds
+        live per-subsystem counters: prefetcher supervision (restarts /
+        errors / healthy), dynamic-refresh failure budget, and the
+        storage tier's retry/fallback/hint-failure counters."""
+        comp: Dict[str, Any] = {}
+        if self.prefetcher is not None:
+            comp["prefetcher"] = {
+                "healthy": self.prefetcher.healthy,
+                "failed": self.prefetcher.failed,
+                "restarts": int(self.prefetcher.restarts),
+                "errors": len(self.prefetcher.errors),
+            }
+        if self.cache is not None and self.cfg.cache_refresh:
+            comp["refresh"] = {
+                "enabled": not self._refresh_disabled,
+                "stage_failures": int(self.cache.stage_failures),
+                "consecutive_failures": int(self._refresh_failures),
+            }
+        src = self.loader.source
+        if hasattr(src, "io_retries"):
+            comp["storage"] = {
+                "io_errors": int(src.io_errors),
+                "io_retries": int(src.io_retries),
+                "io_retry_seconds": float(src.io_retry_seconds),
+                "fallback_gathers": int(src.fallback_gathers),
+                "fallback_rows": int(src.fallback_rows),
+                "madvise_failures": int(src.madvise_failures),
+                "fadvise_failures": int(src.fadvise_failures),
+            }
+        if self._failed:
+            comp["trainers"] = {"failed": sorted(self._failed)}
+        return {
+            "status": "degraded" if self._degraded else "ok",
+            "degraded": sorted(self._degraded),
+            "events": [dict(e) for e in self._degraded.values()],
+            "components": comp,
+        }
 
     def storage_io(self) -> Dict[str, float]:
         """Background storage-I/O accounting (zeros on RAM tiers):
@@ -891,6 +1066,14 @@ class HybridGNNTrainer:
             "open_windows": float(getattr(src, "open_windows", 0)),
             "prefetch_hit_rate":
                 float(getattr(src, "prefetch_hit_rate", 0.0)),
+            # fault-tolerance counters (module docstring: failure model)
+            "io_retries": float(getattr(src, "io_retries", 0)),
+            "io_retry_seconds": float(getattr(src, "io_retry_seconds", 0.0)),
+            "io_errors": float(getattr(src, "io_errors", 0)),
+            "fallback_gathers": float(getattr(src, "fallback_gathers", 0)),
+            "fallback_rows": float(getattr(src, "fallback_rows", 0)),
+            "madvise_failures": float(getattr(src, "madvise_failures", 0)),
+            "fadvise_failures": float(getattr(src, "fadvise_failures", 0)),
         }
         if self.prefetcher is not None:
             out["prefetch_submitted"] = float(self.prefetcher.submitted)

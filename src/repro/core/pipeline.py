@@ -17,6 +17,25 @@ record ``<stage>_wait`` — the time the worker sat starved on its input
 queue before this item arrived (0 in sequential mode).  Wait times are
 the pipeline-level stall signal: a stage whose upstream is the bottleneck
 shows large waits, a stage that IS the bottleneck shows none.
+
+Failure model & degraded modes
+------------------------------
+
+A stage that *raises* already fails fast: the error latches, the feeder
+stops consuming payloads, every worker drains to its sentinel, and the
+current ``run()`` re-raises — no deadlock, no stale state on the next
+run.  A stage that *wedges* (a gather stuck on a dead NFS mount, an
+injected 30 s delay) used to hang the consumer forever; with
+``watchdog_seconds > 0`` the consumer polls its output queue and checks
+per-stage heartbeats: a stage busy on one item (or the feeder's batch
+generator stuck) past the deadline raises ``PipelineStallError`` naming
+the wedged stage, how long it has been stuck, every queue depth and
+per-stage completion counts — a diagnosis instead of a hang.  The
+watchdog never fires while items keep arriving, and 0 (the default)
+keeps the legacy blocking behaviour.  Deterministic fault hook:
+``pipeline.<stage>`` fires before each stage invocation (injected
+delays wedge the stage and back queues up into a queue-full storm;
+injected errors exercise the stage-failure protocol).
 """
 from __future__ import annotations
 
@@ -26,7 +45,7 @@ import threading
 import time
 from typing import Any, Callable, Dict, Iterable, Iterator, List, Optional
 
-__all__ = ["PipelineItem", "Stage", "PrefetchPipeline"]
+__all__ = ["PipelineItem", "Stage", "PrefetchPipeline", "PipelineStallError"]
 
 _SENTINEL = object()
 
@@ -44,12 +63,36 @@ class Stage:
     fn: Callable[[PipelineItem], PipelineItem]   # mutates/returns the item
 
 
+class PipelineStallError(RuntimeError):
+    """A pipeline stage (or the feeder) made no progress past the
+    watchdog deadline.  Carries the wedged stage's name plus a queue /
+    completion snapshot for diagnosis."""
+
+    def __init__(self, stage: str, stalled_seconds: float,
+                 watchdog_seconds: float, queue_depths: Dict[str, int],
+                 completed: Dict[str, int]):
+        self.stage = stage
+        self.stalled_seconds = stalled_seconds
+        self.watchdog_seconds = watchdog_seconds
+        self.queue_depths = dict(queue_depths)
+        self.completed = dict(completed)
+        super().__init__(
+            f"pipeline stage {stage!r} wedged: no progress for "
+            f"{stalled_seconds:.1f}s (watchdog {watchdog_seconds:.1f}s); "
+            f"queue depths {queue_depths}; items completed per stage "
+            f"{completed}")
+
+
 class PrefetchPipeline:
     """Chains stages over bounded queues; ``depth=0`` means fully sequential."""
 
-    def __init__(self, stages: List[Stage], depth: int = 2):
+    def __init__(self, stages: List[Stage], depth: int = 2,
+                 watchdog_seconds: float = 0.0,
+                 fault_injector=None):
         self.stages = stages
         self.depth = int(depth)
+        self.watchdog_seconds = float(watchdog_seconds)
+        self.fault_injector = fault_injector
         # last completed run's failure (observability only): every run()
         # threads its OWN error holder + stop event through its workers,
         # so threads left over from an abandoned earlier run can never
@@ -62,6 +105,8 @@ class PrefetchPipeline:
                         ) -> Iterator[PipelineItem]:
         for item in items:
             for st in self.stages:
+                if self.fault_injector is not None:
+                    self.fault_injector.fire(f"pipeline.{st.name}")
                 t0 = time.perf_counter()
                 item = st.fn(item)
                 item.timings[st.name] = time.perf_counter() - t0
@@ -71,7 +116,7 @@ class PrefetchPipeline:
 
     def _worker(self, st: Stage, q_in: "queue.Queue", q_out: "queue.Queue",
                 state: Dict[str, Optional[BaseException]],
-                stop: threading.Event):
+                stop: threading.Event, hb: Dict[str, Any]):
         failed = False
         while True:
             t_wait = time.perf_counter()
@@ -80,19 +125,47 @@ class PrefetchPipeline:
             if item is _SENTINEL:
                 q_out.put(_SENTINEL)
                 return
-            if failed:
+            if failed or stop.is_set():
                 continue            # drain so the feeder never blocks
             try:
                 item.timings[st.name + "_wait"] = wait
+                # heartbeat: the watchdog reads (busy, since) to tell a
+                # wedged stage from an idle one
+                hb["since"] = time.perf_counter()
+                hb["busy"] = True
+                if self.fault_injector is not None:
+                    self.fault_injector.fire(f"pipeline.{st.name}")
                 t0 = time.perf_counter()
                 item = st.fn(item)
                 item.timings[st.name] = time.perf_counter() - t0
+                hb["busy"] = False
+                hb["done"] += 1
             except BaseException as e:  # propagate to consumer
+                hb["busy"] = False
                 state["error"] = e
                 stop.set()          # feeder: stop pulling new payloads
                 failed = True       # keep draining until the sentinel
                 continue
             q_out.put(item)
+
+    def _check_stall(self, beats: List[Dict[str, Any]],
+                     qs: List["queue.Queue"],
+                     stop: threading.Event) -> None:
+        """Raise ``PipelineStallError`` if any busy stage (or the feeder's
+        generator pull) exceeded the watchdog deadline."""
+        now = time.perf_counter()
+        for hb in beats:
+            if hb["busy"] and now - hb["since"] > self.watchdog_seconds:
+                stop.set()
+                depths = {}
+                for i, q in enumerate(qs):
+                    label = (self.stages[i].name if i < len(self.stages)
+                             else "output") + "_in"
+                    depths[label] = q.qsize()
+                completed = {hb2["name"]: hb2["done"] for hb2 in beats}
+                raise PipelineStallError(
+                    hb["name"], now - hb["since"], self.watchdog_seconds,
+                    depths, completed)
 
     def run(self, items: Iterable[PipelineItem]) -> Iterator[PipelineItem]:
         # a pipeline object is reusable: a clean run must not re-raise a
@@ -105,8 +178,14 @@ class PrefetchPipeline:
         stop = threading.Event()
         qs: List["queue.Queue"] = [queue.Queue(maxsize=self.depth)
                                    for _ in range(len(self.stages) + 1)]
+        beats: List[Dict[str, Any]] = [
+            {"name": st.name, "busy": False, "since": 0.0, "done": 0}
+            for st in self.stages]
+        feed_hb: Dict[str, Any] = {"name": "feed", "busy": False,
+                                   "since": 0.0, "done": 0}
         threads = [threading.Thread(target=self._worker,
-                                    args=(st, qs[i], qs[i + 1], state, stop),
+                                    args=(st, qs[i], qs[i + 1], state, stop,
+                                          beats[i]),
                                     daemon=True)
                    for i, st in enumerate(self.stages)]
         for t in threads:
@@ -114,17 +193,44 @@ class PrefetchPipeline:
 
         def feed():
             try:
-                for item in items:
+                it = iter(items)
+                while True:
                     if stop.is_set():
                         break       # a stage died: don't consume payloads
+                    # the generator pull is heartbeat-tracked too: a
+                    # wedged batch source (not just a wedged stage) must
+                    # also be diagnosable
+                    feed_hb["since"] = time.perf_counter()
+                    feed_hb["busy"] = True
+                    try:
+                        item = next(it)
+                    except StopIteration:
+                        feed_hb["busy"] = False
+                        break
+                    feed_hb["busy"] = False
+                    feed_hb["done"] += 1
                     qs[0].put(item)
             finally:
+                feed_hb["busy"] = False
                 qs[0].put(_SENTINEL)
 
         feeder = threading.Thread(target=feed, daemon=True)
         feeder.start()
+        wd = self.watchdog_seconds
+        poll = min(0.2, wd / 5.0) if wd > 0 else None
         while True:
-            item = qs[-1].get()
+            if poll is None:
+                item = qs[-1].get()
+            else:
+                try:
+                    item = qs[-1].get(timeout=poll)
+                except queue.Empty:
+                    # nothing arrived this tick: is someone wedged?  (the
+                    # stalled stage's thread stays stuck inside st.fn —
+                    # nothing can unstick it — so raise a diagnosis
+                    # instead of inheriting its hang)
+                    self._check_stall(beats + [feed_hb], qs, stop)
+                    continue
             if item is _SENTINEL:
                 break
             yield item

@@ -12,7 +12,12 @@
 #              miss-only loads for cache-backed accelerator trainers.
 # prefetch.py  WindowPrefetcher: background thread pre-faulting the NEXT
 #              batch's mmap partition windows (lookahead from the TFP
-#              sample stage) so the load stage gathers warm pages.
+#              sample stage) so the load stage gathers warm pages;
+#              supervised (restart budget) with graceful degradation.
+# faults.py    deterministic fault injection for the data plane: seeded,
+#              schedulable FaultInjector raising transient/permanent
+#              OSErrors, delaying I/O, or killing background workers at
+#              named hooks — chaos tests replay exact failure schedules.
 # sampler.py   fixed-shape neighbor sampling (numpy host / jit device).
 # models.py    GCN / GraphSAGE on sampled blocks (dense/segsum/pallas agg).
 #
@@ -29,6 +34,7 @@ from .featcache import (CacheLookup, CacheStats, FeatureCache, build_cache,
                         compact_lookup)
 from .featload import FeatureLoader, LoadStats, MissBlock
 from .prefetch import WindowPrefetcher
+from .faults import FaultInjector, FaultSpec, WorkerKilled
 from .models import GNNConfig, init_params, forward, loss_fn, param_count
 
 __all__ = [
@@ -40,5 +46,6 @@ __all__ = [
     "CacheLookup", "CacheStats", "FeatureCache", "build_cache",
     "compact_lookup",
     "FeatureLoader", "LoadStats", "MissBlock", "WindowPrefetcher",
+    "FaultInjector", "FaultSpec", "WorkerKilled",
     "GNNConfig", "init_params", "forward", "loss_fn", "param_count",
 ]

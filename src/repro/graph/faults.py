@@ -1,0 +1,258 @@
+"""Deterministic fault injection for the storage / prefetch / refresh /
+pipeline data plane.
+
+Failure model & degraded modes
+==============================
+
+PRs 1-6 grew a deep asynchronous data plane (mmap storage tier, background
+``WindowPrefetcher``, staged async cache refresh, ``PrefetchPipeline``
+worker threads, thread-pool gathers).  This module is the chaos half of
+its robustness story: a **seeded, schedulable** ``FaultInjector`` that the
+data-plane components consult at well-defined hook points, so every
+failure mode has a deterministic, replayable test.  The protocol the
+faults exercise:
+
+  * **retries** — transient storage I/O errors (``OSError`` from an mmap
+    gather or a prefetch read) are retried with bounded, jittered
+    exponential backoff inside ``MmapFeatures`` (``io_retries`` /
+    ``io_retry_seconds`` counters).  A fault that clears within the
+    retry budget is invisible to training: losses stay bit-identical.
+  * **degrades** — advisory background components never kill a run.  A
+    prefetch worker that dies is restarted within a budget; past the
+    budget the trainer stops submitting, prices ``prefetch_overlap`` at
+    0 and continues with synchronous (cold) loads.  A failed async
+    refresh ``stage()`` discards its plan, keeps serving the old cache
+    version and retries at the next drift boundary (a failure budget
+    disables refresh for good).  A permanently unreadable window blob
+    falls back to a bounded gather from the spill's backing
+    ``FeatureSource``.  madvise/fadvise hint failures only increment
+    counters.  Degraded state surfaces through the trainer's
+    ``health()`` report — never through silence.
+  * **raises** — correctness-critical failures still raise: a load-path
+    gather whose retries AND fallback are exhausted, and a pipeline
+    stage wedged past the ``PrefetchPipeline`` watchdog deadline (a
+    diagnostic ``PipelineStallError`` naming the stage and queue depths
+    instead of a silent hang).
+
+Hook points (``FaultSpec.op``):
+
+  ====================  ====================================================
+  ``storage.take``      each per-partition window read in ``MmapFeatures
+                        .take`` (one fire per retry attempt)
+  ``storage.prefetch``  each per-partition pre-fault in ``prefetch_rows``
+  ``storage.madvise``   each madvise hint (failure increments
+                        ``madvise_failures``)
+  ``storage.fadvise``   each posix_fadvise in ``drop_page_cache`` (failure
+                        increments ``fadvise_failures``)
+  ``storage.spill``     each partition write in ``MmapFeatures.spill``
+                        (ENOSPC path: partial blobs are cleaned up)
+  ``prefetch.worker``   each ``WindowPrefetcher`` work item (``kill``
+                        terminates the worker thread)
+  ``refresh.stage``     each ``FeatureCache.stage()`` call
+  ``pipeline.<stage>``  each ``PrefetchPipeline`` stage invocation
+                        (``delay`` wedges a stage for the watchdog;
+                        long delays force queue-full storms upstream)
+  ====================  ====================================================
+
+Determinism: every hook keeps a **per-op call counter** under a lock, and
+a spec matches by call index (``start`` / ``count``), so a schedule fires
+on exactly the same calls in every run regardless of thread interleaving.
+Probabilistic specs (``probability < 1``) draw from a per-spec
+``np.random.default_rng`` seeded from ``(seed, op, spec index)`` — still a
+pure function of the per-op call index.
+"""
+from __future__ import annotations
+
+import dataclasses
+import errno as _errno
+import json
+import threading
+import time
+from typing import Dict, List, Optional, Sequence, Union
+
+import numpy as np
+
+__all__ = ["FaultSpec", "FaultInjector", "WorkerKilled"]
+
+
+class WorkerKilled(BaseException):
+    """Injected hard death of a background worker thread.
+
+    Deliberately a ``BaseException``: ordinary per-item ``except
+    Exception`` recovery must not swallow it — it models the thread
+    dying (OOM-kill, segfaulted native gather), not a failed work item.
+    Supervisors detect the dead thread and restart within their budget.
+    """
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One scheduled fault: fire on calls ``start .. start+count-1`` of
+    hook ``op`` (per-op call indices, 0-based).
+
+    ``kind``:
+      * ``"transient"`` — raise ``OSError(errno)`` on the matching calls
+        (a retry after the window succeeds),
+      * ``"permanent"`` — raise ``OSError(errno)`` on every call from
+        ``start`` on (``count`` ignored),
+      * ``"delay"``     — sleep ``delay`` seconds (I/O latency injection /
+        queue-full storms / watchdog wedges),
+      * ``"kill"``      — raise ``WorkerKilled`` (terminates the worker
+        thread that hit it).
+
+    ``probability < 1`` fires only on that fraction of matching calls,
+    drawn deterministically from the injector seed.
+    """
+    op: str
+    kind: str = "transient"
+    start: int = 0
+    count: int = 1
+    delay: float = 0.0
+    errno: int = _errno.EIO
+    probability: float = 1.0
+    message: str = ""
+
+    _KINDS = ("transient", "permanent", "delay", "kill")
+
+    def __post_init__(self):
+        if self.kind not in self._KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; "
+                             f"have {self._KINDS}")
+
+    def matches(self, call_index: int) -> bool:
+        if call_index < self.start:
+            return False
+        if self.kind == "permanent":
+            return True
+        return call_index < self.start + self.count
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "FaultSpec":
+        return cls(**{k: v for k, v in d.items()
+                      if k in {f.name for f in dataclasses.fields(cls)}})
+
+
+class FaultInjector:
+    """Seeded, schedulable fault injector consulted at data-plane hooks.
+
+    Components hold an optional ``fault_injector`` attribute and call
+    ``fire(op)`` at their hook point; with no schedule entry for ``op``
+    the call is a dict lookup and a counter increment.  All mutation is
+    under one lock, so concurrent hooks (pool threads, the prefetch
+    worker, pipeline stages) each see a consistent per-op call index.
+
+    Observability: ``calls`` (per-op hook invocations), ``injected``
+    (per-op faults applied), ``faults_raised`` / ``delays_injected`` /
+    ``total_delay_seconds`` aggregates, and ``report()`` for the whole
+    picture.
+    """
+
+    def __init__(self, schedule: Sequence[Union[FaultSpec, Dict]] = (),
+                 seed: int = 0):
+        self.seed = int(seed)
+        self.schedule: List[FaultSpec] = [
+            s if isinstance(s, FaultSpec) else FaultSpec.from_dict(s)
+            for s in schedule]
+        self._by_op: Dict[str, List[tuple]] = {}
+        for i, spec in enumerate(self.schedule):
+            self._by_op.setdefault(spec.op, []).append((i, spec))
+        self._lock = threading.Lock()
+        self.calls: Dict[str, int] = {}
+        self.injected: Dict[str, int] = {}
+        self.faults_raised = 0
+        self.delays_injected = 0
+        self.total_delay_seconds = 0.0
+        # per-spec deterministic rng for probabilistic specs: seeded from
+        # (seed, op, spec index) so decisions depend only on the per-op
+        # call order, never on wall clock or thread identity
+        self._rngs = {
+            i: np.random.default_rng(
+                np.random.SeedSequence((self.seed, hash(s.op) & 0x7FFFFFFF,
+                                        i)))
+            for i, s in enumerate(self.schedule) if s.probability < 1.0}
+
+    # ------------------------------------------------------------- loading
+
+    @classmethod
+    def from_json(cls, path_or_obj, seed: Optional[int] = None
+                  ) -> "FaultInjector":
+        """Build from a JSON schedule: either a list of FaultSpec dicts or
+        ``{"seed": int, "schedule": [...]}`` (a file path or a parsed
+        object)."""
+        obj = path_or_obj
+        if isinstance(obj, str):
+            with open(obj) as fh:
+                obj = json.load(fh)
+        if isinstance(obj, dict):
+            sched = obj.get("schedule", [])
+            seed = obj.get("seed", 0) if seed is None else seed
+        else:
+            sched = obj
+        return cls(sched, seed=seed or 0)
+
+    def to_json(self) -> str:
+        return json.dumps({"seed": self.seed,
+                           "schedule": [s.to_dict() for s in self.schedule]})
+
+    # -------------------------------------------------------------- firing
+
+    def fire(self, op: str) -> None:
+        """Consult the schedule for one call of hook ``op``.
+
+        May sleep (``delay``), raise ``OSError`` (``transient`` /
+        ``permanent``) or raise ``WorkerKilled`` (``kill``); returns
+        normally when no spec matches this call index.  When several
+        specs match the same call, delays apply first (latency precedes
+        the error a slow device eventually returns), then the first
+        raising spec in schedule order wins.
+        """
+        with self._lock:
+            idx = self.calls.get(op, 0)
+            self.calls[op] = idx + 1
+            specs = self._by_op.get(op)
+            if not specs:
+                return
+            actions = []
+            for spec_i, spec in specs:
+                if not spec.matches(idx):
+                    continue
+                if spec.probability < 1.0 and \
+                        self._rngs[spec_i].random() >= spec.probability:
+                    continue
+                actions.append(spec)
+            if not actions:
+                return
+            delay = sum(s.delay for s in actions if s.kind == "delay")
+            raising = next((s for s in actions if s.kind != "delay"), None)
+            self.injected[op] = self.injected.get(op, 0) + len(actions)
+            if delay:
+                self.delays_injected += 1
+                self.total_delay_seconds += delay
+            if raising is not None:
+                self.faults_raised += 1
+        # act OUTSIDE the lock: a long injected delay must not serialize
+        # every other hook in the process behind it
+        if delay:
+            time.sleep(delay)
+        if raising is None:
+            return
+        msg = raising.message or (
+            f"injected {raising.kind} fault on {op} (call {idx})")
+        if raising.kind == "kill":
+            raise WorkerKilled(msg)
+        raise OSError(raising.errno, msg)
+
+    # ----------------------------------------------------------- reporting
+
+    def report(self) -> Dict:
+        with self._lock:
+            return {
+                "calls": dict(self.calls),
+                "injected": dict(self.injected),
+                "faults_raised": self.faults_raised,
+                "delays_injected": self.delays_injected,
+                "total_delay_seconds": self.total_delay_seconds,
+            }

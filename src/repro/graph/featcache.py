@@ -278,6 +278,9 @@ class FeatureCache:
         self.refresh_hysteresis = float(refresh_hysteresis)
         self.refreshes = 0               # refresh() calls that moved rows
         self.refresh_swapped_rows = 0
+        self.fault_injector = None       # optional FaultInjector (hook:
+                                         #   "refresh.stage")
+        self.stage_failures = 0          # stage() attempts that raised
         self._staged: Optional[_StagedRefresh] = None
         # decayed hotness estimates: frontier *positions* observed per
         # cached slot / per uncached node since (decay-weighted) forever.
@@ -380,7 +383,8 @@ class FeatureCache:
 
     # --------------------------------------------------------------- lookup
 
-    def lookup(self, ids: np.ndarray, dedup: bool = True) -> CacheLookup:
+    def lookup(self, ids: np.ndarray, dedup: bool = True,
+               record: bool = True) -> CacheLookup:
         """Partition one frontier into cached slots and miss rows.
 
         ``dedup=True`` (the default) classifies only the frontier's unique
@@ -397,7 +401,10 @@ class FeatureCache:
         returned lookup's ``version`` tells the combine stage which device
         snapshot to pair it with.  Each lookup also feeds the refresh
         policy's decayed hotness counters (positions per slot / per
-        uncached id).
+        uncached id) — unless ``record=False``, in which case the caller
+        classifies first and accounts later via ``record_lookup`` (the
+        loader uses this so a gather that fails mid-way never leaves
+        half-recorded stats behind).
         """
         ids = np.asarray(ids, dtype=np.int64)
         with self._lock:
@@ -416,6 +423,15 @@ class FeatureCache:
                 miss_ids=ids[is_miss], unique_ids=ids,
                 inverse=np.arange(ids.shape[0], dtype=np.int32))
         look.version = ver
+        if record:
+            self.record_lookup(look)
+        return look
+
+    def record_lookup(self, look: CacheLookup) -> None:
+        """Account one classified lookup: stats windows + hotness
+        counters, applied atomically under the cache lock.  Split out of
+        ``lookup`` so deferred-accounting callers (``record=False``) can
+        commit the stats only once the dependent gather succeeded."""
         delta = CacheStats(
             lookups=1, hit_rows=look.num_hit,
             miss_rows=look.miss_positions, unique_rows=look.num_unique,
@@ -440,7 +456,6 @@ class FeatureCache:
                     np.add.at(self._slot_hot, look.slots[hit],
                               np.float32(1.0))
                 np.add.at(self._node_hot, look.ids[~hit], np.float32(1.0))
-        return look
 
     # -------------------------------------------------------------- refresh
 
@@ -477,7 +492,19 @@ class FeatureCache:
         margin keeps a boundary hub set from thrashing), so a refresh
         never replaces a row with a hotter-or-equal one evicted.  At most
         ``max_swap`` rows move (default ``max_refresh_frac`` of
-        capacity).  Returns the planned swap count."""
+        capacity).  Returns the planned swap count.
+
+        Failure model: a stage that raises (source gather failure, or an
+        injected ``refresh.stage`` fault) increments ``stage_failures``
+        and leaves NO staged plan behind — the cache keeps serving the
+        current version and a supervising trainer simply retries at the
+        next drift boundary."""
+        if self.fault_injector is not None:
+            try:
+                self.fault_injector.fire("refresh.stage")
+            except BaseException:
+                self.stage_failures += 1
+                raise
         with self._lock:
             if self.capacity == 0:
                 return 0
@@ -514,8 +541,14 @@ class FeatureCache:
         # maintenance traffic: excluded from the load-stall counters it
         # would otherwise race when staged in a background thread)
         if n_swap:
-            rows = np.ascontiguousarray(
-                self._cast_rows(self._maintenance_take(top)))
+            try:
+                rows = np.ascontiguousarray(
+                    self._cast_rows(self._maintenance_take(top)))
+            except Exception:
+                # failed admission gather: count it and propagate with no
+                # staged plan left behind (the old version keeps serving)
+                self.stage_failures += 1
+                raise
         else:
             rows = np.zeros((0, self.feat_dim), self._host_rows.dtype)
         with self._lock:
@@ -526,6 +559,15 @@ class FeatureCache:
                 return 0
             self._staged = _StagedRefresh(base, top, cold, rows)
             return n_swap
+
+    def discard_staged(self) -> int:
+        """Drop a staged-but-uncommitted refresh plan (degraded-mode
+        cleanup after a failed/suspect stage): the cache keeps serving
+        the current version unchanged.  Returns the number of swaps
+        discarded (0 when nothing was staged)."""
+        with self._lock:
+            plan, self._staged = self._staged, None
+            return 0 if plan is None else int(plan.top.shape[0])
 
     def commit(self) -> int:
         """Apply the staged refresh: the cheap synchronous half.

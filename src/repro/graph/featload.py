@@ -271,12 +271,20 @@ class FeatureLoader:
         *miss* rows are gathered; without one, every unique id is a miss.
         When the loader was built with ``dedup=False`` (legacy positional
         path) a cache is required and one row per miss position ships.
+
+        Failure model: the lookup only *classifies* here
+        (``record=False``); cache stats/hotness and loader stats are
+        committed together after the miss gather succeeded.  A gather
+        that raises (storage fault past the retry/fallback budget, a
+        pool-thread exception) therefore surfaces exactly once and
+        leaves every stats window untouched — no half-recorded batch.
         """
         t0 = time.perf_counter()
         stall0 = self._source_stall()
         frontier = self._frontier(batch)
         if self.cache is not None:
-            look = self.cache.lookup(frontier, dedup=self.dedup)
+            look = self.cache.lookup(frontier, dedup=self.dedup,
+                                     record=False)
             row_bytes = self.cache.row_bytes
         else:
             if not self.dedup:
@@ -286,6 +294,8 @@ class FeatureLoader:
             row_bytes = self._row_bytes
         rows = self._cast(self._gather(look.miss_ids))
         dt = time.perf_counter() - t0
+        if self.cache is not None:
+            self.cache.record_lookup(look)
         self._account(self.stats, LoadStats(
             rows=rows.shape[0], bytes=rows.nbytes, seconds=dt,
             total_rows=look.num_rows, unique_rows=look.num_unique,

@@ -28,26 +28,48 @@ exposing ``prefetch_rows`` (the out-of-core ``MmapFeatures``) and:
   * the worker thread drains the queue calling
     ``source.prefetch_rows`` (a readahead gather of exactly the rows a
     future ``take`` will touch).
-  * errors are latched, never swallowed: a failing prefetch (e.g. a
-    spill blob deleted mid-run) marks the prefetcher failed, the worker
-    keeps draining (so ``close()`` can never deadlock on a full queue),
-    and the *next* ``submit`` raises with the original exception chained
-    — inside the TFP pipeline that surfaces through the stage-failure
-    protocol on the current ``run()`` without wedging the feeder.
   * ``close()`` is idempotent and safe with a half-drained queue: the
     stop flag makes the worker skip remaining work, a sentinel ends it,
     and a second ``close()`` returns immediately.
 
+Failure model & degraded modes
+------------------------------
+
+Two failure classes, handled differently:
+
+  * a prefetch *item* fails (``source.prefetch_rows`` raised — e.g. a
+    spill blob deleted mid-run, past the storage tier's own retries):
+    the error is latched in ``error`` (appended to ``errors``), the
+    worker keeps draining so a blocked producer / ``close()`` never
+    deadlocks, and supervision decides what happens next;
+  * the worker *thread* dies (``WorkerKilled`` from fault injection, or
+    any raise escaping the item handler): detected by ``submit`` via the
+    dead thread.
+
+Supervision runs inline at each ``submit`` (``_supervise``): a failed or
+dead worker is restarted with exponential backoff up to
+``restart_budget`` times (``restarts`` counter).  Past the budget the
+prefetcher goes permanently ``failed``: with the legacy strict contract
+(``raise_on_failure=True``, the class default) the next ``submit``
+raises with the first error chained; under a supervising trainer
+(``raise_on_failure=False``) ``submit`` just returns False forever — the
+trainer degrades to synchronous loads and re-prices ``prefetch_overlap``
+to 0, surfacing the state through ``health()``/``healthy`` instead of an
+exception.  The default ``restart_budget=0`` keeps PR-5 semantics
+exactly: first failure latches, next submit raises.
+
 ``wait_idle`` exists for tests/benchmarks that need the asynchronous
 pre-fault to have *happened* before measuring (the trainer never calls
-it — overlapping is the whole point).
+it — overlapping is the whole point).  Its predicate also releases on a
+dead worker, so an injected kill cannot wedge a waiting test.
 """
 from __future__ import annotations
 
 import collections
 import queue
 import threading
-from typing import Optional
+import time
+from typing import List, Optional
 
 import numpy as np
 
@@ -61,18 +83,30 @@ class WindowPrefetcher:
 
     def __init__(self, source, max_queue: int = 4,
                  dedup_history: int = 0,
-                 name: str = "window-prefetch"):
+                 name: str = "window-prefetch",
+                 restart_budget: int = 0,
+                 restart_backoff: float = 0.02,
+                 raise_on_failure: bool = True,
+                 fault_injector=None):
         if not hasattr(source, "prefetch_rows"):
             raise TypeError(
                 f"{type(source).__name__} has no prefetch_rows: the window "
                 "prefetcher only serves page-faulting (mmap) sources")
         self.source = source
+        self._name = name
         self._q: "queue.Queue" = queue.Queue(maxsize=max(1, int(max_queue)))
         self._cv = threading.Condition()
         self._pending = 0              # submitted but not yet processed
         self._stop = threading.Event()
         self._closed = False
+        self.fault_injector = fault_injector
+        self.restart_budget = int(restart_budget)
+        self.restart_backoff = float(restart_backoff)
+        self.raise_on_failure = bool(raise_on_failure)
         self.error: Optional[BaseException] = None
+        self.errors: List[BaseException] = []   # every failure, in order
+        self.restarts = 0              # worker respawns performed
+        self.failed = False            # permanently degraded (budget spent)
         self.submitted = 0
         self.completed = 0
         self.dropped = 0               # queue-full discards (by design)
@@ -83,9 +117,12 @@ class WindowPrefetcher:
             maxlen=max(0, int(dedup_history)) or None)
         self._dedup = int(dedup_history) > 0
         self._evictions_seen = int(getattr(source, "window_evictions", 0))
-        self._thread = threading.Thread(target=self._run, daemon=True,
-                                        name=name)
-        self._thread.start()
+        self._thread = self._spawn()
+
+    def _spawn(self) -> threading.Thread:
+        t = threading.Thread(target=self._run, daemon=True, name=self._name)
+        t.start()
+        return t
 
     # ------------------------------------------------------------- worker
 
@@ -98,26 +135,90 @@ class WindowPrefetcher:
             # working, so a blocked producer / close() never deadlocks
             if self.error is None and not self._stop.is_set():
                 try:
+                    if self.fault_injector is not None:
+                        self.fault_injector.fire("prefetch.worker")
                     self.source.prefetch_rows(item)
                     self.completed += 1
-                except BaseException as e:
+                except Exception as e:
+                    # item failure: latch, keep the thread draining
+                    self.errors.append(e)
                     self.error = e
+                except BaseException as e:
+                    # thread death (injected WorkerKilled): record it and
+                    # END the thread — a per-item handler must not absorb
+                    # it.  The pending count still drops so waiters
+                    # release; supervision respawns within its budget.
+                    self.errors.append(e)
+                    self.error = e
+                    with self._cv:
+                        self._pending -= 1
+                        self._cv.notify_all()
+                    return
             with self._cv:
                 self._pending -= 1
                 self._cv.notify_all()
+
+    # ------------------------------------------------------- supervision
+
+    @property
+    def healthy(self) -> bool:
+        """True while the prefetcher can still serve submits (possibly
+        after a restart); False once permanently failed or closed."""
+        return not self.failed and not self._closed
+
+    def _supervise(self) -> bool:
+        """Inline supervisor, run at each submit: restart a failed/dead
+        worker within ``restart_budget`` (exponential backoff between
+        restarts), else mark the prefetcher permanently ``failed``.
+        Returns True when the worker is (again) serviceable."""
+        if self.failed:
+            return False
+        dead = not self._thread.is_alive() and not self._closed
+        if self.error is None and not dead:
+            return True
+        if self.restarts >= self.restart_budget:
+            self.failed = True
+            return False
+        # budgeted restart: back off, clear the latch, respawn if needed
+        time.sleep(self.restart_backoff * (2.0 ** self.restarts))
+        self.restarts += 1
+        self.error = None
+        if not self._thread.is_alive():
+            # the dead worker abandoned whatever sat in the queue; any
+            # such items were already un-counted from _pending only if
+            # processed — drain leftovers so the new worker starts clean
+            leftovers = 0
+            while True:
+                try:
+                    item = self._q.get_nowait()
+                except queue.Empty:
+                    break
+                if item is not _SENTINEL:
+                    leftovers += 1
+            if leftovers:
+                with self._cv:
+                    self._pending -= leftovers
+                    self._cv.notify_all()
+            self._thread = self._spawn()
+        return True
 
     # ----------------------------------------------------------- producer
 
     def submit(self, rows: np.ndarray) -> bool:
         """Enqueue one future gather's rows for background pre-faulting.
 
-        Returns True when enqueued, False when dropped (queue full or
-        prefetcher closed).  Raises if a previous prefetch failed — the
-        advisory thread must not hide a broken storage tier."""
-        if self.error is not None:
-            raise RuntimeError(
-                "window prefetch worker failed; storage tier is broken"
-            ) from self.error
+        Returns True when enqueued, False when dropped (queue full,
+        prefetcher closed, or permanently failed with
+        ``raise_on_failure=False``).  With the strict contract
+        (``raise_on_failure=True``) a prefetcher that failed past its
+        restart budget raises — the advisory thread must not hide a
+        broken storage tier from an unsupervised caller."""
+        if not self._supervise():
+            if self.raise_on_failure:
+                raise RuntimeError(
+                    "window prefetch worker failed; storage tier is broken"
+                ) from (self.errors[0] if self.errors else self.error)
+            return False
         if self._closed:
             return False
         rows = np.asarray(rows)
@@ -156,22 +257,32 @@ class WindowPrefetcher:
         return True
 
     def wait_idle(self, timeout: Optional[float] = None) -> bool:
-        """Block until every submitted request was processed (or failed).
-        Test/benchmark hook — the training path never waits."""
+        """Block until every submitted request was processed (or failed,
+        or the worker died).  Test/benchmark hook — the training path
+        never waits."""
         with self._cv:
             return self._cv.wait_for(
-                lambda: self._pending == 0 or self.error is not None,
+                lambda: (self._pending == 0 or self.error is not None
+                         or not self._thread.is_alive()),
                 timeout)
 
     def close(self) -> None:
         """Stop the worker (idempotent; safe under a half-drained queue:
-        remaining requests are drained unprocessed, never worked)."""
+        remaining requests are drained unprocessed, never worked; safe
+        after an injected worker death: no sentinel is forced into a
+        possibly-full queue nobody drains)."""
         if self._closed:
             return
         self._closed = True
         self._stop.set()
-        self._q.put(_SENTINEL)      # worker is alive until it sees this
-        self._thread.join(timeout=30.0)
+        if self._thread.is_alive():
+            try:
+                self._q.put_nowait(_SENTINEL)
+            except queue.Full:
+                # full queue with a live worker: it is mid-drain, a
+                # blocking put resolves as soon as it takes the next item
+                self._q.put(_SENTINEL)
+            self._thread.join(timeout=30.0)
 
     def __del__(self):  # pragma: no cover - GC timing dependent
         try:

@@ -42,6 +42,26 @@ Datasets are synthetic, size-parameterized power-law graphs standing in for
 ogbn-products / ogbn-papers100M / MAG240M (homo).  The *full* Table-III stats
 are kept in the registry; smoke/bench runs instantiate scaled-down versions
 with the same degree-distribution shape.
+
+Failure model & degraded modes (``MmapFeatures``)
+-------------------------------------------------
+
+A transient ``OSError`` from a window gather (``take`` / ``prefetch_rows``)
+is retried with bounded, jittered exponential backoff under a per-call
+deadline (knobs ``io_retry_attempts`` / ``io_retry_base`` /
+``io_retry_max_delay`` / ``io_retry_deadline``; counters ``io_retries``,
+``io_retry_seconds``, ``io_errors``).  A *permanently* unreadable window
+on the ``take`` path falls back to a bounded re-gather from the spill's
+backing source (``fallback_source``, set by ``spill()``; counters
+``fallback_gathers`` / ``fallback_rows``, hard cap
+``fallback_row_budget`` — past it the original error is raised).
+madvise/fadvise hint failures are advisory: they increment
+``madvise_failures`` / ``fadvise_failures`` and never fail a gather.  An
+``OSError`` (e.g. ENOSPC) during ``spill()`` removes the partial
+partition blobs (no orphaned tempdirs) and raises an error naming the
+spill dir and bytes written.  Deterministic fault injection hooks:
+``storage.take``, ``storage.prefetch``, ``storage.madvise``,
+``storage.fadvise``, ``storage.spill`` (see ``graph/faults.py``).
 """
 from __future__ import annotations
 
@@ -299,6 +319,24 @@ class MmapFeatures:
         # task mapping re-prices on (page-touch accounting still applies —
         # the pages really do become warm)
         self._untracked = threading.local()
+        # ---- fault tolerance (see module docstring: failure model) ----
+        self.fault_injector = None               # optional FaultInjector
+        self.io_retry_attempts = 3               # tries per window gather
+        self.io_retry_base = 0.005               # first backoff (seconds)
+        self.io_retry_max_delay = 0.25           # per-sleep cap
+        self.io_retry_deadline = 5.0             # per-call retry budget
+        self.io_retries = 0                      # sleeps taken before success
+        self.io_retry_seconds = 0.0              # wall time spent backing off
+        self.io_errors = 0                       # OSErrors seen (incl retried)
+        self.fallback_source = None              # spill() sets the backing src
+        self.fallback_row_budget = 1 << 20       # max rows served by fallback
+        self.fallback_gathers = 0                # window gathers that fell back
+        self.fallback_rows = 0                   # rows served by the fallback
+        self.madvise_failures = 0                # madvise hints that errored
+        self.fadvise_failures = 0                # posix_fadvise that errored
+        self._io_lock = threading.Lock()
+        # deterministic jitter: backoff sleeps are reproducible run-to-run
+        self._retry_rng = np.random.default_rng(0x10C0FFEE)
         self._owned_tmp: Optional[tempfile.TemporaryDirectory] = None
         self._row_bytes = self.shape[1] * self._dtype.itemsize
         # pages per partition *file* (files are page-aligned independently)
@@ -324,13 +362,22 @@ class MmapFeatures:
     def spill(cls, src: "FeatureSource | np.ndarray",
               spill_dir: Optional[str] = None,
               partition_rows: int = 65536,
-              lru_windows: int = 0) -> "MmapFeatures":
+              lru_windows: int = 0,
+              fault_injector=None) -> "MmapFeatures":
         """Materialize ``src`` into per-partition disk blobs, one partition
         buffered at a time, and return the mmap-backed view.
 
         ``spill_dir=None`` spills into a private temporary directory that
         is removed when the returned object is garbage-collected (or at
         interpreter exit).
+
+        An ``OSError`` while writing (ENOSPC being the canonical case)
+        removes every partition blob written so far — and the owned
+        temp dir, when the writer created one — then re-raises with the
+        spill dir and bytes written named, so a failed spill never
+        leaves orphaned blob files behind.  The backing ``src`` is kept
+        as ``fallback_source`` on the returned view: a window blob that
+        later turns unreadable degrades to a bounded re-gather from it.
         """
         src = as_feature_source(src)
         n, f = src.shape
@@ -342,16 +389,35 @@ class MmapFeatures:
         os.makedirs(spill_dir, exist_ok=True)
         num_parts = -(-n // partition_rows)
         peak = 0
-        for pid in range(num_parts):
-            lo = pid * partition_rows
-            hi = min(lo + partition_rows, n)
-            # the ONLY RAM the writer holds: one partition's rows
-            buf = np.ascontiguousarray(
-                src.take(np.arange(lo, hi, dtype=np.int64)))
-            peak = max(peak, buf.shape[0])
-            buf.tofile(os.path.join(spill_dir, cls._part_name(pid)))
-            dtype = buf.dtype
-            del buf
+        bytes_written = 0
+        pid = -1
+        try:
+            for pid in range(num_parts):
+                lo = pid * partition_rows
+                hi = min(lo + partition_rows, n)
+                # the ONLY RAM the writer holds: one partition's rows
+                buf = np.ascontiguousarray(
+                    src.take(np.arange(lo, hi, dtype=np.int64)))
+                peak = max(peak, buf.shape[0])
+                if fault_injector is not None:
+                    fault_injector.fire("storage.spill")
+                buf.tofile(os.path.join(spill_dir, cls._part_name(pid)))
+                bytes_written += int(buf.nbytes)
+                dtype = buf.dtype
+                del buf
+        except OSError as e:
+            # no orphans: drop every blob this spill managed to write
+            for q in range(pid + 1):
+                with contextlib.suppress(OSError):
+                    os.remove(os.path.join(spill_dir, cls._part_name(q)))
+            if owned is not None:
+                with contextlib.suppress(OSError):
+                    owned.cleanup()
+            raise OSError(
+                e.errno,
+                f"feature spill to {spill_dir!r} failed at partition "
+                f"{max(pid, 0)}/{num_parts} after {bytes_written} bytes "
+                f"written: {e.strerror or e}") from e
         if num_parts == 0:
             dtype = np.dtype(src.dtype)
         manifest = {"format": _MMAP_FORMAT, "num_rows": int(n),
@@ -363,6 +429,8 @@ class MmapFeatures:
         out = cls(spill_dir, lru_windows=lru_windows)
         out.spill_peak_buffered_rows = peak
         out._owned_tmp = owned
+        out.fallback_source = src
+        out.fault_injector = fault_injector
         return out
 
     @staticmethod
@@ -440,10 +508,82 @@ class MmapFeatures:
         self.prefetch_hit_windows = 0
         self.prefetch_miss_windows = 0
 
+    # ------------------------------------------------- retrying I/O plumbing
+
+    def _retry_io(self, fn: Callable[[], "np.ndarray"], op: str):
+        """Run one window I/O operation with bounded, jittered exponential
+        backoff on transient ``OSError``: up to ``io_retry_attempts``
+        tries within a per-call ``io_retry_deadline``.  Every error is
+        counted in ``io_errors``; every backoff sleep in ``io_retries`` /
+        ``io_retry_seconds``.  Jitter comes from a seeded rng, so backoff
+        timing is reproducible run-to-run.  The fault-injection hook
+        fires inside the attempt (before ``fn``), so a scheduled
+        transient fault is consumed by the attempt it targets and the
+        next attempt proceeds clean."""
+        deadline = time.monotonic() + self.io_retry_deadline
+        backoff = self.io_retry_base
+        attempts = max(1, int(self.io_retry_attempts))
+        for attempt in range(attempts):
+            try:
+                if self.fault_injector is not None:
+                    self.fault_injector.fire(op)
+                return fn()
+            except OSError:
+                with self._io_lock:
+                    self.io_errors += 1
+                    jitter = 1.0 + float(self._retry_rng.random())
+                budget = deadline - time.monotonic()
+                if attempt == attempts - 1 or budget <= 0:
+                    raise
+                sleep = min(backoff * jitter, self.io_retry_max_delay, budget)
+                time.sleep(sleep)
+                with self._io_lock:
+                    self.io_retries += 1
+                    self.io_retry_seconds += sleep
+                backoff *= 2.0
+
+    def _fallback_gather(self, pid: int, offset: np.ndarray,
+                         err: OSError) -> np.ndarray:
+        """Degraded path for a window unreadable past the retry budget:
+        re-gather the rows from the spill's backing ``fallback_source``
+        (global ids reconstructed from the partition coordinates), under
+        a hard ``fallback_row_budget`` so a totally broken storage tier
+        still fails loudly instead of silently re-running the whole
+        spill's source forever."""
+        src = self.fallback_source
+        if src is None:
+            raise err
+        n = int(offset.shape[0])
+        with self._io_lock:
+            if self.fallback_rows + n > self.fallback_row_budget:
+                raise OSError(
+                    err.errno,
+                    f"window {pid} under {self.spill_dir!r} is unreadable "
+                    f"and the fallback gather budget is exhausted "
+                    f"({self.fallback_rows} rows served, "
+                    f"{n} more requested > fallback_row_budget="
+                    f"{self.fallback_row_budget}): {err}") from err
+            self.fallback_gathers += 1
+            self.fallback_rows += n
+        rows = pid * self.partition_rows + np.asarray(offset, dtype=np.int64)
+        return np.ascontiguousarray(src.take(rows), dtype=self._dtype)
+
+    def _gather_window(self, pid: int, offset: np.ndarray, op: str
+                       ) -> Tuple[np.ndarray, bool]:
+        """One window gather with retries, then the bounded fallback.
+        Returns ``(rows, used_fallback)`` — fallback rows never came from
+        the blob, so the caller must skip page-touch accounting."""
+        try:
+            return self._retry_io(
+                lambda: np.take(self._part(pid), offset, axis=0), op), False
+        except OSError as e:
+            return self._fallback_gather(pid, offset, e), True
+
     def _madvise(self, mm: np.memmap, advice_name: str) -> bool:
         """Issue one madvise hint on a window.  Purely advisory and
         guarded — platforms without ``mmap.madvise`` (or numpy builds not
-        exposing the underlying map) silently skip; gather results are
+        exposing the underlying map) skip, and a kernel that rejects the
+        hint only increments ``madvise_failures``; gather results are
         identical either way (property-tested)."""
         import mmap as _mmap
         advice = getattr(_mmap, advice_name, None)
@@ -451,9 +591,14 @@ class MmapFeatures:
         if advice is None or base is None:
             return False
         try:
+            if self.fault_injector is not None:
+                self.fault_injector.fire("storage.madvise")
             base.madvise(advice)
             return True
-        except (OSError, ValueError):  # pragma: no cover - kernel-dependent
+        except (OSError, ValueError):
+            # advisory failure: counted, never raised — the gather works
+            # without the hint, just with worse readahead behaviour
+            self.madvise_failures += 1
             return False
 
     def _madvise_random(self, mm: np.memmap) -> None:
@@ -564,8 +709,11 @@ class MmapFeatures:
         for pid in np.unique(part_id):
             pid = int(pid)
             sel = part_id == pid
-            mm = self._part(pid)
-            np.take(mm, offset[sel], axis=0)   # readahead gather, discarded
+            # readahead gather, discarded; transient I/O errors retried
+            self._retry_io(
+                lambda p=pid, o=offset[sel]: np.take(self._part(p), o,
+                                                     axis=0),
+                "storage.prefetch")
             with self._win_lock:
                 _, new = self._note_touch_window(pid, offset[sel])
                 self._prefetched.add(pid)
@@ -587,8 +735,14 @@ class MmapFeatures:
             sel = part_id == pid
             warm = pid in self._prefetched
             t0 = time.perf_counter()
-            out[sel] = np.take(self._part(pid), offset[sel], axis=0)
+            block, fell_back = self._gather_window(pid, offset[sel],
+                                                   "storage.take")
+            out[sel] = block
             dt = time.perf_counter() - t0
+            if fell_back:
+                # rows came from the backing source, not the blob: no
+                # pages were faulted here, so skip touch/stall accounting
+                continue
             with self._win_lock:
                 touched, fresh = self._note_touch_window(pid, offset[sel])
                 gather_pages += touched
@@ -626,14 +780,18 @@ class MmapFeatures:
         for pid in range(self.num_partitions):
             path = os.path.join(self.spill_dir, self._part_name(pid))
             try:
+                if self.fault_injector is not None:
+                    self.fault_injector.fire("storage.fadvise")
                 fd = os.open(path, os.O_RDONLY)
                 try:
                     os.fsync(fd)
                     fadvise(fd, 0, 0, dontneed)
                 finally:
                     os.close(fd)
-            except OSError:  # pragma: no cover - fs-dependent
-                pass
+            except OSError:
+                # advisory: a file we cannot re-open/fadvise just stays
+                # page-cached — counted so chaos tests can see it happened
+                self.fadvise_failures += 1
 
     def close(self) -> None:
         """Drop all mapped windows (their pages become reclaimable)."""

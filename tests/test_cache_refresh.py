@@ -587,7 +587,7 @@ def test_async_refresh_stage_error_surfaces_at_next_boundary():
                         use_drm=False, tfp_depth=0, seed=0,
                         use_accel_sampler=False, cache_fraction=0.2,
                         cache_refresh=True, cache_drift_threshold=0.0,
-                        async_refresh=True)
+                        async_refresh=True, degrade_on_failure=False)
     tr = HybridGNNTrainer(ds, g, hcfg)
     tr.train(2)                           # generate windowed traffic
     # drain any stage the run itself left in flight

@@ -1,0 +1,518 @@
+"""Fault-injection harness + graceful-degradation tests for the
+storage/prefetch/refresh data plane.
+
+Covers the failure protocol end to end: the deterministic
+``FaultInjector`` itself; ``MmapFeatures`` retry-with-backoff, bounded
+fallback gathers, spill-ENOSPC cleanup and advisory-hint counters;
+``FeatureLoader`` stats integrity under a mid-gather fault;
+``WindowPrefetcher`` supervision (restart budget, permanent failure,
+legacy fail-fast); the ``PrefetchPipeline`` stage watchdog; trainer-level
+degradation + ``health()``.  The ``chaos`` marker runs whole-trainer
+fault scenarios (deterministic: every schedule is seeded and indexed by
+per-op call counts, so runs replay exactly)."""
+import errno
+import glob
+import json
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (HybridConfig, HybridGNNTrainer, PipelineItem,
+                        PipelineStallError, PrefetchPipeline, Stage)
+from repro.graph import (DenseFeatures, FaultInjector, FaultSpec,
+                         GNNConfig, HashedFeatures, MmapFeatures,
+                         NumpySampler, WindowPrefetcher, WorkerKilled,
+                         build_cache, make_dataset)
+from repro.graph.featload import FeatureLoader
+
+N, F, PROWS = 600, 32, 64
+
+
+def _mmap_pair(tmp_path, name="spill", injector=None):
+    hashed = HashedFeatures(N, F, seed=5)
+    dense = DenseFeatures(hashed.take(np.arange(N)))
+    mm = MmapFeatures.spill(hashed, spill_dir=str(tmp_path / name),
+                            partition_rows=PROWS, fault_injector=injector)
+    return dense, mm
+
+
+def _gnn(ds, fanouts=(4, 3)):
+    return GNNConfig(model="sage", layer_dims=ds.layer_dims,
+                     fanouts=fanouts, num_classes=ds.num_classes)
+
+
+# ------------------------------------------------------ injector mechanics
+
+
+def test_spec_matching_and_kinds():
+    s = FaultSpec(op="storage.take", kind="transient", start=2, count=3)
+    assert [s.matches(i) for i in range(7)] == [
+        False, False, True, True, True, False, False]
+    p = FaultSpec(op="storage.take", kind="permanent", start=4)
+    assert not p.matches(3) and p.matches(4) and p.matches(4000)
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultSpec(op="x", kind="flaky")
+
+
+def test_injector_fires_on_exact_call_indices():
+    inj = FaultInjector([FaultSpec(op="storage.take", kind="transient",
+                                   start=1, count=2)])
+    hits = []
+    for i in range(5):
+        try:
+            inj.fire("storage.take")
+            hits.append(False)
+        except OSError as e:
+            assert e.errno == errno.EIO and f"call {i}" in str(e)
+            hits.append(True)
+    assert hits == [False, True, True, False, False]
+    inj.fire("storage.prefetch")        # unscheduled op: counted, no fault
+    rep = inj.report()
+    assert rep["calls"] == {"storage.take": 5, "storage.prefetch": 1}
+    assert rep["injected"] == {"storage.take": 2}
+    assert rep["faults_raised"] == 2
+
+
+def test_injector_delay_and_kill():
+    inj = FaultInjector([
+        FaultSpec(op="pipeline.load", kind="delay", delay=0.05, count=1),
+        FaultSpec(op="prefetch.worker", kind="kill", start=0, count=1,
+                  message="simulated worker death"),
+    ])
+    t0 = time.perf_counter()
+    inj.fire("pipeline.load")
+    assert time.perf_counter() - t0 >= 0.04
+    with pytest.raises(WorkerKilled, match="simulated worker death"):
+        inj.fire("prefetch.worker")
+    inj.fire("prefetch.worker")         # count=1: next call is clean
+    rep = inj.report()
+    assert rep["delays_injected"] == 1
+    assert rep["total_delay_seconds"] == pytest.approx(0.05)
+    # WorkerKilled escapes `except Exception` by design
+    assert not isinstance(WorkerKilled("x"), Exception)
+
+
+def test_injector_json_roundtrip(tmp_path):
+    inj = FaultInjector([FaultSpec(op="storage.take", start=3, count=2,
+                                   errno=errno.ENOSPC)], seed=7)
+    path = str(tmp_path / "schedule.json")
+    with open(path, "w") as fh:
+        fh.write(inj.to_json())
+    for loaded in (FaultInjector.from_json(path),
+                   FaultInjector.from_json(json.loads(inj.to_json()))):
+        assert loaded.seed == 7
+        assert loaded.schedule == inj.schedule
+    # a bare list of spec dicts also loads
+    bare = FaultInjector.from_json([{"op": "storage.prefetch"}])
+    assert bare.schedule == [FaultSpec(op="storage.prefetch")]
+
+
+def test_probabilistic_spec_is_deterministic():
+    def pattern(seed):
+        inj = FaultInjector([FaultSpec(op="storage.take", kind="transient",
+                                       start=0, count=200,
+                                       probability=0.5)], seed=seed)
+        out = []
+        for _ in range(200):
+            try:
+                inj.fire("storage.take")
+                out.append(0)
+            except OSError:
+                out.append(1)
+        return out
+    a, b, c = pattern(3), pattern(3), pattern(4)
+    assert a == b                       # same seed: identical fault pattern
+    assert a != c                       # different seed: different pattern
+    assert 0 < sum(a) < 200             # actually probabilistic
+
+
+# ------------------------------------------- storage retries and fallbacks
+
+
+def test_take_retries_transient_fault_bit_identical(tmp_path):
+    inj = FaultInjector([FaultSpec(op="storage.take", kind="transient",
+                                   start=0, count=2)])
+    dense, mm = _mmap_pair(tmp_path, injector=inj)
+    rows = np.random.default_rng(0).integers(0, N, 300).astype(np.int64)
+    out = mm.take(rows)                 # calls 0,1 fault; call 2 succeeds
+    assert out.tobytes() == dense.take(rows).tobytes()
+    assert mm.io_errors == 2
+    assert mm.io_retries == 2
+    assert mm.io_retry_seconds > 0.0
+    assert mm.fallback_gathers == 0     # retries absorbed it — no fallback
+
+
+def test_take_exhausts_retries_and_raises_without_fallback(tmp_path):
+    inj = FaultInjector([FaultSpec(op="storage.take", kind="permanent")])
+    _, mm = _mmap_pair(tmp_path, injector=inj)
+    mm.fallback_source = None           # storage tier alone: must raise
+    with pytest.raises(OSError):
+        mm.take(np.arange(10, dtype=np.int64))
+    assert mm.io_errors == mm.io_retry_attempts
+    assert mm.io_retries == mm.io_retry_attempts - 1
+
+
+def test_take_falls_back_to_backing_source(tmp_path):
+    inj = FaultInjector([FaultSpec(op="storage.take", kind="permanent")])
+    dense, mm = _mmap_pair(tmp_path, injector=inj)
+    rows = np.random.default_rng(1).integers(0, N, 200).astype(np.int64)
+    out = mm.take(rows)                 # blob unreadable -> backing gather
+    assert out.tobytes() == dense.take(rows).tobytes()
+    assert mm.fallback_gathers > 0
+    assert mm.fallback_rows == sum(
+        np.count_nonzero(rows // PROWS == p)
+        for p in np.unique(rows // PROWS))
+    # fallback rows never came from the blob: no pages were touched
+    assert mm.touched_page_bytes == 0
+
+
+def test_fallback_budget_exhaustion_raises(tmp_path):
+    inj = FaultInjector([FaultSpec(op="storage.take", kind="permanent")])
+    _, mm = _mmap_pair(tmp_path, injector=inj)
+    mm.fallback_row_budget = 8
+    with pytest.raises(OSError, match="fallback gather budget"):
+        mm.take(np.arange(32, dtype=np.int64))
+
+
+def test_prefetch_rows_retries_transient_fault(tmp_path):
+    inj = FaultInjector([FaultSpec(op="storage.prefetch", kind="transient",
+                                   start=0, count=1)])
+    _, mm = _mmap_pair(tmp_path, injector=inj)
+    mm.prefetch_rows(np.arange(PROWS, dtype=np.int64))
+    assert mm.io_retries == 1
+    assert mm.prefetched_window_bytes > 0
+
+
+def test_madvise_failure_counted_not_raised(tmp_path):
+    inj = FaultInjector([FaultSpec(op="storage.madvise", kind="permanent")])
+    dense, mm = _mmap_pair(tmp_path, injector=inj)
+    rows = np.arange(0, N, 3, dtype=np.int64)
+    out = mm.take(rows)                 # hint fails on every window open
+    assert out.tobytes() == dense.take(rows).tobytes()
+    assert mm.madvise_failures > 0
+    assert mm.madvise_calls == 0        # no hint ever landed
+
+
+def test_fadvise_failure_counted_not_raised(tmp_path):
+    inj = FaultInjector([FaultSpec(op="storage.fadvise", kind="permanent",
+                                   errno=errno.EBADF)])
+    dense, mm = _mmap_pair(tmp_path, injector=inj)
+    mm.drop_page_cache()                # every fadvise fails, none raise
+    assert mm.fadvise_failures == mm.num_partitions
+    rows = np.arange(50, dtype=np.int64)
+    assert mm.take(rows).tobytes() == dense.take(rows).tobytes()
+
+
+def test_spill_enospc_cleans_partial_blobs(tmp_path):
+    inj = FaultInjector([FaultSpec(op="storage.spill", kind="permanent",
+                                   start=2, errno=errno.ENOSPC)])
+    spill = tmp_path / "enospc"
+    hashed = HashedFeatures(N, F, seed=5)
+    with pytest.raises(OSError) as ei:
+        MmapFeatures.spill(hashed, spill_dir=str(spill),
+                           partition_rows=PROWS, fault_injector=inj)
+    # the error names the spill dir, the failing partition and the bytes
+    # already written — and no partial blobs (or manifest) survive
+    msg = str(ei.value)
+    assert str(spill) in msg and "bytes written" in msg
+    assert ei.value.errno == errno.ENOSPC
+    expect = 2 * PROWS * F * 4
+    assert f"after {expect} bytes" in msg
+    assert glob.glob(str(spill / "part-*.bin")) == []
+    assert not any(p.name.endswith(".json") for p in spill.iterdir())
+
+
+# ------------------------------------------------- loader stats integrity
+
+
+def test_loader_pool_fault_surfaces_once_stats_intact():
+    ds = make_dataset("ogbn-products", scale=0.002, seed=0,
+                      feature_backend="mmap", partition_rows=128)
+    src = ds.feature_source
+    cache = build_cache(ds, 0.2)        # boot gather runs clean
+    inj = FaultInjector([FaultSpec(op="storage.take", kind="transient",
+                                   start=0, count=1)])
+    src.fault_injector = inj
+    src.io_retry_attempts = 1           # no retries: the fault must surface
+    src.fallback_source = None          # and no fallback to absorb it
+    loader = FeatureLoader(ds, num_threads=2, cache=cache)
+    sampler = NumpySampler(ds.graph, fanouts=(4, 3), seed=0)
+    tgt = np.arange(64, dtype=np.int64)
+    mb = sampler.sample(tgt, ds.labels[tgt])
+    stats0 = (loader.stats.rows, loader.stats.total_rows,
+              cache.stats.lookups, cache.stats.hit_rows)
+    with pytest.raises(OSError):
+        loader.load_compact(mb)         # one pool chunk faults mid-gather
+    # the failed batch left every stats window untouched: the lookup was
+    # classify-only and the accounting commits after the gather
+    assert (loader.stats.rows, loader.stats.total_rows,
+            cache.stats.lookups, cache.stats.hit_rows) == stats0
+    assert loader.window.total_rows == 0
+    # the loader is not poisoned: the next load works and accounts once
+    block = loader.load_compact(mb)
+    assert block.rows.shape[0] == loader.stats.rows
+    assert cache.stats.lookups == 1
+    loader.close()
+
+
+# --------------------------------------------------- prefetch supervision
+
+
+def test_prefetcher_restarts_killed_worker_within_budget(tmp_path):
+    inj = FaultInjector([FaultSpec(op="prefetch.worker", kind="kill",
+                                   start=0, count=1)])
+    dense, mm = _mmap_pair(tmp_path)
+    pf = WindowPrefetcher(mm, restart_budget=2, restart_backoff=0.001,
+                          raise_on_failure=False, fault_injector=inj)
+    rows = np.arange(PROWS, dtype=np.int64)
+    assert pf.submit(rows)              # worker dies on this item
+    assert pf.wait_idle(10.0)
+    assert isinstance(pf.error, WorkerKilled)
+    assert pf.submit(rows)              # supervisor respawns, item works
+    assert pf.wait_idle(10.0)
+    assert pf.restarts == 1 and pf.completed == 1
+    assert pf.healthy and not pf.failed
+    pf.close()
+
+
+def test_prefetcher_fails_permanently_past_budget(tmp_path):
+    # open-ended count: every respawned worker's first item kills it too
+    inj = FaultInjector([FaultSpec(op="prefetch.worker", kind="kill",
+                                   count=1 << 30)])
+    _, mm = _mmap_pair(tmp_path)
+    pf = WindowPrefetcher(mm, restart_budget=1, restart_backoff=0.001,
+                          raise_on_failure=False, fault_injector=inj)
+    rows = np.arange(PROWS, dtype=np.int64)
+    ok = []
+    for _ in range(4):                  # every respawned worker dies again
+        ok.append(pf.submit(rows))
+        pf.wait_idle(10.0)
+    assert pf.failed and not pf.healthy
+    assert ok[-1] is False              # degraded: drops, does not raise
+    assert pf.restarts == 1
+    assert not pf.submit(rows)          # permanently refusing, still calm
+    pf.close()
+
+
+def test_prefetcher_failed_raises_under_legacy_contract(tmp_path):
+    inj = FaultInjector([FaultSpec(op="prefetch.worker", kind="kill")])
+    _, mm = _mmap_pair(tmp_path)
+    pf = WindowPrefetcher(mm, restart_budget=0, fault_injector=inj)
+    rows = np.arange(PROWS, dtype=np.int64)
+    pf.submit(rows)
+    pf.wait_idle(10.0)
+    with pytest.raises(RuntimeError,
+                       match="prefetch worker failed") as ei:
+        pf.submit(rows)
+    assert isinstance(ei.value.__cause__, WorkerKilled)
+    pf.close()
+
+
+# ------------------------------------------------------- pipeline watchdog
+
+
+def _items(n):
+    return [PipelineItem(seq=i, payload=i) for i in range(n)]
+
+
+def test_watchdog_raises_naming_wedged_stage():
+    def wedge(item):
+        if item.seq == 2:
+            time.sleep(30.0)            # dead NFS mount / wedged gather
+        return item
+
+    pipe = PrefetchPipeline([Stage("sample", lambda it: it),
+                             Stage("load", wedge)],
+                            depth=2, watchdog_seconds=0.5)
+    t0 = time.perf_counter()
+    with pytest.raises(PipelineStallError) as ei:
+        list(pipe.run(_items(8)))
+    assert time.perf_counter() - t0 < 10.0   # a diagnosis, not a hang
+    err = ei.value
+    assert err.stage == "load"
+    assert err.stalled_seconds >= 0.5
+    assert set(err.queue_depths) == {"sample_in", "load_in", "output_in"}
+    assert err.completed["load"] == 2   # items 0,1 passed; 2 wedged
+    assert "wedged" in str(err) and "'load'" in str(err)
+
+
+def test_watchdog_quiet_on_clean_and_sequential_runs():
+    stages = [Stage("a", lambda it: it), Stage("b", lambda it: it)]
+    for depth in (0, 2):
+        pipe = PrefetchPipeline(stages, depth=depth, watchdog_seconds=0.2)
+        out = list(pipe.run(_items(30)))
+        assert [o.seq for o in out] == list(range(30))
+
+
+def test_injected_delay_backs_queues_up_into_storm():
+    # a long delay on the LAST stage wedges it; bounded queues upstream
+    # fill behind it (the queue-full storm) and the watchdog's snapshot
+    # shows the backlog
+    inj = FaultInjector([FaultSpec(op="pipeline.slow", kind="delay",
+                                   start=1, count=1, delay=30.0)])
+    pipe = PrefetchPipeline([Stage("fast", lambda it: it),
+                             Stage("slow", lambda it: it)],
+                            depth=1, watchdog_seconds=0.5,
+                            fault_injector=inj)
+    with pytest.raises(PipelineStallError) as ei:
+        list(pipe.run(_items(8)))
+    assert ei.value.stage == "slow"
+    assert ei.value.queue_depths["slow_in"] == 1   # full behind the wedge
+
+
+def test_injected_stage_error_uses_failure_protocol():
+    inj = FaultInjector([FaultSpec(op="pipeline.load", kind="transient",
+                                   start=1, count=1)])
+    pipe = PrefetchPipeline([Stage("load", lambda it: it)], depth=2,
+                            fault_injector=inj)
+    with pytest.raises(OSError):
+        list(pipe.run(_items(6)))
+    # the pipeline is reusable after the failure (per-run state)
+    pipe.fault_injector = None
+    assert len(list(pipe.run(_items(6)))) == 6
+
+
+# ------------------------------------------- trainer-level degraded modes
+
+
+def _small_trainer(tmp_path=None, fault_injector=None, **over):
+    ds = make_dataset("ogbn-products", scale=0.002, seed=0,
+                      feature_backend="mmap", partition_rows=512)
+    cfg = dict(total_batch=128, n_accel=2, hybrid=False, use_drm=False,
+               tfp_depth=0, seed=0, use_accel_sampler=False,
+               cache_fraction=0.2)
+    cfg.update(over)
+    hcfg = HybridConfig(**cfg)
+    return HybridGNNTrainer(ds, _gnn(ds), hcfg,
+                            fault_injector=fault_injector)
+
+
+def test_refresh_failure_degrades_then_disables():
+    tr = _small_trainer(cache_refresh=True, cache_drift_threshold=0.0,
+                        refresh_failure_budget=2)
+    tr.train(2)
+    # break the refresh gather tier, then arm the drift signal
+    def bad_take(rows):
+        raise RuntimeError("spill blob gone")
+    tr.cache.source = type("Broken", (), {
+        "take": staticmethod(bad_take), "shape": tr.cache.source.shape,
+        "dtype": np.float32})()
+    from repro.graph import LoadStats
+    rb = tr.cache.row_bytes
+    v0 = tr.cache.version
+    for i in range(2):
+        tr.loader.window.merge(LoadStats(
+            rows=20, bytes=20 * rb, total_rows=100, unique_rows=80,
+            hit_rows=70, saved_bytes=70 * rb))
+        tr._model_hit_rate = 0.99
+        assert not tr._maybe_refresh_cache()   # degrades, never raises
+        assert tr._refresh_failures == i + 1
+    assert tr._refresh_disabled                # budget spent: off for good
+    assert tr.cache.version == v0              # old version kept serving
+    assert tr.cache._staged is None            # failed plan was discarded
+    h = tr.health()
+    assert h["status"] == "degraded" and "refresh" in h["degraded"]
+    assert not h["components"]["refresh"]["enabled"]
+    assert not tr._maybe_refresh_cache()       # disabled: cheap no-op now
+    tr.close()
+
+
+def test_health_report_shape_on_clean_run():
+    tr = _small_trainer(prefetch_windows=2)
+    tr.train(2)
+    h = tr.health()
+    assert h["status"] == "ok" and h["degraded"] == [] and h["events"] == []
+    assert h["components"]["prefetcher"]["healthy"]
+    assert h["components"]["storage"]["io_errors"] == 0
+    tr.close()
+    assert set(tr.storage_io()) >= {
+        "io_retries", "io_retry_seconds", "io_errors", "fallback_gathers",
+        "fallback_rows", "madvise_failures", "fadvise_failures"}
+
+
+# ------------------------------------------------------------ chaos suite
+
+
+@pytest.mark.chaos
+def test_chaos_transient_faults_bit_identical_losses():
+    """Transient storage faults fully absorbed by retries must be
+    invisible to training: losses bit-identical to a fault-free twin."""
+    def run(injector):
+        ds = make_dataset("ogbn-products", scale=0.002, seed=0,
+                          feature_backend="mmap", partition_rows=512)
+        cfg = HybridConfig(total_batch=128, n_accel=2, hybrid=False,
+                           use_drm=False, tfp_depth=2, seed=0,
+                           use_accel_sampler=False, cache_fraction=0.2,
+                           prefetch_windows=2)
+        tr = HybridGNNTrainer(ds, _gnn(ds), cfg, fault_injector=injector)
+        hist = tr.train(4)
+        losses = [m.loss for m in hist]
+        io = dict(tr.storage_io())
+        tr.close()
+        return losses, io
+
+    inj = FaultInjector([
+        FaultSpec(op="storage.take", kind="transient", start=0, count=1),
+        FaultSpec(op="storage.take", kind="transient", start=7, count=2),
+        FaultSpec(op="storage.prefetch", kind="transient", start=1,
+                  count=1),
+    ], seed=0)
+    clean_losses, clean_io = run(None)
+    fault_losses, fault_io = run(inj)
+    assert fault_losses == clean_losses            # bit-identical
+    assert fault_io["io_retries"] >= 3             # the faults DID happen
+    assert fault_io["io_errors"] >= 3
+    assert clean_io["io_errors"] == 0
+    assert inj.report()["faults_raised"] >= 3
+
+
+@pytest.mark.chaos
+def test_chaos_prefetcher_death_mid_epoch_degrades():
+    """Kill the prefetch worker past its restart budget mid-run: training
+    completes on synchronous loads, health() reports the degradation and
+    the overlap discount re-prices to zero."""
+    inj = FaultInjector([FaultSpec(op="prefetch.worker", kind="kill",
+                                   start=2, count=1 << 30)])
+    ds = make_dataset("ogbn-products", scale=0.002, seed=0,
+                      feature_backend="mmap", partition_rows=512)
+    cfg = HybridConfig(total_batch=128, n_accel=2, hybrid=False,
+                       use_drm=False, tfp_depth=2, seed=0,
+                       use_accel_sampler=False, cache_fraction=0.2,
+                       prefetch_windows=2, prefetch_restart_budget=1)
+    tr = HybridGNNTrainer(ds, _gnn(ds), cfg, fault_injector=inj)
+    hist = tr.train(8)                  # survives the mid-epoch death
+    assert len(hist) == 8
+    assert all(np.isfinite(m.loss) for m in hist)
+    assert tr.prefetcher.failed and not tr.prefetcher.healthy
+    assert tr._measured_prefetch_overlap() == 0.0
+    h = tr.health()
+    assert h["status"] == "degraded"
+    assert "prefetcher" in h["degraded"]
+    (ev,) = [e for e in h["events"] if e["component"] == "prefetcher"]
+    assert "synchronously" in ev["action"]
+    assert h["components"]["prefetcher"]["restarts"] == 1
+    tr.close()                          # degraded close stays clean
+
+
+@pytest.mark.chaos
+def test_chaos_watchdog_converts_wedged_stage_to_diagnosis():
+    """An injected 30 s wedge in the TFP load stage raises a diagnostic
+    PipelineStallError within the watchdog deadline instead of hanging
+    the epoch."""
+    inj = FaultInjector([FaultSpec(op="pipeline.load", kind="delay",
+                                   start=2, count=1, delay=30.0)])
+    ds = make_dataset("ogbn-products", scale=0.002, seed=0,
+                      feature_backend="mmap", partition_rows=512)
+    cfg = HybridConfig(total_batch=128, n_accel=2, hybrid=False,
+                       use_drm=False, tfp_depth=2, seed=0,
+                       use_accel_sampler=False, cache_fraction=0.2,
+                       pipeline_watchdog_seconds=1.0)
+    tr = HybridGNNTrainer(ds, _gnn(ds), cfg, fault_injector=inj)
+    t0 = time.perf_counter()
+    with pytest.raises(PipelineStallError) as ei:
+        tr.train(8)
+    assert time.perf_counter() - t0 < 15.0
+    assert ei.value.stage == "load"
+    assert ei.value.watchdog_seconds == 1.0

@@ -492,7 +492,7 @@ def test_close_raises_latched_background_errors(tmp_path):
                        use_drm=False, tfp_depth=0, seed=0,
                        use_accel_sampler=False, cache_fraction=0.2,
                        cache_refresh=True, async_refresh=True,
-                       prefetch_windows=2)
+                       prefetch_windows=2, degrade_on_failure=False)
     tr = HybridGNNTrainer(ds, _gnn(ds), cfg)
     tr._refresh_error = RuntimeError("late stage failure")
     with pytest.raises(RuntimeError, match="async cache-refresh"):
