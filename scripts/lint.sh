@@ -1,0 +1,47 @@
+#!/usr/bin/env bash
+# Static analysis, findings-as-errors (rule catalog: docs/static-analysis.md).
+#
+#   ./scripts/lint.sh             # analyze everything under src/
+#   ./scripts/lint.sh --changed   # analyze everything (cross-file rules need
+#                                 # the whole project) but REPORT only files
+#                                 # touched since origin/main
+#
+# Two steps:
+#  1. repro.analysis — the repo-specific RPR rule set (guarded-by lock
+#     discipline, Pallas kernel invariants, determinism/accounting).
+#  2. mypy — strict on the annotated core (repro.analysis, repro.graph.faults,
+#     repro.core.protocol; per-module config in pyproject.toml).  The step is
+#     SKIPPED with a notice when mypy is not installed: the pinned CI image
+#     carries it, minimal local environments may not, and the RPR step must
+#     still gate either way.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ "${1:-}" == "--changed" ]]; then
+    base="$(git merge-base HEAD origin/main 2>/dev/null \
+            || git rev-parse HEAD~1 2>/dev/null \
+            || echo "")"
+    changed=()
+    if [[ -n "$base" ]]; then
+        while IFS= read -r f; do
+            [[ -f "$f" ]] && changed+=("$f")
+        done < <(git diff --name-only "$base" -- 'src/*.py' 'src/**/*.py')
+    fi
+    if [[ ${#changed[@]} -eq 0 ]]; then
+        echo "lint: no python files under src/ changed since ${base:-HEAD~1}"
+    else
+        python -m repro.analysis src --report-only "${changed[@]}"
+    fi
+else
+    python -m repro.analysis src
+fi
+
+if python -c "import mypy" 2>/dev/null; then
+    python -m mypy --config-file pyproject.toml src/repro
+else
+    echo "lint: mypy not installed — skipping the type-check step" \
+         "(RPR analysis above still gated)"
+fi
+
+echo "lint: OK"

@@ -39,6 +39,10 @@ if [[ "${1:-}" == "--fast" ]]; then
     MARK=(-m "not slow and not chaos")
 fi
 
+# static analysis first: a lock-discipline or kernel-invariant finding is
+# cheaper to surface than the test failure (or silent race) it predicts
+./scripts/lint.sh
+
 # ${MARK[@]+...} guards the empty-array expansion under `set -u` on bash < 4.4
 python -m pytest -x -q ${MARK[@]+"${MARK[@]}"}
 timeout 300 python -m pytest -x -q -m chaos

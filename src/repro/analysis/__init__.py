@@ -1,0 +1,20 @@
+"""Repo-specific static analyzer (the ``RPR`` rule set).
+
+Run with ``python -m repro.analysis [paths...]`` or ``scripts/lint.sh``.
+Rule catalog and suppression conventions: docs/static-analysis.md.
+
+Families:
+
+* ``RPR000`` — unused ``# noqa`` suppression (meta-rule).
+* ``RPR1xx`` — lock discipline over ``guarded_by`` annotations
+  (:mod:`repro.analysis.rules_locks`).
+* ``RPR2xx`` — Pallas kernel invariants
+  (:mod:`repro.analysis.rules_kernels`).
+* ``RPR3xx`` — determinism & accounting
+  (:mod:`repro.analysis.rules_determinism` + RPR303 in rules_locks).
+"""
+from .annotations import guarded_by, requires_lock
+from .engine import Engine, Finding, Rule, default_rules, main, run_paths
+
+__all__ = ["Engine", "Finding", "Rule", "default_rules", "main",
+           "run_paths", "guarded_by", "requires_lock"]

@@ -1,0 +1,262 @@
+"""Single-pass AST lint engine for the repo-specific ``RPR`` rule set.
+
+Design: the engine parses each file once and walks the tree exactly once,
+maintaining a node stack.  Rules subscribe to node *types*; for every node
+the engine dispatches ``visit`` (pre-order) and ``leave`` (post-order) to
+the subscribed rules.  Rules emit :class:`Finding` objects through the
+shared :class:`FileContext`; cross-file rules additionally collect state
+and emit from ``finish()`` after every file has been walked.
+
+Suppression: a physical line may carry ``# noqa: RPR###[, RPR###...]``.
+Findings on that line with a listed code are dropped and the suppression
+is marked used; suppressions that match no finding are themselves reported
+as ``RPR000`` (unused suppression), so stale noqas cannot accumulate.
+``RPR000`` itself cannot be suppressed.  Blanket ``# noqa`` without codes
+is not honored — list the codes.
+
+``--changed`` support: :func:`run` accepts ``report_only`` so cross-file
+rules still see the whole project while findings are reported only for the
+changed subset.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import dataclasses
+import re
+import sys
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple, Type
+
+__all__ = ["Finding", "Rule", "FileContext", "Engine", "main",
+           "default_rules", "run_paths"]
+
+_NOQA_RE = re.compile(r"#\s*noqa:\s*(RPR\d{3}(?:\s*,\s*RPR\d{3})*)",
+                      re.IGNORECASE)
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Finding:
+    """One lint result: stable sort order is (path, line, rule)."""
+    path: str
+    line: int
+    rule: str
+    message: str
+    hint: str = ""
+
+    def render(self) -> str:
+        out = f"{self.path}:{self.line}: {self.rule}: {self.message}"
+        if self.hint:
+            out += f"  [fix: {self.hint}]"
+        return out
+
+
+class FileContext:
+    """Per-file state shared by every rule during the walk.
+
+    ``node_stack`` holds the ancestry of the node currently being visited
+    (the node itself is last); ``parent()`` gives the immediate parent.
+    """
+
+    def __init__(self, path: str, tree: ast.Module, source: str) -> None:
+        self.path = path
+        self.tree = tree
+        self.source = source
+        self.lines = source.splitlines()
+        self.node_stack: List[ast.AST] = []
+        self.findings: List[Finding] = []
+
+    def parent(self, back: int = 1) -> Optional[ast.AST]:
+        i = len(self.node_stack) - 1 - back
+        return self.node_stack[i] if i >= 0 else None
+
+    def report(self, rule: str, node: ast.AST, message: str,
+               hint: str = "") -> None:
+        line = int(getattr(node, "lineno", 1))
+        self.findings.append(Finding(self.path, line, rule, message, hint))
+
+
+class Rule:
+    """Base class.  Subclasses set ``types`` (node classes to receive) and
+    override ``visit``/``leave``; cross-file rules override ``finish``."""
+
+    #: node types this rule wants ``visit``/``leave`` callbacks for
+    types: Tuple[Type[ast.AST], ...] = ()
+
+    def begin_file(self, ctx: FileContext) -> None:
+        pass
+
+    def visit(self, node: ast.AST, ctx: FileContext) -> None:
+        pass
+
+    def leave(self, node: ast.AST, ctx: FileContext) -> None:
+        pass
+
+    def end_file(self, ctx: FileContext) -> None:
+        pass
+
+    def finish(self) -> List[Finding]:
+        """Cross-file findings, emitted after every file has been walked."""
+        return []
+
+
+class Engine:
+    """Walks each file once, dispatching node events to subscribed rules."""
+
+    def __init__(self, rules: Sequence[Rule]) -> None:
+        self.rules = list(rules)
+        self._by_type: Dict[Type[ast.AST], List[Rule]] = {}
+        for rule in self.rules:
+            for t in rule.types:
+                self._by_type.setdefault(t, []).append(rule)
+        #: per-file noqa maps kept for suppressing finish()-phase findings
+        self._noqa: Dict[str, Dict[int, Set[str]]] = {}
+        self.visited_nodes = 0  # instrumentation for the walker property test
+
+    # ------------------------------------------------------------ per file
+
+    @staticmethod
+    def _collect_noqa(source: str) -> Dict[int, Set[str]]:
+        out: Dict[int, Set[str]] = {}
+        for i, line in enumerate(source.splitlines(), start=1):
+            m = _NOQA_RE.search(line)
+            if m:
+                codes = {c.strip().upper()
+                         for c in m.group(1).split(",") if c.strip()}
+                out[i] = codes
+        return out
+
+    def check_file(self, path: str, source: Optional[str] = None,
+                   raw: bool = False) -> List[Finding]:
+        """Walk one file.  By default returns *suppression-filtered*
+        findings plus RPR000 for unused suppressions; ``raw=True`` returns
+        unfiltered findings (``run()`` applies suppression after the
+        cross-file ``finish()`` phase instead)."""
+        if source is None:
+            source = Path(path).read_text()
+        try:
+            tree = ast.parse(source, filename=path)
+        except SyntaxError as e:
+            return [Finding(path, int(e.lineno or 1), "RPR999",
+                            f"syntax error: {e.msg}")]
+        noqa = self._collect_noqa(source)
+        self._noqa[path] = noqa
+        ctx = FileContext(path, tree, source)
+        for rule in self.rules:
+            rule.begin_file(ctx)
+        self._walk(tree, ctx)
+        for rule in self.rules:
+            rule.end_file(ctx)
+        if raw:
+            return ctx.findings
+        return self._apply_noqa(ctx.findings, noqa, path)
+
+    def _walk(self, node: ast.AST, ctx: FileContext) -> None:
+        self.visited_nodes += 1
+        ctx.node_stack.append(node)
+        for rule in self._by_type.get(type(node), ()):
+            rule.visit(node, ctx)
+        for child in ast.iter_child_nodes(node):
+            self._walk(child, ctx)
+        for rule in self._by_type.get(type(node), ()):
+            rule.leave(node, ctx)
+        ctx.node_stack.pop()
+
+    # -------------------------------------------------------- suppression
+
+    @staticmethod
+    def _apply_noqa(findings: List[Finding], noqa: Dict[int, Set[str]],
+                    path: str, used: Optional[Set[Tuple[int, str]]] = None,
+                    emit_unused: bool = True) -> List[Finding]:
+        used = set() if used is None else used
+        kept: List[Finding] = []
+        for f in findings:
+            codes = noqa.get(f.line, set())
+            if f.rule in codes and f.rule != "RPR000":
+                used.add((f.line, f.rule))
+            else:
+                kept.append(f)
+        if emit_unused:
+            for line, codes in sorted(noqa.items()):
+                for code in sorted(codes):
+                    if code == "RPR000" or (line, code) not in used:
+                        kept.append(Finding(
+                            path, line, "RPR000",
+                            f"unused suppression: no {code} finding on "
+                            f"this line",
+                            "delete the stale noqa (RPR000 itself cannot "
+                            "be suppressed)" if code == "RPR000"
+                            else "delete the stale noqa"))
+        return kept
+
+    # ------------------------------------------------------------ project
+
+    def run(self, paths: Iterable[str],
+            report_only: Optional[Set[str]] = None) -> List[Finding]:
+        """Analyze ``paths``; report findings for every path unless
+        ``report_only`` restricts the reported subset (cross-file rules
+        still see everything)."""
+        path_list = sorted(str(p) for p in paths)
+        by_path: Dict[str, List[Finding]] = {}
+        for p in path_list:
+            by_path[p] = self.check_file(p, raw=True)
+        for rule in self.rules:
+            for f in rule.finish():
+                by_path.setdefault(f.path, []).append(f)
+        findings: List[Finding] = []
+        for p, raw in by_path.items():
+            if report_only is not None and p not in report_only:
+                continue
+            findings.extend(self._apply_noqa(raw, self._noqa.get(p, {}), p))
+        return sorted(findings)
+
+
+def default_rules() -> List[Rule]:
+    from .rules_determinism import DeterminismRules
+    from .rules_kernels import KernelInvariantRules
+    from .rules_locks import LockDisciplineRules
+    return [LockDisciplineRules(), KernelInvariantRules(),
+            DeterminismRules()]
+
+
+def iter_py_files(root: Path) -> List[str]:
+    return sorted(str(p) for p in root.rglob("*.py"))
+
+
+def run_paths(paths: Sequence[str],
+              report_only: Optional[Set[str]] = None) -> List[Finding]:
+    engine = Engine(default_rules())
+    return engine.run(paths, report_only=report_only)
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Repo-specific static analyzer (RPR rule set).")
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files or directories to analyze (default: src)")
+    ap.add_argument("--report-only", nargs="*", default=None, metavar="PATH",
+                    help="analyze all PATHS for cross-file context but "
+                         "report findings only for these files")
+    args = ap.parse_args(argv)
+
+    files: List[str] = []
+    for p in args.paths:
+        path = Path(p)
+        if path.is_dir():
+            files.extend(iter_py_files(path))
+        else:
+            files.append(str(path))
+    report_only = (None if args.report_only is None
+                   else {str(Path(p)) for p in args.report_only})
+    findings = run_paths(files, report_only=report_only)
+    for f in findings:
+        print(f.render())
+    n = len(findings)
+    print(f"repro.analysis: {n} finding{'s' if n != 1 else ''} "
+          f"in {len(files)} files")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":  # pragma: no cover
+    sys.exit(main())

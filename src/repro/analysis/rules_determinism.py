@@ -1,0 +1,109 @@
+"""RPR3xx determinism & accounting rules.
+
+* **RPR301** — bare ``np.random.*`` global-state call (``seed``,
+  ``randint``, ``shuffle``, ...).  The repo's determinism contract is
+  seeded ``np.random.default_rng``/``Generator`` instances everywhere:
+  global-state draws make losses depend on import order and thread
+  interleaving.
+* **RPR302** — an ``except:`` / ``except BaseException:`` handler that
+  can swallow ``WorkerKilled``.  The fault injector's kill faults derive
+  from ``BaseException`` *on purpose* so that ordinary ``except
+  Exception`` resilience code passes them through; a handler broad
+  enough to catch them must either re-raise or record the bound
+  exception (``except BaseException as e: ... e ...``) — silently
+  dropping it turns an injected worker death into a hang.
+* **RPR303** — counter accounting under the declared guard; emitted by
+  the lock-discipline state machine (see ``rules_locks``), documented
+  here with its family.
+
+``except Exception`` is deliberately *not* flagged: it cannot catch
+``WorkerKilled`` and is the recommended resilience idiom.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import List, Optional
+
+from .engine import FileContext, Rule
+
+__all__ = ["DeterminismRules"]
+
+_ALLOWED_NP_RANDOM = {"default_rng", "Generator", "SeedSequence",
+                      "PCG64", "Philox", "MT19937", "BitGenerator"}
+
+
+def _is_broad_handler(h: ast.ExceptHandler) -> bool:
+    t = h.type
+    if t is None:
+        return True
+    if isinstance(t, ast.Name):
+        return t.id == "BaseException"
+    if isinstance(t, ast.Attribute):
+        return t.attr == "BaseException"
+    if isinstance(t, ast.Tuple):
+        return any(_is_broad_handler(
+            ast.ExceptHandler(type=e, name=None, body=[])) for e in t.elts)
+    return False
+
+
+@dataclasses.dataclass
+class _Handler:
+    node: ast.ExceptHandler
+    bound: Optional[str]
+    saved: bool = False
+
+
+class DeterminismRules(Rule):
+    types = (ast.Call, ast.ExceptHandler, ast.Raise, ast.Name)
+
+    def __init__(self) -> None:
+        self._handlers: List[_Handler] = []
+
+    def begin_file(self, ctx: FileContext) -> None:
+        self._handlers = []
+
+    def visit(self, node: ast.AST, ctx: FileContext) -> None:
+        if isinstance(node, ast.Call):
+            self._check_np_random(node, ctx)
+        elif isinstance(node, ast.ExceptHandler):
+            if _is_broad_handler(node):
+                self._handlers.append(_Handler(node, node.name))
+        elif isinstance(node, ast.Raise):
+            if self._handlers:
+                self._handlers[-1].saved = True
+        elif isinstance(node, ast.Name):
+            for h in self._handlers:
+                if h.bound is not None and node.id == h.bound:
+                    h.saved = True
+
+    def leave(self, node: ast.AST, ctx: FileContext) -> None:
+        if isinstance(node, ast.ExceptHandler) and self._handlers \
+                and self._handlers[-1].node is node:
+            h = self._handlers.pop()
+            if not h.saved:
+                what = ("bare 'except:'" if node.type is None
+                        else "'except BaseException'")
+                ctx.report(
+                    "RPR302", node,
+                    f"{what} can swallow WorkerKilled (a BaseException "
+                    f"by contract) without re-raising or recording it",
+                    "narrow to 'except Exception', or bind the exception "
+                    "and record/re-raise it")
+
+    @staticmethod
+    def _check_np_random(node: ast.Call, ctx: FileContext) -> None:
+        f = node.func
+        if not (isinstance(f, ast.Attribute)
+                and isinstance(f.value, ast.Attribute)
+                and f.value.attr == "random"
+                and isinstance(f.value.value, ast.Name)
+                and f.value.value.id in ("np", "numpy")):
+            return
+        if f.attr in _ALLOWED_NP_RANDOM:
+            return
+        ctx.report("RPR301", node,
+                   f"global-state 'np.random.{f.attr}(...)' call "
+                   f"(import-order / thread-interleaving dependent)",
+                   "draw from a seeded np.random.default_rng(...) "
+                   "Generator instead")

@@ -1,0 +1,292 @@
+"""RPR2xx Pallas kernel invariant rules.
+
+Kernel bodies (functions named ``*_kernel`` or taking ``*_ref`` params, in
+modules that import ``jax.experimental.pallas``) trace to device programs:
+Python side effects inside them either silently bake trace-time state into
+the compiled kernel or desync interpret mode from compiled mode.
+
+* **RPR201** — side effect in a kernel body: ``global``/``nonlocal``,
+  ``np.random.*``, ``time.*``, ``print``, ``open``.
+* **RPR202** — a function issuing a ``pallas_call`` with
+  ``input_output_aliases`` whose callers do not go through the keep-last
+  dedupe contract.  Aliased-output scatters require unique target slots
+  (concurrent per-row write DMAs have unspecified order on duplicates);
+  the contract is that some caller within two hops either calls
+  ``np.unique`` or documents "keep-last"/"last writer" in its docstring
+  (``ops.update_cache_rows`` is the canonical wrapper).  Cross-file rule.
+* **RPR203** — a DMA ``.start()`` whose semaphore never sees a
+  ``.wait()`` anywhere in the same kernel.  Matching is by semaphore
+  *root name* (``rd_sem`` in ``rd_sem.at[slot]``), including DMAs built
+  by local helper functions that return ``make_async_copy(...)``; true
+  per-control-path analysis is out of scope (Pallas control flow is
+  ``pl.when``/``fori_loop``, where lexical containment is the only
+  tractable approximation — documented in docs/static-analysis.md).
+* **RPR204** — a call-wrapper taking a ``depth``/``pipeline_depth``
+  parameter that issues a ``pallas_call`` without sizing its scratch via
+  ``check_vmem_scratch`` (the 8 MiB VMEM budget guard).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, List, Optional, Set, Tuple
+
+from .engine import FileContext, Finding, Rule
+
+__all__ = ["KernelInvariantRules"]
+
+_DEPTH_PARAMS = {"depth", "pipeline_depth"}
+_DOC_MARKERS = ("keep-last", "last writer")
+
+
+def _root_name(expr: ast.expr) -> Optional[str]:
+    while isinstance(expr, (ast.Attribute, ast.Subscript, ast.Call)):
+        expr = getattr(expr, "value", None) or getattr(expr, "func", None)
+        if expr is None:
+            return None
+    return expr.id if isinstance(expr, ast.Name) else None
+
+
+def _call_name(func: ast.expr) -> Optional[str]:
+    if isinstance(func, ast.Name):
+        return func.id
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    return None
+
+
+def _is_make_async_copy(func: ast.expr) -> bool:
+    return _call_name(func) == "make_async_copy"
+
+
+def _arg_names(node: ast.FunctionDef) -> List[str]:
+    a = node.args
+    return [x.arg for x in (a.posonlyargs + a.args + a.kwonlyargs)]
+
+
+@dataclasses.dataclass
+class _Func:
+    node: ast.FunctionDef
+    name: str
+    is_kernel: bool
+    depth_param: bool
+    doc_marked: bool
+    helpers: Dict[str, str] = dataclasses.field(default_factory=dict)
+    started: Dict[str, int] = dataclasses.field(default_factory=dict)
+    waited: Set[str] = dataclasses.field(default_factory=set)
+    calls: Set[str] = dataclasses.field(default_factory=set)
+    has_unique: bool = False
+    has_alias_kw: bool = False
+    has_pallas_call: bool = False
+    has_scratch_check: bool = False
+    dma_helper_sem: Optional[str] = None
+
+
+@dataclasses.dataclass
+class _FuncInfo:
+    path: str
+    line: int
+    marked: bool
+    calls: Set[str]
+    aliasing: bool
+
+
+class KernelInvariantRules(Rule):
+    types = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Call,
+             ast.Return, ast.Global, ast.Nonlocal)
+
+    def __init__(self) -> None:
+        self._stack: List[_Func] = []
+        self._pallas_file = False
+        # RPR202 cross-file call graph: bare name -> merged info
+        self._funcs: Dict[str, _FuncInfo] = {}
+
+    # ----------------------------------------------------------- lifecycle
+
+    def begin_file(self, ctx: FileContext) -> None:
+        self._stack = []
+        self._pallas_file = any(
+            ("pallas" in (getattr(n, "module", "") or "")) or
+            any("pallas" in a.name for a in getattr(n, "names", []))
+            for n in ctx.tree.body
+            if isinstance(n, (ast.Import, ast.ImportFrom)))
+
+    # ------------------------------------------------------------- events
+
+    def visit(self, node: ast.AST, ctx: FileContext) -> None:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            args = _arg_names(node)
+            is_kernel = self._pallas_file and (
+                node.name.endswith("_kernel") or
+                any(a.endswith("_ref") for a in args))
+            doc = ast.get_docstring(node) or ""
+            doc_norm = " ".join(doc.split()).lower()
+            self._stack.append(_Func(
+                node, node.name, is_kernel,
+                depth_param=any(a in _DEPTH_PARAMS for a in args),
+                doc_marked=any(m in doc_norm for m in _DOC_MARKERS)))
+        elif isinstance(node, (ast.Global, ast.Nonlocal)):
+            if self._kernel_ancestor() is not None:
+                kw = "global" if isinstance(node, ast.Global) else "nonlocal"
+                ctx.report("RPR201", node,
+                           f"'{kw}' inside a Pallas kernel body "
+                           f"(side effects bake trace-time state into the "
+                           f"compiled kernel)",
+                           "thread state through refs/closures instead")
+        elif isinstance(node, ast.Return):
+            self._on_return(node)
+        elif isinstance(node, ast.Call):
+            self._on_call(node, ctx)
+
+    def leave(self, node: ast.AST, ctx: FileContext) -> None:
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return
+        if not self._stack or self._stack[-1].node is not node:
+            return
+        rec = self._stack.pop()
+        # a nested DMA-builder helper registers with its enclosing kernel
+        if rec.dma_helper_sem is not None:
+            k = self._kernel_ancestor()
+            if k is not None:
+                k.helpers[rec.name] = rec.dma_helper_sem
+        if rec.is_kernel:
+            for sem in sorted(set(rec.started) - rec.waited):
+                ctx.report("RPR203", rec.node,
+                           f"kernel '{rec.name}' starts DMA(s) on "
+                           f"semaphore '{sem}' but never waits on it",
+                           f"add a matching make_async_copy(..., {sem}"
+                           f".at[...]).wait() before the slot is reused")
+        if (self._pallas_file and rec.depth_param and rec.has_pallas_call
+                and not rec.has_scratch_check):
+            ctx.report("RPR204", rec.node,
+                       f"'{rec.name}' takes a pipeline depth parameter "
+                       f"and issues a pallas_call without sizing VMEM "
+                       f"scratch via check_vmem_scratch",
+                       "call check_vmem_scratch(depth * block_bytes, ...) "
+                       "before the pallas_call")
+        if not self._stack:  # module-level def: record for the call graph
+            prev = self._funcs.get(rec.name)
+            info = _FuncInfo(ctx.path, rec.node.lineno,
+                             rec.has_unique or rec.doc_marked,
+                             set(rec.calls), rec.has_alias_kw)
+            if prev is not None:  # same bare name elsewhere: merge (rare)
+                info.marked = info.marked or prev.marked
+                info.calls |= prev.calls
+                info.aliasing = info.aliasing or prev.aliasing
+            self._funcs[rec.name] = info
+        else:
+            # nested defs contribute their calls to the enclosing function
+            self._stack[0].calls |= rec.calls
+            self._stack[0].has_unique |= rec.has_unique
+
+    # ------------------------------------------------------------- helpers
+
+    def _kernel_ancestor(self) -> Optional[_Func]:
+        for rec in reversed(self._stack):
+            if rec.is_kernel:
+                return rec
+        return None
+
+    def _on_return(self, node: ast.Return) -> None:
+        if not self._stack:
+            return
+        v = node.value
+        if isinstance(v, ast.Call) and _is_make_async_copy(v.func) and v.args:
+            sem = _root_name(v.args[-1])
+            if sem is not None:
+                self._stack[-1].dma_helper_sem = sem
+
+    def _sem_of_dma_expr(self, call: ast.Call) -> Optional[str]:
+        """Semaphore root for ``<X>.start()``/``.wait()`` receivers: X is
+        either ``make_async_copy(...)`` directly or a call to a local
+        helper that returns one."""
+        if _is_make_async_copy(call.func) and call.args:
+            return _root_name(call.args[-1])
+        name = _call_name(call.func)
+        if name is not None:
+            k = self._kernel_ancestor()
+            if k is not None and name in k.helpers:
+                return k.helpers[name]
+        return None
+
+    def _on_call(self, node: ast.Call, ctx: FileContext) -> None:
+        rec = self._stack[-1] if self._stack else None
+        f = node.func
+        name = _call_name(f)
+        if rec is not None and name is not None:
+            rec.calls.add(name)
+        # DMA start/wait accounting, credited to the enclosing kernel
+        if isinstance(f, ast.Attribute) and f.attr in ("start", "wait") \
+                and isinstance(f.value, ast.Call):
+            sem = self._sem_of_dma_expr(f.value)
+            k = self._kernel_ancestor()
+            if sem is not None and k is not None:
+                if f.attr == "start":
+                    k.started[sem] = k.started.get(sem, 0) + 1
+                else:
+                    k.waited.add(sem)
+        # side effects inside kernel bodies
+        k = self._kernel_ancestor()
+        if k is not None:
+            root = _root_name(f) if isinstance(f, ast.Attribute) else None
+            if isinstance(f, ast.Name) and f.id in ("print", "open"):
+                ctx.report("RPR201", node,
+                           f"'{f.id}(...)' inside Pallas kernel body "
+                           f"'{k.name}'",
+                           "kernels must be side-effect-free")
+            elif isinstance(f, ast.Attribute) and root in ("np", "numpy") \
+                    and isinstance(f.value, ast.Attribute) \
+                    and f.value.attr == "random":
+                ctx.report("RPR201", node,
+                           f"np.random call inside Pallas kernel body "
+                           f"'{k.name}' (trace-time randomness bakes into "
+                           f"the compiled program)",
+                           "pass randomness in as an operand")
+            elif isinstance(f, ast.Attribute) and root == "time":
+                ctx.report("RPR201", node,
+                           f"time.{f.attr}() inside Pallas kernel body "
+                           f"'{k.name}'",
+                           "kernels must be side-effect-free")
+        if rec is not None:
+            if name == "unique" and isinstance(f, ast.Attribute) \
+                    and _root_name(f.value) in ("np", "numpy"):
+                rec.has_unique = True
+            if name == "pallas_call":
+                rec.has_pallas_call = True
+            if name == "check_vmem_scratch":
+                rec.has_scratch_check = True
+            if any(kw.arg == "input_output_aliases" for kw in node.keywords):
+                rec.has_alias_kw = True
+
+    # ------------------------------------------------------------- project
+
+    def finish(self) -> List[Finding]:
+        out: List[Finding] = []
+        callers: Dict[str, Set[str]] = {}
+        for fname, info in self._funcs.items():
+            for callee in info.calls:
+                if callee in self._funcs:
+                    callers.setdefault(callee, set()).add(fname)
+
+        def marked(n: str) -> bool:
+            return self._funcs[n].marked
+
+        for wname, winfo in sorted(self._funcs.items()):
+            if not winfo.aliasing or marked(wname):
+                continue
+            for c in sorted(callers.get(wname, ())):
+                if marked(c):
+                    continue
+                c2 = callers.get(c, set())
+                if c2 and all(marked(x) for x in c2):
+                    continue
+                ci = self._funcs[c]
+                out.append(Finding(
+                    ci.path, ci.line, "RPR202",
+                    f"'{c}' reaches aliased-output kernel wrapper "
+                    f"'{wname}' (input_output_aliases) without the "
+                    f"keep-last dedupe contract within two caller hops",
+                    "route through ops.update_cache_rows or dedupe slots "
+                    "keep-last (np.unique on the reversed slot list) "
+                    "before the aliased scatter"))
+        return out

@@ -1,0 +1,263 @@
+"""RPR1xx lock-discipline rules (plus RPR303 counter accounting).
+
+Classes opt in with ``@guarded_by("<lock>", "<attr>", ...)`` from
+``repro.analysis.annotations`` (read *syntactically* — the analyzer never
+imports the code under analysis).  Within an annotated class:
+
+* **RPR101** — read of a guarded attribute outside ``with self.<lock>:``.
+* **RPR104** — write (assignment / del) of a guarded attribute outside
+  the lock.
+* **RPR303** — augmented assignment (``+=`` et al.) on a guarded stats
+  counter outside the lock: the accounting-symmetry rule.  Split from
+  RPR104 because lost counter updates corrupt ``health()`` silently
+  rather than breaking correctness loudly.
+* **RPR102** — lock acquisition order inversion: ``with self.A: with
+  self.B:`` observed in one place and ``with self.B: with self.A:`` in
+  another (same class) is a deadlock waiting for a scheduler.
+* **RPR103** — blocking call (jax dispatch, ``.take()`` gathers, file
+  I/O, sleeps, joins) inside a ``with <lock>:`` body — the bug class the
+  PR 5 off-lock staged gather fixed by hand.
+
+Scope model: each function body is a frame with its own held-lock set.
+``__init__``/``__del__`` are exempt (the object is not yet / no longer
+shared).  Nested ``def``/``lambda`` bodies start with *no* held locks —
+a closure created under a lock may run on another thread after the lock
+is released, so inheriting the lexical lock set would be unsound.
+``@requires_lock("<lock>")`` marks helpers whose contract is that the
+caller already holds the lock.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, List, Optional, Set, Tuple
+
+from .engine import FileContext, Finding, Rule
+
+__all__ = ["LockDisciplineRules"]
+
+#: attribute-call names considered blocking when a declared lock is held
+_BLOCKING_ATTRS = {"take", "tofile", "fsync", "block_until_ready",
+                   "device_put", "sleep", "join", "result"}
+#: receivers whose ``.take`` is a cheap in-memory gather, not storage I/O
+_CHEAP_TAKE_RECEIVERS = {"np", "numpy", "jnp"}
+_EXEMPT_METHODS = {"__init__", "__del__"}
+
+
+@dataclasses.dataclass
+class _ClassInfo:
+    name: str
+    guarded: Dict[str, str]        # attr -> lock name
+    locks: Set[str]                # every declared lock name
+
+
+@dataclasses.dataclass
+class _Frame:
+    node: ast.AST
+    cls: Optional[_ClassInfo]
+    exempt: bool
+    held: List[str] = dataclasses.field(default_factory=list)
+    # with-nodes to the number of locks they pushed, for the leave pop
+    with_counts: List[Tuple[ast.AST, int]] = dataclasses.field(
+        default_factory=list)
+
+
+def _decorator_call(dec: ast.expr, name: str) -> Optional[ast.Call]:
+    if isinstance(dec, ast.Call):
+        f = dec.func
+        if (isinstance(f, ast.Name) and f.id == name) or \
+           (isinstance(f, ast.Attribute) and f.attr == name):
+            return dec
+    return None
+
+
+def _str_args(call: ast.Call) -> List[str]:
+    out = []
+    for a in call.args:
+        if isinstance(a, ast.Constant) and isinstance(a.value, str):
+            out.append(a.value)
+    return out
+
+
+def _root_name(expr: ast.expr) -> Optional[str]:
+    while isinstance(expr, (ast.Attribute, ast.Subscript)):
+        expr = expr.value
+    return expr.id if isinstance(expr, ast.Name) else None
+
+
+class LockDisciplineRules(Rule):
+    types = (ast.ClassDef, ast.FunctionDef, ast.AsyncFunctionDef,
+             ast.Lambda, ast.With, ast.Attribute, ast.Call)
+
+    def __init__(self) -> None:
+        # (class, inner_first, outer_first) -> first (path, line) observed
+        self._order: Dict[Tuple[str, str, str], Tuple[str, int]] = {}
+        self._class_stack: List[Optional[_ClassInfo]] = []
+        self._frames: List[_Frame] = []
+
+    # ----------------------------------------------------------- lifecycle
+
+    def begin_file(self, ctx: FileContext) -> None:
+        self._class_stack = []
+        self._frames = []
+
+    # --------------------------------------------------------------- class
+
+    def visit(self, node: ast.AST, ctx: FileContext) -> None:
+        if isinstance(node, ast.ClassDef):
+            self._class_stack.append(self._parse_class(node))
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            self._enter_function(node, ctx)
+        elif isinstance(node, ast.Lambda):
+            cls = self._frames[-1].cls if self._frames else None
+            self._frames.append(_Frame(node, cls, exempt=False))
+        elif isinstance(node, ast.With):
+            self._enter_with(node, ctx)
+        elif isinstance(node, ast.Attribute):
+            self._check_attribute(node, ctx)
+        elif isinstance(node, ast.Call):
+            self._check_blocking(node, ctx)
+
+    def leave(self, node: ast.AST, ctx: FileContext) -> None:
+        if isinstance(node, ast.ClassDef):
+            self._class_stack.pop()
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.Lambda)):
+            if self._frames and self._frames[-1].node is node:
+                self._frames.pop()
+        elif isinstance(node, ast.With):
+            fr = self._frames[-1] if self._frames else None
+            if fr and fr.with_counts and fr.with_counts[-1][0] is node:
+                _, n = fr.with_counts.pop()
+                for _ in range(n):
+                    fr.held.pop()
+
+    # ------------------------------------------------------------- helpers
+
+    @staticmethod
+    def _parse_class(node: ast.ClassDef) -> Optional[_ClassInfo]:
+        guarded: Dict[str, str] = {}
+        locks: Set[str] = set()
+        for dec in node.decorator_list:
+            call = _decorator_call(dec, "guarded_by")
+            if call is not None:
+                names = _str_args(call)
+                if names:
+                    lock, attrs = names[0], names[1:]
+                    locks.add(lock)
+                    for a in attrs:
+                        guarded[a] = lock
+        if not locks:
+            return None
+        return _ClassInfo(node.name, guarded, locks)
+
+    def _enter_function(self, node: ast.FunctionDef,
+                        ctx: FileContext) -> None:
+        parent = ctx.parent()
+        is_method = isinstance(parent, ast.ClassDef) and \
+            bool(self._class_stack) and self._class_stack[-1] is not None
+        cls = self._class_stack[-1] if is_method else (
+            self._frames[-1].cls if self._frames else None)
+        exempt = is_method and node.name in _EXEMPT_METHODS
+        frame = _Frame(node, cls, exempt)
+        if cls is not None:
+            for dec in node.decorator_list:
+                call = _decorator_call(dec, "requires_lock")
+                if call is not None:
+                    frame.held.extend(_str_args(call))
+        self._frames.append(frame)
+
+    def _enter_with(self, node: ast.With, ctx: FileContext) -> None:
+        fr = self._frames[-1] if self._frames else None
+        if fr is None or fr.cls is None:
+            return
+        acquired = []
+        for item in node.items:
+            e = item.context_expr
+            if isinstance(e, ast.Attribute) and \
+                    isinstance(e.value, ast.Name) and e.value.id == "self" \
+                    and e.attr in fr.cls.locks:
+                acquired.append(e.attr)
+        if not acquired:
+            return
+        for new in acquired:
+            for outer in fr.held:
+                if outer != new:
+                    key = (fr.cls.name, outer, new)
+                    self._order.setdefault(key, (ctx.path, node.lineno))
+            fr.held.append(new)
+        fr.with_counts.append((node, len(acquired)))
+
+    def _check_attribute(self, node: ast.Attribute,
+                         ctx: FileContext) -> None:
+        fr = self._frames[-1] if self._frames else None
+        if fr is None or fr.cls is None or fr.exempt:
+            return
+        if not (isinstance(node.value, ast.Name) and node.value.id == "self"):
+            return
+        lock = fr.cls.guarded.get(node.attr)
+        if lock is None or lock in fr.held:
+            return
+        parent = ctx.parent()
+        if isinstance(parent, ast.AugAssign) and parent.target is node:
+            ctx.report("RPR303", node,
+                       f"augmented update of guarded counter "
+                       f"'self.{node.attr}' outside 'with self.{lock}:' "
+                       f"(lost-update race)",
+                       f"move the += under 'with self.{lock}:'")
+        elif isinstance(node.ctx, (ast.Store, ast.Del)):
+            ctx.report("RPR104", node,
+                       f"write to guarded attribute 'self.{node.attr}' "
+                       f"outside 'with self.{lock}:'",
+                       f"wrap in 'with self.{lock}:'")
+        else:
+            ctx.report("RPR101", node,
+                       f"read of guarded attribute 'self.{node.attr}' "
+                       f"outside 'with self.{lock}:'",
+                       f"wrap in 'with self.{lock}:' or snapshot under "
+                       f"the lock")
+
+    def _check_blocking(self, node: ast.Call, ctx: FileContext) -> None:
+        fr = self._frames[-1] if self._frames else None
+        if fr is None or not fr.held:
+            return
+        f = node.func
+        name: Optional[str] = None
+        if isinstance(f, ast.Name) and f.id == "open":
+            name = "open"
+        elif isinstance(f, ast.Attribute) and f.attr in _BLOCKING_ATTRS:
+            recv = _root_name(f.value)
+            if f.attr == "take" and recv in _CHEAP_TAKE_RECEIVERS:
+                return
+            # '...'.join(seq) string building and os.path.join are pure
+            # CPU — only thread/process/pool joins block
+            if f.attr == "join" and (isinstance(f.value, ast.Constant)
+                                     or recv == "os"):
+                return
+            name = f.attr
+        if name is not None:
+            held = ", ".join(f"self.{k}" for k in fr.held)
+            ctx.report("RPR103", node,
+                       f"blocking call '{name}(...)' while holding {held}",
+                       "stage the slow work outside the lock and publish "
+                       "the result under it (PR 5 staged-gather pattern)")
+
+    # ------------------------------------------------------------- project
+
+    def finish(self) -> List[Finding]:
+        out: List[Finding] = []
+        for (cls, a, b), (path, line) in sorted(self._order.items()):
+            if a < b and (cls, b, a) in self._order:
+                other_path, other_line = self._order[(cls, b, a)]
+                out.append(Finding(
+                    path, line, "RPR102",
+                    f"lock order inversion in {cls}: self.{a} -> self.{b} "
+                    f"here but self.{b} -> self.{a} at "
+                    f"{other_path}:{other_line}",
+                    "pick one global acquisition order for these locks"))
+                out.append(Finding(
+                    other_path, other_line, "RPR102",
+                    f"lock order inversion in {cls}: self.{b} -> self.{a} "
+                    f"here but self.{a} -> self.{b} at {path}:{line}",
+                    "pick one global acquisition order for these locks"))
+        return out

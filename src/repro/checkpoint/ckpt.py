@@ -32,6 +32,8 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
+from repro.analysis.annotations import guarded_by
+
 __all__ = ["save", "save_async", "restore", "latest_step", "CheckpointManager"]
 
 PyTree = Any
@@ -101,21 +103,32 @@ def save(directory: str, step: int, tree: PyTree,
     return final
 
 
+@guarded_by("_lock", "_thread")
 class _AsyncSaver:
+    """One in-flight background save at most.  The module-level singleton
+    is reachable from any thread (``save_async`` / ``wait_for_async``),
+    so the handle swap is locked; the ``join`` itself happens outside the
+    lock — a second caller must never block on the writer's disk time
+    just to learn there is nothing to wait for."""
+
     def __init__(self):
         self._thread: Optional[threading.Thread] = None
+        self._lock = threading.Lock()
 
     def submit(self, directory, step, tree, meta):
         self.wait()
         host_tree = jax.device_get(tree)   # snapshot now, write later
-        self._thread = threading.Thread(
+        t = threading.Thread(
             target=save, args=(directory, step, host_tree, meta), daemon=True)
-        self._thread.start()
+        with self._lock:
+            self._thread = t
+        t.start()
 
     def wait(self):
-        if self._thread is not None:
-            self._thread.join()
-            self._thread = None
+        with self._lock:
+            t, self._thread = self._thread, None
+        if t is not None:
+            t.join()
 
 
 _SAVER = _AsyncSaver()

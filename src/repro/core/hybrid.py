@@ -99,6 +99,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.annotations import guarded_by
 from repro.graph import (FeatureLoader, GNNConfig, GraphDataset, MiniBatch,
                          MissBlock, NumpySampler, WindowPrefetcher,
                          build_cache, compact_lookup, init_params, loss_fn,
@@ -219,6 +220,14 @@ class _TrainerFailure(RuntimeError):
     pass
 
 
+# Deliberately UNGUARDED shared state: _fail_at (written once before the
+# run by the failure-injection test hook, read-only during it),
+# _refresh_failures / _refresh_disabled / _staged_feedback /
+# _refresh_thread (only ever touched at iteration boundaries on the
+# training thread — the refresh worker writes nothing but
+# _refresh_error, which IS declared), and everything the pipeline hands
+# through PipelineItem payloads (queue happens-before).
+@guarded_by("_state_lock", "_failed", "_degraded", "_refresh_error")
 class HybridGNNTrainer:
     def __init__(self, dataset: GraphDataset, gnn_cfg: GNNConfig,
                  cfg: HybridConfig, fault_injector=None):
@@ -234,6 +243,11 @@ class HybridGNNTrainer:
         # degraded-mode record: component -> event dict, surfaced by
         # health(); idempotent per component (first failure wins)
         self._degraded: Dict[str, Dict[str, Any]] = {}
+        # guards the failure/degradation record: trainer worker threads
+        # add to _failed, pipeline stage threads note degradation, the
+        # refresh worker latches _refresh_error — while the training
+        # thread (and health()) iterate the same containers
+        self._state_lock = threading.Lock()
         self._refresh_failures = 0        # consecutive stage() failures
         self._refresh_disabled = False    # budget spent: refresh is off
 
@@ -418,11 +432,13 @@ class HybridGNNTrainer:
         """[(name, kind)] excluding failed trainers."""
         out = []
         cpu_b, accel_b = self.runtime.quantized_shares()
-        if cpu_b > 0 and "cpu" not in self._failed:
+        with self._state_lock:
+            failed = set(self._failed)
+        if cpu_b > 0 and "cpu" not in failed:
             out.append(("cpu", "cpu"))
         for i in range(self.cfg.n_accel):
             name = f"accel{i}"
-            if name not in self._failed and accel_b > 0:
+            if name not in failed and accel_b > 0:
                 out.append((name, "accel"))
         return out
 
@@ -510,7 +526,12 @@ class HybridGNNTrainer:
             # memory, so it reads the full positional frontier straight
             # from the FeatureSource and nothing crosses an interconnect.
             if name != "cpu" and (self.cache is not None or self.cfg.dedup):
-                p["features"][name] = self.loader.load_compact(mb)
+                # pin the classification version while the block is in
+                # flight: the transfer stage releases it after the
+                # combine, so drained versions retire device blocks
+                # eagerly instead of aging out of keep_versions
+                p["features"][name] = self.loader.load_compact(
+                    mb, pin=self.cache is not None)
             else:
                 p["features"][name] = self.loader.load(
                     mb, to_device=(name != "cpu"))
@@ -554,6 +575,11 @@ class HybridGNNTrainer:
         # re-bind the slot indices to a newer (reshuffled) device block
         cache_data = (self.cache.data_on(dev, version=look.version)
                       if self.cache else None)
+        if self.cache is not None:
+            # the combine holds its own reference to the version block;
+            # releasing the pin here lets a fully-drained old version
+            # retire its [K, F] snapshots immediately
+            self.cache.release_lookup(look)
         # slots / miss_index stay host numpy: the Pallas path derives its
         # DMA schedule from them before they ever reach the device
         return assemble_features(cache_data, miss, look.slots,
@@ -580,8 +606,10 @@ class HybridGNNTrainer:
         # with TFP prefetch in flight the DRM may have re-quantized a
         # share to 0 since this batch was sampled — the batch still
         # belongs to the trainers it was sampled for
+        with self._state_lock:
+            failed = set(self._failed)
         for name in list(p["features"]):
-            if name in self._failed:
+            if name in failed:
                 continue
             kind = "cpu" if name == "cpu" else "accel"
             dev = (self.cpu_device if kind == "cpu"
@@ -606,8 +634,10 @@ class HybridGNNTrainer:
         # any that have since failed.  Intersecting with the *current*
         # assignment instead can come up empty when the DRM re-quantizes
         # a share to 0 while prefetched batches are still in flight.
+        with self._state_lock:
+            failed = set(self._failed)
         active = [(n, "cpu" if n == "cpu" else "accel")
-                  for n in p["minibatch"] if n not in self._failed]
+                  for n in p["minibatch"] if n not in failed]
         if not active:        # every trainer of this batch has died
             zero = jax.tree.map(jnp.zeros_like, self.params)
             return (zero, {"t_tc": 0.0, "t_ta": 0.0},
@@ -617,7 +647,8 @@ class HybridGNNTrainer:
 
         def work(idx: int, name: str, kind: str):
             if self._fail_at.get(name) == p["iteration"]:
-                self._failed.add(name)
+                with self._state_lock:
+                    self._failed.add(name)
                 zero = jax.tree.map(jnp.zeros_like, self.params)
                 sync.submit(idx, zero, 0.0)     # dead trainer: zero weight
                 results[name] = {"loss": jnp.nan, "acc": jnp.nan,
@@ -769,8 +800,10 @@ class HybridGNNTrainer:
         """Post-refresh bookkeeping shared by the sync and async paths:
         re-price the mapping (or anchor the drift signal) and reset the
         measurement window when rows moved."""
+        with self._state_lock:
+            any_failed = bool(self._failed)
         reprice = (self.cfg.hybrid and self.cfg.n_accel > 0
-                   and not self._failed)
+                   and not any_failed)
         if swapped:
             if reprice:
                 self._reprice_mapping(measured, alpha)
@@ -810,8 +843,9 @@ class HybridGNNTrainer:
             if t.is_alive():
                 return False
             self._refresh_thread = None
-            if self._refresh_error is not None:
+            with self._state_lock:
                 err, self._refresh_error = self._refresh_error, None
+            if err is not None:
                 self._staged_feedback = None
                 self._handle_refresh_failure(
                     err, context="async cache-refresh stage() failed")
@@ -835,7 +869,8 @@ class HybridGNNTrainer:
             try:
                 self.cache.stage()
             except BaseException as e:  # surfaced at the next boundary
-                self._refresh_error = e
+                with self._state_lock:
+                    self._refresh_error = e
 
         self._refresh_thread = threading.Thread(
             target=run_stage, daemon=True, name="cache-refresh-stage")
@@ -860,7 +895,9 @@ class HybridGNNTrainer:
         the cache hit rate sits rock-stable inside its threshold.
         Returns True when a refresh happened.
         """
-        if not (self.cfg.hybrid and self.cache is not None) or self._failed:
+        with self._state_lock:
+            any_failed = bool(self._failed)
+        if not (self.cfg.hybrid and self.cache is not None) or any_failed:
             return False
         stats = self.loader.window
         if stats.total_rows == 0:
@@ -912,9 +949,11 @@ class HybridGNNTrainer:
                 t_tc=ttimes["t_tc"], t_ta=ttimes["t_ta"],
                 t_load_stall=p["t"].get("t_load_stall", 0.0))
             # account for failures: drop trainers, DRM rebalances the rest
-            if self._failed:
+            with self._state_lock:
+                failed = set(self._failed)
+            if failed:
                 a = self.runtime.assignment
-                dead_accel = sum(1 for n in self._failed if n != "cpu")
+                dead_accel = sum(1 for n in failed if n != "cpu")
                 if dead_accel and a.n_accel > self.cfg.n_accel - dead_accel:
                     a.cpu_batch += a.accel_batch * dead_accel
                     a.n_accel = self.cfg.n_accel - dead_accel
@@ -952,13 +991,14 @@ class HybridGNNTrainer:
         consumed into the ``health()`` record instead — the advisory
         subsystems already degraded, the run is complete, and the state
         is visible rather than fatal."""
-        if self._refresh_error is not None and (
-                self._refresh_thread is None
+        if (self._refresh_thread is None
                 or not self._refresh_thread.is_alive()):
             self._refresh_thread = None
-            err, self._refresh_error = self._refresh_error, None
-            self._handle_refresh_failure(
-                err, context="async cache-refresh stage() failed")
+            with self._state_lock:
+                err, self._refresh_error = self._refresh_error, None
+            if err is not None:
+                self._handle_refresh_failure(
+                    err, context="async cache-refresh stage() failed")
         if self.prefetcher is not None and self.prefetcher.error is not None:
             if not self.cfg.degrade_on_failure:
                 err, self.prefetcher.error = self.prefetcher.error, None
@@ -993,15 +1033,18 @@ class HybridGNNTrainer:
                        action: str = "") -> None:
         """Record one component's permanent degradation (idempotent: the
         first failure per component wins).  The record feeds ``health()``
-        — degraded mode must be visible, never silent."""
-        if component in self._degraded:
-            return
-        self._degraded[component] = {
-            "component": component,
-            "error": repr(error) if error is not None else "",
-            "action": action,
-            "iteration": len(self.history),
-        }
+        — degraded mode must be visible, never silent.  Callable from any
+        thread (pipeline stages note failures too): the check-and-insert
+        is atomic under the state lock."""
+        with self._state_lock:
+            if component in self._degraded:
+                return
+            self._degraded[component] = {
+                "component": component,
+                "error": repr(error) if error is not None else "",
+                "action": action,
+                "iteration": len(self.history),
+            }
 
     def health(self) -> Dict[str, Any]:
         """Degraded-mode / fault-tolerance report.
@@ -1037,12 +1080,19 @@ class HybridGNNTrainer:
                 "madvise_failures": int(src.madvise_failures),
                 "fadvise_failures": int(src.fadvise_failures),
             }
-        if self._failed:
-            comp["trainers"] = {"failed": sorted(self._failed)}
+        # snapshot under the lock: a trainer thread adding to _failed (or
+        # a pipeline stage noting degradation) while this iterates would
+        # raise "changed size during iteration"
+        with self._state_lock:
+            failed = sorted(self._failed)
+            degraded = sorted(self._degraded)
+            events = [dict(e) for e in self._degraded.values()]
+        if failed:
+            comp["trainers"] = {"failed": failed}
         return {
-            "status": "degraded" if self._degraded else "ok",
-            "degraded": sorted(self._degraded),
-            "events": [dict(e) for e in self._degraded.values()],
+            "status": "degraded" if degraded else "ok",
+            "degraded": degraded,
+            "events": events,
             "components": comp,
         }
 

@@ -84,7 +84,18 @@ class PipelineStallError(RuntimeError):
 
 
 class PrefetchPipeline:
-    """Chains stages over bounded queues; ``depth=0`` means fully sequential."""
+    """Chains stages over bounded queues; ``depth=0`` means fully sequential.
+
+    Concurrency note (why there is no ``guarded_by`` declaration here,
+    unlike the other threaded modules — the annotation is opt-in and this
+    class deliberately has nothing to declare): every ``run()`` threads
+    its own per-run locals (queues, heartbeat dicts, error holder, stop
+    event) through the workers it spawns, and all cross-thread handoffs
+    ride the bounded ``queue.Queue``s, whose put/get pairs establish the
+    happens-before edges.  The heartbeat dicts are single-writer (their
+    own stage thread); the watchdog only ever *reads* them, and a torn
+    read costs one poll tick, not correctness.  ``self._error`` is
+    observability-only, written after the run's threads are joined."""
 
     def __init__(self, stages: List[Stage], depth: int = 2,
                  watchdog_seconds: float = 0.0,

@@ -27,6 +27,8 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
+from repro.analysis.annotations import guarded_by
+
 from .drm import Assignment, DRMEngine, StageTimes
 
 __all__ = ["Synchronizer", "TrainerHandle", "Runtime"]
@@ -34,10 +36,11 @@ __all__ = ["Synchronizer", "TrainerHandle", "Runtime"]
 PyTree = Any
 
 
+@guarded_by("_cond", "_done", "_slots")
 class Synchronizer:
     """Listing-1 handshake: pthread cond/mutex -> threading.Condition."""
 
-    def __init__(self, n_trainers: int):
+    def __init__(self, n_trainers: int) -> None:
         self.n_trainers = n_trainers
         self._cond = threading.Condition()
         self._done = 0
@@ -82,7 +85,7 @@ class TrainerHandle:
     index: int
 
     def run(self, sync: Synchronizer, params: PyTree, weight: float,
-            *args) -> Dict[str, Any]:
+            *args: Any) -> Dict[str, Any]:
         t0 = time.perf_counter()
         grads, metrics = self.grad_fn(params, *args)
         grads = jax.block_until_ready(grads)
@@ -97,7 +100,7 @@ class Runtime:
     """Collects stage times, runs the DRM engine between iterations."""
 
     def __init__(self, assignment: Assignment, use_drm: bool = True,
-                 damping: float = 0.25, share_quantum: int = 64):
+                 damping: float = 0.25, share_quantum: int = 64) -> None:
         self.drm = DRMEngine(assignment, damping=damping)
         self.use_drm = use_drm
         self.share_quantum = max(1, int(share_quantum))

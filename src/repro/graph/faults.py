@@ -68,9 +68,11 @@ import errno as _errno
 import json
 import threading
 import time
-from typing import Dict, List, Optional, Sequence, Union
+from typing import Any, ClassVar, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
+
+from repro.analysis.annotations import guarded_by
 
 __all__ = ["FaultSpec", "FaultInjector", "WorkerKilled"]
 
@@ -112,9 +114,10 @@ class FaultSpec:
     probability: float = 1.0
     message: str = ""
 
-    _KINDS = ("transient", "permanent", "delay", "kill")
+    _KINDS: ClassVar[Tuple[str, ...]] = (
+        "transient", "permanent", "delay", "kill")
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         if self.kind not in self._KINDS:
             raise ValueError(f"unknown fault kind {self.kind!r}; "
                              f"have {self._KINDS}")
@@ -126,15 +129,20 @@ class FaultSpec:
             return True
         return call_index < self.start + self.count
 
-    def to_dict(self) -> Dict:
+    def to_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
 
     @classmethod
-    def from_dict(cls, d: Dict) -> "FaultSpec":
+    def from_dict(cls, d: Dict[str, Any]) -> "FaultSpec":
         return cls(**{k: v for k, v in d.items()
                       if k in {f.name for f in dataclasses.fields(cls)}})
 
 
+# schedule/seed/_by_op/_rngs are immutable after __init__ (to_json
+# and the spec lookups read them lock-free by design); everything
+# mutable is declared below.
+@guarded_by("_lock", "calls", "injected", "faults_raised",
+            "delays_injected", "total_delay_seconds")
 class FaultInjector:
     """Seeded, schedulable fault injector consulted at data-plane hooks.
 
@@ -150,13 +158,15 @@ class FaultInjector:
     picture.
     """
 
-    def __init__(self, schedule: Sequence[Union[FaultSpec, Dict]] = (),
-                 seed: int = 0):
+    def __init__(self,
+                 schedule: Sequence[Union[FaultSpec,
+                                          Dict[str, Any]]] = (),
+                 seed: int = 0) -> None:
         self.seed = int(seed)
         self.schedule: List[FaultSpec] = [
             s if isinstance(s, FaultSpec) else FaultSpec.from_dict(s)
             for s in schedule]
-        self._by_op: Dict[str, List[tuple]] = {}
+        self._by_op: Dict[str, List[Tuple[int, FaultSpec]]] = {}
         for i, spec in enumerate(self.schedule):
             self._by_op.setdefault(spec.op, []).append((i, spec))
         self._lock = threading.Lock()
@@ -168,7 +178,7 @@ class FaultInjector:
         # per-spec deterministic rng for probabilistic specs: seeded from
         # (seed, op, spec index) so decisions depend only on the per-op
         # call order, never on wall clock or thread identity
-        self._rngs = {
+        self._rngs: Dict[int, np.random.Generator] = {
             i: np.random.default_rng(
                 np.random.SeedSequence((self.seed, hash(s.op) & 0x7FFFFFFF,
                                         i)))
@@ -177,8 +187,10 @@ class FaultInjector:
     # ------------------------------------------------------------- loading
 
     @classmethod
-    def from_json(cls, path_or_obj, seed: Optional[int] = None
-                  ) -> "FaultInjector":
+    def from_json(cls,
+                  path_or_obj: Union[str, Dict[str, Any],
+                                     List[Dict[str, Any]]],
+                  seed: Optional[int] = None) -> "FaultInjector":
         """Build from a JSON schedule: either a list of FaultSpec dicts or
         ``{"seed": int, "schedule": [...]}`` (a file path or a parsed
         object)."""
@@ -215,7 +227,7 @@ class FaultInjector:
             specs = self._by_op.get(op)
             if not specs:
                 return
-            actions = []
+            actions: List[FaultSpec] = []
             for spec_i, spec in specs:
                 if not spec.matches(idx):
                     continue
@@ -247,7 +259,7 @@ class FaultInjector:
 
     # ----------------------------------------------------------- reporting
 
-    def report(self) -> Dict:
+    def report(self) -> Dict[str, Any]:
         with self._lock:
             return {
                 "calls": dict(self.calls),

@@ -77,6 +77,8 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import numpy as np
 
+from repro.analysis.annotations import guarded_by, requires_lock
+
 from .storage import FeatureSource, as_feature_source
 
 __all__ = ["CacheLookup", "CacheStats", "FeatureCache", "build_cache",
@@ -218,6 +220,16 @@ class _StagedRefresh:
     rows: np.ndarray      # gathered admitted rows in transfer dtype
 
 
+# one lock covers the (slot_of, version) pair, the hotness counters, the
+# stats windows, the staged plan and the per-version retention maps.
+# Deliberately undeclared: capacity/feat_dim/row_bytes (immutable),
+# track_hotness/keep_versions/use_pallas_update/kernel_pipeline_depth/
+# refresh_* (config knobs, set before any worker thread starts).
+@guarded_by("_lock", "slot_of", "version", "cached_ids", "stats",
+            "epoch_stats", "stage_failures", "refreshes",
+            "refresh_swapped_rows", "_staged", "_slot_hot", "_node_hot",
+            "_host_rows", "_host_by_version", "_device_data", "_devices",
+            "_inflight")
 class FeatureCache:
     """Top-K hot-row cache over any ``FeatureSource``.
 
@@ -301,6 +313,16 @@ class FeatureCache:
         self._host_by_version: Dict[int, np.ndarray] = {0: self._host_rows}
         self._device_data: Dict[Tuple[int, int], jax.Array] = {}
         self._devices: Dict[int, Any] = {}   # id(device) -> device handle
+        # in-flight lookup pins: version -> count of pinned lookups not
+        # yet released.  Pinning (lookup(pin=True) + release_lookup) is
+        # the opt-in eager-retirement protocol: once every pin at a
+        # version is released and a newer version exists, its full [K, F]
+        # blocks are retired immediately instead of lingering for the
+        # whole keep_versions window (ROADMAP undo-log item, cheap half).
+        # keep_versions stays the hard retention bound either way, so
+        # callers that never pin keep the PR-4 semantics exactly.
+        self._inflight: Dict[int, int] = {}
+        self._pin_used = False
 
     def _cast_rows(self, rows: np.ndarray) -> np.ndarray:
         if self.transfer_dtype != "float32":
@@ -325,7 +347,8 @@ class FeatureCache:
     @property
     def nbytes(self) -> int:
         """Device bytes pinned by the hot block (per trainer device)."""
-        return self._host_rows.nbytes
+        with self._lock:
+            return self._host_rows.nbytes
 
     @property
     def expected_hit_rate(self) -> float:
@@ -337,10 +360,17 @@ class FeatureCache:
         """Measured positional hit rate over the *current epoch window*
         (reset by ``refresh()``), so feedback consumers see the
         post-refresh rate instead of a lifetime average that still carries
-        pre-refresh epochs; lifetime totals stay in ``stats``."""
-        if self.epoch_stats.total_rows:
-            return self.epoch_stats.hit_rate
-        return self.stats.hit_rate
+        pre-refresh epochs; lifetime totals stay in ``stats``.
+
+        Snapshotted under the cache lock: ``record_lookup`` merges the
+        windows from the pipeline's load-stage thread, and an unlocked
+        read could observe a half-merged (hit_rows bumped, miss_rows not
+        yet) window — a torn hit rate that feedback consumers would act
+        on."""
+        with self._lock:
+            if self.epoch_stats.total_rows:
+                return self.epoch_stats.hit_rate
+            return self.stats.hit_rate
 
     def slot_hotness(self) -> np.ndarray:
         """Decayed per-slot hotness estimate (copy, for tests/policy)."""
@@ -376,7 +406,11 @@ class FeatureCache:
                         f"{self.version}, keep_versions="
                         f"{self.keep_versions}): a lookup outlived the "
                         f"refresh retention window — raise keep_versions")
-                arr = jax.device_put(host, device)
+                # deliberate device dispatch under the lock: lazy
+                # placement is memoized, so this runs once per (device,
+                # version) — serializing it prevents two threads from
+                # shipping the same [K, F] block twice
+                arr = jax.device_put(host, device)  # noqa: RPR103 - memoized once per (device, version)
                 self._device_data[key] = arr
                 self._devices[id(device)] = device
         return arr
@@ -384,7 +418,7 @@ class FeatureCache:
     # --------------------------------------------------------------- lookup
 
     def lookup(self, ids: np.ndarray, dedup: bool = True,
-               record: bool = True) -> CacheLookup:
+               record: bool = True, pin: bool = False) -> CacheLookup:
         """Partition one frontier into cached slots and miss rows.
 
         ``dedup=True`` (the default) classifies only the frontier's unique
@@ -405,11 +439,22 @@ class FeatureCache:
         classifies first and accounts later via ``record_lookup`` (the
         loader uses this so a gather that fails mid-way never leaves
         half-recorded stats behind).
+
+        ``pin=True`` additionally registers the classification version as
+        *in flight* — atomically with the snapshot, so a concurrent
+        commit can never land between the two — and the caller promises
+        exactly one ``release_lookup(look)`` once the dependent combine
+        consumed its device block.  Pinned versions retire eagerly on
+        release (see ``release_lookup``); unpinned callers keep the plain
+        ``keep_versions`` retention window.
         """
         ids = np.asarray(ids, dtype=np.int64)
         with self._lock:
             slot_of = self.slot_of   # refresh swaps the reference, never
             ver = self.version       # mutates the array in place
+            if pin:
+                self._pin_used = True
+                self._inflight[ver] = self._inflight.get(ver, 0) + 1
         if dedup:
             look = compact_lookup(ids, slot_of)
         else:
@@ -426,6 +471,48 @@ class FeatureCache:
         if record:
             self.record_lookup(look)
         return look
+
+    def release_lookup(self, look: CacheLookup) -> None:
+        """Release one ``lookup(pin=True)`` registration.
+
+        When the last pin at a version drops and a newer version exists,
+        every full [K, F] block of versions below the minimum still-in-
+        flight one is retired immediately — the pipelined trainer holds
+        at most tfp_depth lookups in flight, so device memory returns to
+        one block per device as soon as the pipeline drains instead of
+        after ``keep_versions`` further refreshes.  Idempotence is the
+        caller's job (exactly one release per pinned lookup); releasing
+        an unpinned lookup is a no-op."""
+        with self._lock:
+            ver = int(look.version)
+            n = self._inflight.get(ver)
+            if n is None:
+                return
+            if n > 1:
+                self._inflight[ver] = n - 1
+            else:
+                del self._inflight[ver]
+            self._retire_below_floor()
+
+    @requires_lock("_lock")
+    def _retire_below_floor(self) -> None:
+        # caller holds _lock.  Retire versions no pinned lookup can still
+        # reference; without any pinning opt-in the keep_versions window
+        # in commit() remains the only retirement (PR-4 semantics).
+        if not self._pin_used:
+            return
+        floor = min(self._inflight) if self._inflight else self.version
+        floor = min(floor, self.version)   # never retire the current block
+        for key in [k for k in self._device_data if k[1] < floor]:
+            del self._device_data[key]
+        for v in [v for v in self._host_by_version if v < floor]:
+            del self._host_by_version[v]
+
+    def retained_versions(self) -> list:
+        """Sorted cache versions with a retained host snapshot (the
+        current one always included) — observability for tests/health."""
+        with self._lock:
+            return sorted(self._host_by_version)
 
     def record_lookup(self, look: CacheLookup) -> None:
         """Account one classified lookup: stats windows + hotness
@@ -503,7 +590,10 @@ class FeatureCache:
             try:
                 self.fault_injector.fire("refresh.stage")
             except BaseException:
-                self.stage_failures += 1
+                # counted under the lock: health() reads this from the
+                # main thread while an async stage runs in the background
+                with self._lock:
+                    self.stage_failures += 1
                 raise
         with self._lock:
             if self.capacity == 0:
@@ -536,6 +626,7 @@ class FeatureCache:
                     * self._slot_hot[cold]))
             top, cold = top[:n_swap], cold[:n_swap]
             base = self.version
+            host_dtype = self._host_rows.dtype
         # EXPENSIVE: the admitted-row gather runs OUTSIDE the lock —
         # concurrent lookups never wait on the storage tier (and it is
         # maintenance traffic: excluded from the load-stall counters it
@@ -547,10 +638,11 @@ class FeatureCache:
             except Exception:
                 # failed admission gather: count it and propagate with no
                 # staged plan left behind (the old version keeps serving)
-                self.stage_failures += 1
+                with self._lock:
+                    self.stage_failures += 1
                 raise
         else:
-            rows = np.zeros((0, self.feat_dim), self._host_rows.dtype)
+            rows = np.zeros((0, self.feat_dim), host_dtype)
         with self._lock:
             if self.version != base:
                 # a commit landed while we gathered: victims/candidates
@@ -625,12 +717,17 @@ class FeatureCache:
                 self._node_hot[top] = 0.0
                 new_ver = self.version + 1
                 slots32 = cold.astype(np.int32)
+                # deliberate device dispatch under the lock: commit IS
+                # the designed cheap half — O(swapped rows) scatter DMAs
+                # that must be atomic with the table/version swap, or a
+                # concurrent lookup could pair the new table with an
+                # un-updated block
                 for dev_key, dev in self._devices.items():
                     cur = self._device_data.get((dev_key, self.version))
                     if cur is not None:
                         self._device_data[(dev_key, new_ver)] = \
                             update_cache_rows(
-                                cur, jax.device_put(rows, dev), slots32,
+                                cur, jax.device_put(rows, dev), slots32,  # noqa: RPR103 - atomic O(swap) commit by design
                                 use_pallas=self.use_pallas_update,
                                 pipeline_depth=self.kernel_pipeline_depth)
                 self.slot_of = new_slot_of
@@ -645,6 +742,15 @@ class FeatureCache:
                     del self._device_data[key]
                 for v in [v for v in self._host_by_version if v < low]:
                     del self._host_by_version[v]
+                # pins that leaked past the retention window (a batch
+                # dropped by a pipeline failure never reaches its
+                # release) can no longer be served anyway — age them out
+                # so one leak does not disable eager retirement forever
+                for v in [v for v in self._inflight if v < low]:
+                    del self._inflight[v]
+                # pinned-lookup protocol: drained versions retire NOW
+                # instead of aging out of the keep_versions window
+                self._retire_below_floor()
                 self.epoch_stats = CacheStats()
                 self.refreshes += 1
                 self.refresh_swapped_rows += n_swap

@@ -48,6 +48,8 @@ import numpy as np
 
 import jax.numpy as jnp
 
+from repro.analysis.annotations import guarded_by
+
 from .featcache import (CacheLookup, FeatureCache, compact_lookup,
                         wire_row_bytes)
 from .sampler import MiniBatch
@@ -116,6 +118,10 @@ class MissBlock:
         return self.lookup.num_rows
 
 
+# the load and transfer pipeline stages run in different threads and both
+# account into the same stats windows; every merge resolves its
+# destination and runs under _stats_lock
+@guarded_by("_stats_lock", "stats", "window", "host_stats")
 class FeatureLoader:
     def __init__(self, dataset: GraphDataset, transfer_dtype: str = "float32",
                  num_threads: int = 1,
@@ -144,10 +150,15 @@ class FeatureLoader:
         self._pool_size = 0
         self._row_bytes = wire_row_bytes(dataset.feat_dim, transfer_dtype)
 
-    def _account(self, dest: LoadStats, delta: LoadStats) -> None:
+    def _account(self, dest: str, delta: LoadStats) -> None:
+        # `dest` names the window ("stats" / "host_stats") instead of
+        # passing the object: resolving it under the lock keeps even the
+        # destination *read* inside the guarded region (reset_window may
+        # rebind `window` concurrently)
         with self._stats_lock:
-            dest.merge(delta)
-            if dest is self.stats:     # transfer path also feeds the window
+            target: LoadStats = getattr(self, dest)
+            target.merge(delta)
+            if dest == "stats":        # transfer path also feeds the window
                 self.window.merge(delta)
 
     def reset_window(self) -> None:
@@ -248,7 +259,7 @@ class FeatureLoader:
         frontier = self._frontier(batch)
         x = self._cast(self._gather(frontier))
         dt = time.perf_counter() - t0
-        dest = self.stats if to_device else self.host_stats
+        dest = "stats" if to_device else "host_stats"
         self._account(dest, LoadStats(rows=x.shape[0], bytes=x.nbytes,
                                       seconds=dt, total_rows=x.shape[0],
                                       unique_rows=x.shape[0],
@@ -260,10 +271,10 @@ class FeatureLoader:
         """Account padding rows the transfer stage ships beyond the gathered
         misses (shape-bucketing): they cross PCIe, so they count as shipped
         traffic even though no host gather produced them."""
-        self._account(self.stats, LoadStats(rows=rows, bytes=nbytes,
-                                            padding_bytes=nbytes))
+        self._account("stats", LoadStats(rows=rows, bytes=nbytes,
+                                         padding_bytes=nbytes))
 
-    def load_compact(self, batch: MiniBatch) -> MissBlock:
+    def load_compact(self, batch: MiniBatch, pin: bool = False) -> MissBlock:
         """Deduped transfer-path load: gather one row per unique miss id.
 
         Works with or without a device cache.  With a cache, only the
@@ -278,13 +289,19 @@ class FeatureLoader:
         that raises (storage fault past the retry/fallback budget, a
         pool-thread exception) therefore surfaces exactly once and
         leaves every stats window untouched — no half-recorded batch.
+
+        ``pin=True`` registers the classification version as in flight
+        (``FeatureCache.lookup`` pinning protocol); the consumer of the
+        returned block must call ``cache.release_lookup(block.lookup)``
+        exactly once after the combine — the pipelined trainer does this
+        in its transfer stage so drained versions retire eagerly.
         """
         t0 = time.perf_counter()
         stall0 = self._source_stall()
         frontier = self._frontier(batch)
         if self.cache is not None:
             look = self.cache.lookup(frontier, dedup=self.dedup,
-                                     record=False)
+                                     record=False, pin=pin)
             row_bytes = self.cache.row_bytes
         else:
             if not self.dedup:
@@ -296,7 +313,7 @@ class FeatureLoader:
         dt = time.perf_counter() - t0
         if self.cache is not None:
             self.cache.record_lookup(look)
-        self._account(self.stats, LoadStats(
+        self._account("stats", LoadStats(
             rows=rows.shape[0], bytes=rows.nbytes, seconds=dt,
             total_rows=look.num_rows, unique_rows=look.num_unique,
             hit_rows=look.num_hit,

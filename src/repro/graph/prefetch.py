@@ -73,11 +73,23 @@ from typing import List, Optional
 
 import numpy as np
 
+from repro.analysis.annotations import guarded_by
+
 __all__ = ["WindowPrefetcher"]
 
 _SENTINEL = object()
 
 
+# Deliberately UNGUARDED shared state (not declared below, so the lint
+# does not police it):
+#   * error / errors / failed / restarts — the failure latch: written by
+#     the worker, read by the single-producer supervisor.  A torn read is
+#     impossible (reference assignment) and the supervisor re-checks
+#     under its own control flow; taking _cv in the hot submit path for
+#     an advisory latch is not worth it.
+#   * _history / _evictions_seen / resubmitted_rows_skipped / dropped —
+#     producer-side only: submit() is single-producer by contract.
+@guarded_by("_cv", "_pending", "completed", "submitted")
 class WindowPrefetcher:
     """Background thread pre-faulting partition windows for future gathers."""
 
@@ -138,7 +150,8 @@ class WindowPrefetcher:
                     if self.fault_injector is not None:
                         self.fault_injector.fire("prefetch.worker")
                     self.source.prefetch_rows(item)
-                    self.completed += 1
+                    with self._cv:
+                        self.completed += 1
                 except Exception as e:
                     # item failure: latch, keep the thread draining
                     self.errors.append(e)
@@ -233,12 +246,24 @@ class WindowPrefetcher:
             if self._history:
                 warm = np.concatenate(list(self._history))
                 work = rows[~np.isin(rows, warm)]
-                self.resubmitted_rows_skipped += rows.size - work.size
+                # the worker may have evicted a window while the strip was
+                # computed (prefetch_rows -> source LRU runs concurrently);
+                # a moved eviction counter means the warm assumption behind
+                # the strip is stale, so fall back to the full row set
+                # rather than enqueue a prefetch that skips cold rows
+                ev = int(getattr(self.source, "window_evictions", 0))
+                if ev != self._evictions_seen:
+                    self._history.clear()
+                    self._evictions_seen = ev
+                    work = rows
+                else:
+                    self.resubmitted_rows_skipped += rows.size - work.size
             if work.size == 0:
                 # everything is already warm: the submit succeeded without
                 # touching the worker; refresh the rows' recency
                 self._history.append(rows)
-                self.submitted += 1
+                with self._cv:
+                    self.submitted += 1
                 return True
         with self._cv:
             try:
@@ -261,8 +286,10 @@ class WindowPrefetcher:
         or the worker died).  Test/benchmark hook — the training path
         never waits."""
         with self._cv:
+            # the predicate lambda runs with _cv re-acquired by wait_for
             return self._cv.wait_for(
-                lambda: (self._pending == 0 or self.error is not None
+                lambda: (self._pending == 0  # noqa: RPR101 - locked by wait_for
+                         or self.error is not None
                          or not self._thread.is_alive()),
                 timeout)
 

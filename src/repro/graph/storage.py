@@ -76,6 +76,8 @@ from typing import Callable, Dict, List, Optional, Protocol, Sequence, Tuple
 
 import numpy as np
 
+from repro.analysis.annotations import guarded_by, requires_lock
+
 __all__ = [
     "CSRGraph",
     "FeatureSource",
@@ -218,6 +220,24 @@ _MMAP_FORMAT = "mmap-features-v1"
 _PAGE_BYTES = 4096          # granularity of the touched-page accounting
 
 
+# Deliberately UNGUARDED shared state (left out of the declarations, so
+# the lint does not police it):
+#   * _page_touched — gather-side updates only ever SET bits, so the
+#     concurrent chunked gathers stay correct lock-free (see __init__);
+#     evictions clear a window's bits under _win_lock anyway.
+#   * last_gather_page_bytes — documented last-writer-wins monitor.
+#   * spill_peak_buffered_rows / fallback_source / fault_injector /
+#     lru_windows / io_retry_* knobs — configured before threads exist.
+@guarded_by("_win_lock", "_parts", "_prefetched", "_pinned",
+            "pin_blocked_evictions", "madvise_calls",
+            "madvise_dontneed_calls", "madvise_failures",
+            "window_evictions", "evicted_window_bytes",
+            "prefetched_window_bytes", "cold_fault_page_bytes",
+            "cold_gather_seconds", "warm_gather_seconds",
+            "prefetch_hit_windows", "prefetch_miss_windows")
+@guarded_by("_io_lock", "io_retries", "io_retry_seconds", "io_errors",
+            "fallback_gathers", "fallback_rows", "fadvise_failures",
+            "_retry_rng")
 class MmapFeatures:
     """Out-of-core FeatureSource: row partitions in per-partition disk blobs.
 
@@ -476,9 +496,13 @@ class MmapFeatures:
     @property
     def prefetch_hit_rate(self) -> float:
         """Fraction of ``take`` window touches whose window was warm from
-        a prior ``prefetch_rows`` (and not since evicted)."""
-        tot = self.prefetch_hit_windows + self.prefetch_miss_windows
-        return self.prefetch_hit_windows / max(tot, 1)
+        a prior ``prefetch_rows`` (and not since evicted).  Snapshotted
+        under ``_win_lock`` so a concurrent gather cannot tear the
+        hit/total pair (a rate > 1.0 would be possible otherwise)."""
+        with self._win_lock:
+            hits = self.prefetch_hit_windows
+            tot = hits + self.prefetch_miss_windows
+        return hits / max(tot, 1)
 
     def reset_touch_stats(self) -> None:
         self._page_touched[:] = False
@@ -501,12 +525,13 @@ class MmapFeatures:
 
     def reset_prefetch_stats(self) -> None:
         """Zero the prefetch/stall counters (not the touch bitmap)."""
-        self.prefetched_window_bytes = 0
-        self.cold_fault_page_bytes = 0
-        self.cold_gather_seconds = 0.0
-        self.warm_gather_seconds = 0.0
-        self.prefetch_hit_windows = 0
-        self.prefetch_miss_windows = 0
+        with self._win_lock:
+            self.prefetched_window_bytes = 0
+            self.cold_fault_page_bytes = 0
+            self.cold_gather_seconds = 0.0
+            self.warm_gather_seconds = 0.0
+            self.prefetch_hit_windows = 0
+            self.prefetch_miss_windows = 0
 
     # ------------------------------------------------- retrying I/O plumbing
 
@@ -579,12 +604,13 @@ class MmapFeatures:
         except OSError as e:
             return self._fallback_gather(pid, offset, e), True
 
+    @requires_lock("_win_lock")
     def _madvise(self, mm: np.memmap, advice_name: str) -> bool:
-        """Issue one madvise hint on a window.  Purely advisory and
-        guarded — platforms without ``mmap.madvise`` (or numpy builds not
-        exposing the underlying map) skip, and a kernel that rejects the
-        hint only increments ``madvise_failures``; gather results are
-        identical either way (property-tested)."""
+        """Issue one madvise hint on a window (caller holds ``_win_lock``).
+        Purely advisory and guarded — platforms without ``mmap.madvise``
+        (or numpy builds not exposing the underlying map) skip, and a
+        kernel that rejects the hint only increments ``madvise_failures``;
+        gather results are identical either way (property-tested)."""
         import mmap as _mmap
         advice = getattr(_mmap, advice_name, None)
         base = getattr(mm, "_mmap", None)
@@ -601,13 +627,15 @@ class MmapFeatures:
             self.madvise_failures += 1
             return False
 
+    @requires_lock("_win_lock")
     def _madvise_random(self, mm: np.memmap) -> None:
         """``MADV_RANDOM`` disables readahead, so a sparse gather faults
         only the touched pages instead of dragging untouched neighbour
-        rows into the page cache."""
+        rows into the page cache.  Caller holds ``_win_lock``."""
         if self._madvise(mm, "MADV_RANDOM"):
             self.madvise_calls += 1
 
+    @requires_lock("_win_lock")
     def _evict_window(self, pid: int, mm: np.memmap) -> None:
         """Drop one window from the LRU (held under ``_win_lock``):
         ``MADV_DONTNEED`` releases its clean file-backed pages immediately
@@ -657,10 +685,12 @@ class MmapFeatures:
                     self._evict_window(old, self._parts[old])
             return mm
 
+    @requires_lock("_win_lock")
     def _note_touch_window(self, pid: int, offset: np.ndarray
                            ) -> Tuple[int, int]:
         """Mark one window's pages touched by ``offset`` rows; returns
-        (page bytes this call spans, page bytes newly faulted)."""
+        (page bytes this call spans, page bytes newly faulted).  Caller
+        holds ``_win_lock`` (both gather paths account under it)."""
         off_b = offset * self._row_bytes
         first = off_b // _PAGE_BYTES
         last = (off_b + self._row_bytes - 1) // _PAGE_BYTES
@@ -733,7 +763,11 @@ class MmapFeatures:
         for pid in np.unique(part_id):
             pid = int(pid)
             sel = part_id == pid
-            warm = pid in self._prefetched
+            # snapshot warmth under the lock: the prefetch worker adds to
+            # _prefetched and the LRU discards from it concurrently, and a
+            # set mutating mid-__contains__ has no defined answer
+            with self._win_lock:
+                warm = pid in self._prefetched
             t0 = time.perf_counter()
             block, fell_back = self._gather_window(pid, offset[sel],
                                                    "storage.take")
@@ -791,7 +825,8 @@ class MmapFeatures:
             except OSError:
                 # advisory: a file we cannot re-open/fadvise just stays
                 # page-cached — counted so chaos tests can see it happened
-                self.fadvise_failures += 1
+                with self._io_lock:
+                    self.fadvise_failures += 1
 
     def close(self) -> None:
         """Drop all mapped windows (their pages become reclaimable)."""

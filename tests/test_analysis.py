@@ -1,0 +1,558 @@
+"""repro.analysis engine + rule tests.
+
+Per rule: a minimal violating fixture (positive), a compliant twin
+(negative), a suppressed twin (noqa), and the unused-suppression
+meta-check.  Plus the walker property test (every node visited exactly
+once) and the self-check that the analyzer is clean over ``src/`` at
+head — the findings-as-errors gate tier-1 runs.
+"""
+import ast
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (Engine, default_rules, guarded_by,
+                            requires_lock, run_paths)
+
+SRC = Path(__file__).resolve().parents[1] / "src"
+
+
+def check(source, path="fixture.py"):
+    """Run the full default rule set over one in-memory fixture."""
+    eng = Engine(default_rules())
+    raw = eng.check_file(path, source=source, raw=True)
+    for rule in eng.rules:
+        raw.extend(f for f in rule.finish() if f.path == path)
+    return eng._apply_noqa(raw, eng._collect_noqa(source), path)
+
+
+def rules_of(findings):
+    return sorted(f.rule for f in findings)
+
+
+# --------------------------------------------------------------------------
+# RPR1xx lock discipline
+# --------------------------------------------------------------------------
+
+GUARDED_HEADER = """\
+import threading
+from repro.analysis.annotations import guarded_by, requires_lock
+
+@guarded_by("_lock", "pending", "done")
+class S:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.pending = 0
+        self.done = 0
+"""
+
+
+class TestLockDiscipline:
+    def test_rpr101_read_outside_lock(self):
+        src = GUARDED_HEADER + """
+    def peek(self):
+        return self.pending
+"""
+        assert rules_of(check(src)) == ["RPR101"]
+
+    def test_rpr101_negative_read_under_lock(self):
+        src = GUARDED_HEADER + """
+    def peek(self):
+        with self._lock:
+            return self.pending
+"""
+        assert check(src) == []
+
+    def test_rpr101_noqa_suppresses_and_is_used(self):
+        src = GUARDED_HEADER + """
+    def peek(self):
+        return self.pending  # noqa: RPR101 - single writer, benign
+"""
+        assert check(src) == []
+
+    def test_rpr000_unused_noqa_reported(self):
+        src = GUARDED_HEADER + """
+    def peek(self):
+        with self._lock:
+            return self.pending  # noqa: RPR101 - stale
+"""
+        out = check(src)
+        assert rules_of(out) == ["RPR000"]
+        assert "unused suppression" in out[0].message
+
+    def test_rpr000_cannot_be_suppressed(self):
+        src = GUARDED_HEADER + """
+    def peek(self):
+        with self._lock:
+            return self.done  # noqa: RPR000
+"""
+        assert rules_of(check(src)) == ["RPR000"]
+
+    def test_rpr104_write_outside_lock(self):
+        src = GUARDED_HEADER + """
+    def reset(self):
+        self.pending = 0
+"""
+        assert rules_of(check(src)) == ["RPR104"]
+
+    def test_rpr303_augassign_outside_lock(self):
+        src = GUARDED_HEADER + """
+    def bump(self):
+        self.pending += 1
+"""
+        assert rules_of(check(src)) == ["RPR303"]
+
+    def test_init_exempt(self):
+        # the unlocked writes in __init__ above must not fire
+        assert check(GUARDED_HEADER) == []
+
+    def test_requires_lock_treats_body_as_locked(self):
+        src = GUARDED_HEADER + """
+    @requires_lock("_lock")
+    def _drain_locked(self):
+        self.pending = 0
+        self.done += 1
+"""
+        assert check(src) == []
+
+    def test_nested_def_and_lambda_start_unlocked(self):
+        # a closure made under the lock may run on another thread later:
+        # the lexical lock must NOT be inherited
+        src = GUARDED_HEADER + """
+    def spawn(self):
+        with self._lock:
+            def worker():
+                self.pending += 1
+            fn = lambda: self.done
+            return worker, fn
+"""
+        assert rules_of(check(src)) == ["RPR101", "RPR303"]
+
+    def test_undeclared_attribute_not_policed(self):
+        src = GUARDED_HEADER + """
+    def other(self):
+        self.monitor = 1
+        return self.monitor
+"""
+        assert check(src) == []
+
+    def test_unannotated_class_not_policed(self):
+        src = """
+class Plain:
+    def peek(self):
+        return self.pending
+"""
+        assert check(src) == []
+
+    def test_rpr102_lock_order_inversion_both_sites(self):
+        src = """
+import threading
+from repro.analysis.annotations import guarded_by
+
+@guarded_by("_a", "x")
+@guarded_by("_b", "y")
+class S:
+    def one(self):
+        with self._a:
+            with self._b:
+                pass
+
+    def two(self):
+        with self._b:
+            with self._a:
+                pass
+"""
+        out = check(src)
+        assert rules_of(out) == ["RPR102", "RPR102"]
+        assert {f.line for f in out} == {10, 15}
+
+    def test_rpr102_negative_consistent_order(self):
+        src = """
+import threading
+from repro.analysis.annotations import guarded_by
+
+@guarded_by("_a", "x")
+@guarded_by("_b", "y")
+class S:
+    def one(self):
+        with self._a:
+            with self._b:
+                pass
+
+    def two(self):
+        with self._a:
+            with self._b:
+                pass
+"""
+        assert check(src) == []
+
+    def test_rpr103_blocking_calls_under_lock(self):
+        src = GUARDED_HEADER + """
+    def bad(self, src, rows, t):
+        with self._lock:
+            block = src.take(rows)
+            t.join()
+            time.sleep(0.1)
+            open("f")
+        return block
+"""
+        assert rules_of(check(src)) == ["RPR103"] * 4
+
+    def test_rpr103_cheap_receivers_exempt(self):
+        src = GUARDED_HEADER + """
+    def ok(self, rows):
+        import os
+        with self._lock:
+            a = np.take(rows, rows)
+            s = ", ".join(["x"])
+            p = os.path.join("a", "b")
+        return a, s, p
+"""
+        assert check(src) == []
+
+    def test_rpr103_only_fires_while_held(self):
+        src = GUARDED_HEADER + """
+    def ok(self, src, rows):
+        with self._lock:
+            pending = self.pending
+        return src.take(rows), pending
+"""
+        assert check(src) == []
+
+
+# --------------------------------------------------------------------------
+# RPR2xx Pallas kernel invariants
+# --------------------------------------------------------------------------
+
+PALLAS_HEADER = """\
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+import numpy as np
+"""
+
+
+class TestKernelInvariants:
+    def test_rpr201_side_effects_in_kernel(self):
+        src = PALLAS_HEADER + """
+def scatter_kernel(x_ref, o_ref):
+    print("dbg")
+    np.random.rand(3)
+    time.time()
+"""
+        # np.random.rand is both a kernel side effect (RPR201) and a
+        # global-state draw (RPR301): both families fire independently
+        assert rules_of(check(src)) == ["RPR201"] * 3 + ["RPR301"]
+
+    def test_rpr201_global_in_kernel(self):
+        src = PALLAS_HEADER + """
+COUNT = 0
+
+def scatter_kernel(x_ref, o_ref):
+    global COUNT
+    COUNT = 1
+"""
+        assert rules_of(check(src)) == ["RPR201"]
+
+    def test_rpr201_negative_outside_kernel(self):
+        # same calls in a non-kernel function of a pallas module: fine
+        src = PALLAS_HEADER + """
+def driver(x):
+    print("ok")
+    return x
+"""
+        assert check(src) == []
+
+    def test_rpr201_negative_non_pallas_module(self):
+        src = """
+def scatter_kernel(x_ref, o_ref):
+    print("not a pallas module, not a kernel")
+"""
+        assert check(src) == []
+
+    def test_rpr203_start_without_wait(self):
+        src = PALLAS_HEADER + """
+def copy_kernel(x_ref, o_ref, sem):
+    pltpu.make_async_copy(x_ref, o_ref, sem).start()
+"""
+        out = check(src)
+        assert rules_of(out) == ["RPR203"]
+        assert "'sem'" in out[0].message
+
+    def test_rpr203_negative_matched_pair(self):
+        src = PALLAS_HEADER + """
+def copy_kernel(x_ref, o_ref, sem):
+    pltpu.make_async_copy(x_ref, o_ref, sem).start()
+    pltpu.make_async_copy(x_ref, o_ref, sem).wait()
+"""
+        assert check(src) == []
+
+    def test_rpr203_helper_def_and_nested_when(self):
+        # the repo idiom: a local helper returns the async copy, and the
+        # start/wait sites sit inside nested pl.when closures
+        src = PALLAS_HEADER + """
+def gather_kernel(x_ref, o_ref, rd_sem, wr_sem):
+    def block_read(slot, i):
+        return pltpu.make_async_copy(x_ref, o_ref, rd_sem.at[slot])
+
+    @pl.when(True)
+    def _start():
+        block_read(0, 0).start()
+        pltpu.make_async_copy(o_ref, x_ref, wr_sem).start()
+
+    @pl.when(True)
+    def _wait():
+        block_read(0, 0).wait()
+"""
+        out = check(src)
+        assert rules_of(out) == ["RPR203"]
+        assert "'wr_sem'" in out[0].message
+
+    def test_rpr204_depth_param_without_scratch_check(self):
+        src = PALLAS_HEADER + """
+def run(x, depth=2):
+    return pl.pallas_call(lambda r, o: None)(x)
+"""
+        assert rules_of(check(src)) == ["RPR204"]
+
+    def test_rpr204_negative_with_scratch_check(self):
+        src = PALLAS_HEADER + """
+def run(x, depth=2):
+    check_vmem_scratch(depth * 4, "run")
+    return pl.pallas_call(lambda r, o: None)(x)
+"""
+        assert check(src) == []
+
+    def test_rpr202_unmarked_caller_of_aliasing_wrapper(self):
+        src = PALLAS_HEADER + """
+def scatter(data, rows, slots):
+    return pl.pallas_call(lambda r, o: None,
+                          input_output_aliases={2: 0})(data, rows, slots)
+
+def update(cache, rows, slots):
+    return scatter(cache, rows, slots)
+"""
+        out = check(src)
+        assert rules_of(out) == ["RPR202"]
+        assert "'update'" in out[0].message
+
+    def test_rpr202_negative_caller_calls_unique(self):
+        src = PALLAS_HEADER + """
+def scatter(data, rows, slots):
+    return pl.pallas_call(lambda r, o: None,
+                          input_output_aliases={2: 0})(data, rows, slots)
+
+def update(cache, rows, slots):
+    keep = np.unique(slots)
+    return scatter(cache, rows, keep)
+"""
+        assert check(src) == []
+
+    def test_rpr202_negative_docstring_contract_two_hops(self):
+        src = PALLAS_HEADER + '''
+def scatter(data, rows, slots):
+    return pl.pallas_call(lambda r, o: None,
+                          input_output_aliases={2: 0})(data, rows, slots)
+
+def mid(cache, rows, slots):
+    return scatter(cache, rows, slots)
+
+def update_rows(cache, rows, slots):
+    """Scatter rows; duplicate slots dedupe keep-last (last writer wins)."""
+    return mid(cache, rows, slots)
+'''
+        assert check(src) == []
+
+
+# --------------------------------------------------------------------------
+# RPR3xx determinism & accounting
+# --------------------------------------------------------------------------
+
+class TestDeterminism:
+    def test_rpr301_global_state_np_random(self):
+        src = """
+import numpy as np
+np.random.seed(0)
+x = np.random.randint(10)
+"""
+        assert rules_of(check(src)) == ["RPR301", "RPR301"]
+
+    def test_rpr301_negative_seeded_generator(self):
+        src = """
+import numpy as np
+rng = np.random.default_rng(7)
+x = rng.integers(10)
+g = np.random.Generator(np.random.PCG64(3))
+"""
+        assert check(src) == []
+
+    def test_rpr302_bare_except_swallows(self):
+        src = """
+def f(job):
+    try:
+        job()
+    except:
+        pass
+"""
+        assert rules_of(check(src)) == ["RPR302"]
+
+    def test_rpr302_base_exception_swallows(self):
+        src = """
+def f(job):
+    try:
+        job()
+    except BaseException:
+        pass
+"""
+        assert rules_of(check(src)) == ["RPR302"]
+
+    def test_rpr302_negative_reraise(self):
+        src = """
+def f(job):
+    try:
+        job()
+    except BaseException:
+        raise
+"""
+        assert check(src) == []
+
+    def test_rpr302_negative_records_bound_exception(self):
+        src = """
+def f(job, log):
+    try:
+        job()
+    except BaseException as e:
+        log.append(e)
+"""
+        assert check(src) == []
+
+    def test_rpr302_negative_except_exception_ok(self):
+        # except Exception cannot catch WorkerKilled: the sanctioned idiom
+        src = """
+def f(job):
+    try:
+        job()
+    except Exception:
+        pass
+"""
+        assert check(src) == []
+
+
+# --------------------------------------------------------------------------
+# Engine mechanics
+# --------------------------------------------------------------------------
+
+class TestEngine:
+    def test_rpr999_syntax_error(self):
+        out = check("def broken(:\n")
+        assert rules_of(out) == ["RPR999"]
+
+    def test_findings_sorted_and_rendered(self):
+        src = GUARDED_HEADER + """
+    def two(self):
+        self.pending = 0
+        return self.done
+"""
+        out = check(src)
+        assert out == sorted(out)
+        rendered = out[0].render()
+        assert "fixture.py:" in rendered and "[fix:" in rendered
+
+    def test_walker_visits_every_node_exactly_once(self):
+        # property test over the real repo: the single-pass walk must
+        # touch each AST node exactly once (visited_nodes == |ast.walk|,
+        # and no node object is entered twice)
+        files = sorted(SRC.rglob("*.py"))[:25]
+        assert files, "no source files found"
+        for path in files:
+            source = path.read_text()
+            expected = sum(1 for _ in ast.walk(ast.parse(source)))
+            seen = set()
+            # subscribe a counting rule to every node type in the file
+            node_types = {type(n) for n in ast.walk(ast.parse(source))}
+
+            from repro.analysis.engine import Rule
+
+            class Counter(Rule):
+                types = tuple(node_types)
+
+                def __init__(self):
+                    self.visits = 0
+
+                def visit(self, node, ctx):
+                    self.visits += 1
+                    # CPython interns expr_context/operator leaves (one
+                    # shared ast.Load() instance): identity-uniqueness
+                    # only holds for positioned nodes
+                    if hasattr(node, "lineno"):
+                        assert id(node) not in seen, "node visited twice"
+                        seen.add(id(node))
+
+            counter = Counter()
+            eng = Engine([counter])
+            eng.check_file(str(path), source=source, raw=True)
+            assert eng.visited_nodes == expected
+            assert counter.visits == expected
+
+    def test_report_only_restricts_output_not_analysis(self, tmp_path):
+        # cross-file RPR202 context comes from file A; the finding lands
+        # in file B; --changed (report_only={B}) must still surface it
+        a = tmp_path / "wrapper.py"
+        a.write_text(PALLAS_HEADER + """
+def scatter(data, rows, slots):
+    return pl.pallas_call(lambda r, o: None,
+                          input_output_aliases={2: 0})(data, rows, slots)
+""")
+        b = tmp_path / "caller.py"
+        b.write_text("""
+def update(cache, rows, slots):
+    return scatter(cache, rows, slots)
+""")
+        out = run_paths([str(a), str(b)], report_only={str(b)})
+        assert rules_of(out) == ["RPR202"]
+        assert out[0].path == str(b)
+        # and restricting to an unrelated file reports nothing
+        assert run_paths([str(a), str(b)], report_only={str(a)}) == []
+
+    def test_self_check_src_is_clean(self):
+        # findings-as-errors over the whole tree: tier-1 runs this via
+        # scripts/lint.sh, and the suite enforces it directly too
+        files = sorted(str(p) for p in SRC.rglob("*.py"))
+        findings = run_paths(files)
+        assert findings == [], "\n".join(f.render() for f in findings)
+
+
+# --------------------------------------------------------------------------
+# annotations runtime behaviour
+# --------------------------------------------------------------------------
+
+class TestAnnotations:
+    def test_guarded_by_merges_per_lock(self):
+        @guarded_by("_a", "x", "y")
+        @guarded_by("_b", "z")
+        @guarded_by("_a", "w")
+        class C:
+            pass
+
+        assert C.__guarded_by__ == {"_a": ("w", "x", "y"), "_b": ("z",)}
+
+    def test_guarded_by_zero_runtime_cost(self):
+        class C:
+            pass
+
+        D = guarded_by("_l", "a")(C)
+        assert D is C
+
+    def test_requires_lock_metadata(self):
+        @requires_lock("_l", "_m")
+        def f():
+            pass
+
+        assert f.__requires_lock__ == ("_l", "_m")
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            guarded_by("")
+        with pytest.raises(ValueError):
+            guarded_by("_l", "")
+        with pytest.raises(ValueError):
+            requires_lock()

@@ -633,3 +633,142 @@ def test_refresh_disabled_without_flag():
     assert not tr._maybe_refresh_cache()
     assert tr.cache.version == 0
     tr.loader.close()
+
+
+# ----------------------------------- pinned-lookup eager version retirement
+
+
+def _heat_and_refresh(cache, lo, hi, max_swap=40):
+    for _ in range(5):
+        cache.lookup(np.repeat(np.arange(lo, hi), 4))
+    assert cache.refresh(max_swap=max_swap) > 0
+
+
+def test_pinned_lookup_retires_eagerly_on_release():
+    """A pinned lookup holds its classification version alive through any
+    number of refreshes; the release retires every older full [K, F]
+    block immediately instead of waiting out ``keep_versions``."""
+    src, cache = _cache(capacity=40)
+    cache.keep_versions = 10          # generous window: eager must win
+    dev = jax.devices()[0]
+    look = cache.lookup(np.arange(50, 120), pin=True)
+    _heat_and_refresh(cache, 250, 280)
+    _heat_and_refresh(cache, 200, 230)
+    assert cache.version == 2
+    assert cache.retained_versions() == [0, 1, 2]
+    # the pinned version is still combinable mid-flight
+    block = np.asarray(cache.data_on(dev, version=look.version))
+    assert block.shape == (40, F)
+    cache.release_lookup(look)
+    # everything below the current version dropped at the release
+    assert cache.retained_versions() == [2]
+    with pytest.raises(RuntimeError, match="retired"):
+        cache.data_on(dev, version=0)
+
+
+def test_pin_floor_is_oldest_inflight_version():
+    src, cache = _cache(capacity=40)
+    cache.keep_versions = 10
+    look0 = cache.lookup(np.arange(0, 60), pin=True)       # v0
+    _heat_and_refresh(cache, 250, 280)
+    look1 = cache.lookup(np.arange(60, 120), pin=True)     # v1
+    _heat_and_refresh(cache, 200, 230)
+    assert cache.retained_versions() == [0, 1, 2]
+    cache.release_lookup(look0)
+    # v1 is still pinned: only versions below it retire
+    assert cache.retained_versions() == [1, 2]
+    cache.release_lookup(look1)
+    assert cache.retained_versions() == [2]
+
+
+def test_release_unpinned_lookup_is_noop_and_window_unchanged():
+    """Without the pin opt-in the keep_versions window is untouched —
+    full back-compat for non-pinning callers."""
+    src, cache = _cache(capacity=40)
+    cache.keep_versions = 2
+    look = cache.lookup(np.arange(50, 120))               # NOT pinned
+    _heat_and_refresh(cache, 250, 280)
+    cache.release_lookup(look)                            # no-op
+    assert cache.retained_versions() == [0, 1]            # window intact
+    _heat_and_refresh(cache, 200, 230)
+    assert cache.retained_versions() == [1, 2]            # plain window
+
+
+def test_leaked_pin_self_heals_at_the_keep_versions_bound():
+    """A pin whose release was dropped (a crashed batch) must not pin
+    device memory forever: commit() ages leaked registrations below the
+    keep_versions low-water mark, so retirement re-arms."""
+    src, cache = _cache(capacity=40)
+    cache.keep_versions = 2
+    leaked = cache.lookup(np.arange(50, 120), pin=True)   # never released
+    _heat_and_refresh(cache, 250, 280, max_swap=10)
+    # within the keep_versions grace window the leak holds its version
+    assert cache.retained_versions() == [0, 1]
+    _heat_and_refresh(cache, 200, 230, max_swap=10)
+    # past the window commit() ages the leaked registration, and with no
+    # pins left the eager floor collapses retention to the current block
+    assert cache.retained_versions() == [2]
+    # a fresh pin/release cycle still works after the self-heal
+    look = cache.lookup(np.arange(0, 50), pin=True)
+    _heat_and_refresh(cache, 150, 180, max_swap=10)
+    assert cache.retained_versions() == [2, 3]   # pinned v2 held
+    cache.release_lookup(look)
+    assert cache.retained_versions() == [3]
+    del leaked
+
+
+def test_loader_pin_passthrough_and_trainer_drain(tmp_path):
+    """load_compact(pin=True) registers in-flight; the hybrid trainer's
+    assemble releases each pin, so after a run with refreshes the cache
+    holds exactly the current version (keep_versions memory drained)."""
+    ds, g = _small_ds()
+    hcfg = HybridConfig(total_batch=128, n_accel=1, hybrid=True,
+                        use_drm=False, tfp_depth=2, seed=0,
+                        use_accel_sampler=False, cache_fraction=0.2,
+                        cache_refresh=True, cache_drift_threshold=0.0,
+                        async_refresh=False)
+    tr = HybridGNNTrainer(ds, g, hcfg)
+    tr.train(8)
+    try:
+        assert tr.cache.version > 0          # refreshes really happened
+        assert tr.cache.retained_versions() == [tr.cache.version]
+    finally:
+        tr.close()
+
+
+def test_measured_hit_rate_blocks_on_inflight_merge():
+    """Regression (torn read): measured_hit_rate() must serialize against
+    record_lookup's window merge.  A merge is gated open mid-flight; the
+    reader must block until it completes rather than observe hit_rows
+    without the matching totals."""
+    import threading
+
+    src, cache = _cache(capacity=40)
+    in_merge, release = threading.Event(), threading.Event()
+    stats_cls = type(cache.epoch_stats)
+
+    class GatedStats(stats_cls):
+        def merge(self, other):
+            in_merge.set()
+            release.wait(5.0)
+            return super().merge(other)
+
+    gated = GatedStats()
+    gated.__dict__.update(cache.epoch_stats.__dict__)
+    cache.epoch_stats = gated
+    look = cache.lookup(np.arange(0, 40), record=False)
+    writer = threading.Thread(target=cache.record_lookup, args=(look,))
+    writer.start()
+    assert in_merge.wait(5.0)
+    got = []
+    reader = threading.Thread(
+        target=lambda: got.append(cache.measured_hit_rate()))
+    reader.start()
+    reader.join(0.3)
+    assert reader.is_alive(), \
+        "measured_hit_rate returned mid-merge: torn-read lock fix regressed"
+    release.set()
+    writer.join(5.0)
+    reader.join(5.0)
+    assert not reader.is_alive()
+    assert 0.0 <= got[0] <= 1.0

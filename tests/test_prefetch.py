@@ -146,6 +146,51 @@ def test_dedup_history_clears_on_source_eviction():
     pf.close()
 
 
+class _RacingSource(_StubSource):
+    """``window_evictions`` moves BETWEEN submit()'s two reads: the
+    pre-strip check sees 0, the post-strip re-check sees 1 — modelling
+    the worker's LRU evicting a remembered window while the strip is
+    being computed on the sample thread."""
+
+    def __init__(self):
+        self._ev_reads = 0
+        super().__init__()
+
+    @property
+    def window_evictions(self):
+        self._ev_reads += 1
+        # reads: 1 = WindowPrefetcher.__init__, 2 = submit(a) pre-strip
+        # check (history empty, no re-check), 3 = submit(b) pre-strip
+        # check, 4 = submit(b) post-strip re-check
+        return 0 if self._ev_reads < 4 else 1
+
+    @window_evictions.setter
+    def window_evictions(self, v):      # _StubSource.__init__ assigns 0
+        pass
+
+
+def test_eviction_during_dedup_strip_falls_back_to_full_rows():
+    """Regression (RPR101 find): submit() used to consult the source's
+    eviction counter only BEFORE computing the dedup strip, so rows
+    stripped as 'warm' could be evicted (cold again) by the time the
+    request was enqueued.  The post-strip re-check must fall back to
+    the FULL row set and discard the stale history."""
+    src = _RacingSource()
+    pf = WindowPrefetcher(src, max_queue=4, dedup_history=2)
+    a = np.arange(0, 100)
+    b = np.arange(50, 150)          # 50 rows the strip would have cut
+    assert pf.submit(a) and pf.wait_idle(30.0)
+    assert pf.submit(b) and pf.wait_idle(30.0)
+    assert np.array_equal(src.seen[1], b)       # whole set, not stripped
+    assert pf.resubmitted_rows_skipped == 0     # nothing credited as warm
+    # the suspect history was dropped; only b (re-remembered on its
+    # enqueue) is warm, so resubmitting a strips just the a∩b overlap
+    assert pf.submit(a) and pf.wait_idle(30.0)
+    assert np.array_equal(src.seen[2], np.arange(0, 50))
+    assert pf.resubmitted_rows_skipped == 50
+    pf.close()
+
+
 def test_dedup_off_by_default():
     src = _StubSource()
     pf = WindowPrefetcher(src, max_queue=4)
