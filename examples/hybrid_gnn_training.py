@@ -31,6 +31,27 @@ def main():
     ap.add_argument("--cache-fraction", type=float, default=0.0,
                     help="pin this fraction of the hottest node features "
                          "on each accelerator (0 = off)")
+    ap.add_argument("--cache-sharding", default="replicated",
+                    choices=["replicated", "sharded"],
+                    help="'sharded' partitions the hot set into disjoint "
+                         "per-accelerator shards (n x effective capacity "
+                         "at the same per-device budget): local misses "
+                         "are served from peer shards over the device "
+                         "interconnect before host PCIe, and the host "
+                         "gathers the union of all trainers' miss sets "
+                         "once, multicasting per-device slices "
+                         "(losses stay bit-identical to replicated)")
+    ap.add_argument("--shard-placement", default="hash",
+                    choices=["hash", "degree"],
+                    help="shard placement policy: 'hash' spreads rows "
+                         "uniformly (balanced occupancy), 'degree' keeps "
+                         "contiguous hotness-rank ranges co-resident")
+    ap.add_argument("--recent-rows-batches", type=int, default=0,
+                    help="cross-iteration device-side dedup: remember the "
+                         "last N batches' shipped rows per accelerator "
+                         "and reuse the device-resident copies instead "
+                         "of re-shipping over PCIe (invalidated on cache "
+                         "refresh; 0 = off)")
     ap.add_argument("--cache-refresh", action="store_true",
                     help="dynamic cache refresh: track observed per-slot / "
                          "uncached hotness and swap the coldest slots for "
@@ -131,6 +152,9 @@ def main():
     hcfg = HybridConfig(total_batch=args.batch, n_accel=args.n_accel,
                         hybrid=True, use_drm=True, tfp_depth=2, lr=3e-3,
                         cache_fraction=args.cache_fraction,
+                        cache_sharding=args.cache_sharding,
+                        shard_placement=args.shard_placement,
+                        recent_rows_batches=args.recent_rows_batches,
                         cache_refresh=args.cache_refresh,
                         cache_refresh_frac=args.cache_refresh_frac,
                         cache_refresh_decay=args.cache_refresh_decay,
@@ -176,6 +200,17 @@ def main():
               f"{tf['shipped_bytes']/1e6:.1f} MB, saved "
               f"{tf['saved_bytes']/1e6:.1f} MB "
               f"({tf['reduction']:.2f}x reduction)")
+        if args.cache_sharding == "sharded" and hasattr(tr.cache, "shards"):
+            print(f"sharded plane: {len(tr.cache.shards)} shards "
+                  f"({args.shard_placement}), {tr.cache.capacity} resident "
+                  f"rows, peer-served {tf['peer_rows']:.0f} rows "
+                  f"({tf['peer_saved_bytes']/1e6:.1f} MB off PCIe), union "
+                  f"gather saved {tf['union_saved_bytes']/1e6:.1f} MB, "
+                  f"ICI {tf['ici_bytes']/1e6:.1f} MB")
+        if args.recent_rows_batches:
+            print(f"recent-rows LRU: {tf['recent_rows']:.0f} rows reused "
+                  f"on device ({tf['recent_saved_bytes']/1e6:.1f} MB not "
+                  f"re-shipped)")
         if args.cache_refresh:
             print(f"cache refresh: {tr.cache.refreshes} refreshes moved "
                   f"{tr.cache.refresh_swapped_rows} rows "

@@ -21,6 +21,12 @@
 #    interpret-mode CPU, and e2e trainer losses bit-identical across
 #    pipeline depths.
 #
+#  * sharded plane (~60 s): sharded vs replicated feature cache at equal
+#    per-device capacity — the union gather must ship strictly fewer
+#    host->device bytes than per-trainer dedup at n_accel >= 2, the
+#    n_accel=4 cell must clear the >= 1.5x shipped-byte reduction, and
+#    sharded/replicated losses must be bit-identical,
+#
 #  * chaos suite (~30 s, hard 300 s timeout): deterministic fault
 #    injection against the whole trainer — transient storage faults with
 #    bit-identical losses, prefetcher death with graceful degradation,
@@ -51,4 +57,5 @@ python -m benchmarks.fig_cache_ablation --smoke-refresh
 python -m benchmarks.bench_outofcore --smoke
 python -m benchmarks.bench_outofcore --smoke-prefetch
 python -m benchmarks.bench_kernel_overlap --smoke
+python -m benchmarks.bench_shard --smoke
 echo "tier1: OK"

@@ -139,8 +139,17 @@ class DRMEngine:
 
     def step(self, times: StageTimes) -> Assignment:
         t_accel = times.t_accel                          # line 1
+        # Balance on the load stage's *compute* time: the storage-stall
+        # share (t_load_stall) is seconds the gather threads sat faulting
+        # cold mmap pages, which no thread/row rebalance can shrink — the
+        # prefetcher exists for that.  Folding it in made a stall-bound
+        # loader look like the system bottleneck, stealing threads (or
+        # rows, via the fastest-cpu-task ranking) from trainers that were
+        # not actually slow.  Stall is pool-thread-summed and can exceed
+        # the wall-clock t_load, hence the clamp at 0.
+        t_load_eff = max(times.t_load - times.t_load_stall, 0.0)
         stages = {"t_sc": times.t_sc, "t_sa": times.t_sa,
-                  "t_load": times.t_load, "t_tc": times.t_tc,
+                  "t_load": t_load_eff, "t_tc": times.t_tc,
                   "t_accel": t_accel}
         # stages with zero time are inactive (e.g. no accelerator sampler)
         # and cannot be "fastest" — Algorithm 1 assumes all stages exist.

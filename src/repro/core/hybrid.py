@@ -45,6 +45,22 @@ Ablation knobs reproduce Fig. 11 exactly:
     refresh can never corrupt batches already past the load stage —
     losses are bit-identical with refresh on or off.
 
+  * ``cache_sharding="sharded"``           -> the distributed hot-feature
+    plane: each accelerator pins a *disjoint* hot shard (hash or
+    degree-range placement), n× effective capacity at the same per-device
+    budget.  A frontier row missing locally is pulled from the peer shard
+    owning it over the accelerator interconnect (ring-ordered
+    ``dist.collectives.exchange_peer_rows``) before falling back to the
+    host, and the load stage gathers the *union* of all trainers' miss
+    sets once, multicasting each row only to the devices that need it
+    (one host gather instead of n).  Losses stay bit-identical to the
+    replicated plane — only where bytes travel changes.
+
+  * ``recent_rows_batches>0``              -> cross-iteration device-side
+    dedup (replicated path): unique rows shipped in the last N batches
+    stay addressable on their device and are re-gathered there instead
+    of re-shipped over PCIe; invalidated by any cache refresh.
+
   * ``prefetch_windows>0`` / ``mmap_lru_windows>0`` / ``async_refresh``
     -> the background storage-I/O subsystem for the disk tier: the sample
     stage hands batch i+1's frontier to a ``WindowPrefetcher`` thread
@@ -100,11 +116,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.analysis.annotations import guarded_by
+from repro.dist.collectives import exchange_peer_rows
 from repro.graph import (FeatureLoader, GNNConfig, GraphDataset, MiniBatch,
-                         MissBlock, NumpySampler, WindowPrefetcher,
-                         build_cache, compact_lookup, init_params, loss_fn,
+                         MissBlock, NumpySampler, ShardMissBlock,
+                         WindowPrefetcher, build_cache, build_sharded_cache,
+                         compact_lookup, init_params, loss_fn,
                          sample_minibatch_jax)
-from repro.kernels.ops import assemble_features
+from repro.kernels.ops import assemble_features, assemble_features_sharded
 from repro.optim import (CompressionSpec, adamw, compress_grads,
                          decompress_grads)
 from repro.optim.optimizers import apply_updates
@@ -130,6 +148,22 @@ class HybridConfig:
     compression: str = "none"         # sync-path gradient compression
     feature_dtype: str = "float32"    # transfer-path compression ("bfloat16")
     cache_fraction: float = 0.0       # device hot-feature cache (0 = off)
+    cache_sharding: str = "replicated"  # "replicated" = one identical cache
+                                      #   per accelerator (legacy, bit-exact);
+                                      #   "sharded" = disjoint hot shard per
+                                      #   accelerator (n× effective capacity,
+                                      #   peer rows over ICI, union-gather
+                                      #   multicast).  Falls back to
+                                      #   replicated below 2 accelerators.
+    shard_placement: str = "hash"     # sharded-plane placement policy:
+                                      #   "hash" (SplitMix64 of the node id)
+                                      #   or "degree" (contiguous
+                                      #   hotness-rank ranges)
+    recent_rows_batches: int = 0      # cross-iteration device-side dedup:
+                                      #   rows shipped in the last N batches
+                                      #   stay addressable on the device and
+                                      #   are not re-shipped (0 = off;
+                                      #   replicated/dedup path only)
     cache_assemble: str = "auto"      # "auto" | "jnp" | "pallas" combine path
     kernel_pipeline_depth: int = 1    # Pallas combine/scatter DMA pipeline
                                       #   depth: 1 = single-buffered, 2..4 =
@@ -295,14 +329,31 @@ class HybridGNNTrainer:
                 fault_injector=fault_injector)
 
         # --- feature store: device hot cache + dedup/miss-only loader --------
-        self.cache = build_cache(dataset, cfg.cache_fraction,
-                                 transfer_dtype=cfg.feature_dtype,
-                                 refresh_decay=cfg.cache_refresh_decay,
-                                 max_refresh_frac=cfg.cache_refresh_frac,
-                                 refresh_hysteresis=cfg
-                                 .cache_refresh_hysteresis)
+        # "sharded" partitions the hot set across the accelerators
+        # (disjoint per-device shards, peer rows over ICI, one union
+        # gather per batch); below 2 accelerators there is nothing to
+        # partition and the plane falls back to the replicated cache.
+        if (cfg.cache_sharding == "sharded" and cfg.n_accel >= 2
+                and cfg.cache_fraction > 0.0):
+            self.cache = build_sharded_cache(
+                dataset, cfg.cache_fraction, n_shards=cfg.n_accel,
+                placement=cfg.shard_placement,
+                transfer_dtype=cfg.feature_dtype,
+                refresh_decay=cfg.cache_refresh_decay,
+                max_refresh_frac=cfg.cache_refresh_frac,
+                refresh_hysteresis=cfg.cache_refresh_hysteresis)
+        else:
+            self.cache = build_cache(dataset, cfg.cache_fraction,
+                                     transfer_dtype=cfg.feature_dtype,
+                                     refresh_decay=cfg.cache_refresh_decay,
+                                     max_refresh_frac=cfg.cache_refresh_frac,
+                                     refresh_hysteresis=cfg
+                                     .cache_refresh_hysteresis)
+        self._sharded = self.cache is not None and hasattr(self.cache,
+                                                           "shards")
         self.loader = FeatureLoader(dataset, transfer_dtype=cfg.feature_dtype,
-                                    cache=self.cache, dedup=cfg.dedup)
+                                    cache=self.cache, dedup=cfg.dedup,
+                                    recent_batches=cfg.recent_rows_batches)
         # design-time Eq. 7 overlap estimate: a running prefetcher is
         # assumed to hide the storage stream (the same design assumption
         # TFP makes for the whole load stage); re-pricing uses the
@@ -519,7 +570,17 @@ class HybridGNNTrainer:
         t0 = time.perf_counter()
         stall0 = self.loader.stats.stall_seconds \
             + self.loader.host_stats.stall_seconds
+        # sharded plane: ONE union lookup + host gather covers every
+        # accelerator trainer of this batch (each unique miss row is
+        # gathered/shipped once and multicast to the devices needing it)
+        accel_mbs = {n: mb for n, mb in p["minibatch"].items() if n != "cpu"}
+        if self._sharded and accel_mbs:
+            ordinals = {n: int(n[len("accel"):]) for n in accel_mbs}
+            p["features"].update(
+                self.loader.load_union(accel_mbs, ordinals, pin=True))
         for name, mb in p["minibatch"].items():
+            if self._sharded and name != "cpu":
+                continue      # served by the union gather above
             # accelerator trainers get the compact transfer path (unique
             # miss rows against the on-device hot cache, or plain unique
             # rows when uncached); the CPU trainer's "device" is host
@@ -531,7 +592,9 @@ class HybridGNNTrainer:
                 # combine, so drained versions retire device blocks
                 # eagerly instead of aging out of keep_versions
                 p["features"][name] = self.loader.load_compact(
-                    mb, pin=self.cache is not None)
+                    mb, pin=self.cache is not None,
+                    recent_key=(name if self.cfg.recent_rows_batches > 0
+                                else None))
             else:
                 p["features"][name] = self.loader.load(
                     mb, to_device=(name != "cpu"))
@@ -570,6 +633,22 @@ class HybridGNNTrainer:
             self.loader.note_transfer_padding(
                 pad, pad * rows.shape[1] * rows.dtype.itemsize)
         miss = jax.device_put(rows, dev)
+        if block.shipped is not None:
+            # publish the device-resident rows for the recent-rows LRU:
+            # a later batch's load stage plans against the ids/version
+            # (already registered at load time); only the transfer stage
+            # — strictly in pipeline order — reads this array, so the
+            # single-writer fill is race-free.  Padding rows sit past
+            # every recent index (< len(shipped.ids)).
+            block.shipped.array = miss
+        if block.recent:
+            # rows still resident from recent batches: re-gather them on
+            # the device instead of re-shipping over PCIe, and lay them
+            # out ahead of the fresh block ([recent segments | fresh] —
+            # the combined layout load_compact's miss_index addresses)
+            segs = [jnp.take(e.array, jnp.asarray(idx), axis=0)
+                    for e, idx in block.recent]
+            miss = jnp.concatenate(segs + [miss], axis=0)
         # pin the combine to the cache version the lookup was classified
         # against: a dynamic refresh between _stage_load and here must not
         # re-bind the slot indices to a newer (reshuffled) device block
@@ -587,6 +666,46 @@ class HybridGNNTrainer:
                                  use_pallas=self._assemble_pallas,
                                  pipeline_depth=self.cfg
                                  .kernel_pipeline_depth)
+
+    def _assemble_sharded(self, block: ShardMissBlock, dev) -> jax.Array:
+        """Sharded-plane combine: the dense layer-0 input is assembled
+        from the LOCAL shard block (slot hits), rows pulled from peer
+        shards over the ICI (ring order), and the fresh host rows the
+        union gather shipped — the combined transfer source layout
+        ``[peer rows | fresh rows]`` the union lookup's miss_index
+        addresses.  Every shard block is resolved at the version the
+        lookup pinned, so refreshes mid-pipeline stay bit-invisible."""
+        sl = block.shard
+        look = block.lookup
+        rows = block.rows
+        m = rows.shape[0]
+        bucket = min(-(-m // 128) * 128, max(look.num_rows, 1))
+        if m < bucket:
+            pad = bucket - m
+            rows = np.concatenate(
+                [rows, np.zeros((pad, rows.shape[1]), rows.dtype)], 0)
+            self.loader.note_transfer_padding(
+                pad, pad * rows.shape[1] * rows.dtype.itemsize)
+        miss = jax.device_put(rows, dev)
+        me = sl.shard
+        local = self.cache.shards[me].data_on(dev, version=look.version)
+        # pull peer rows: gather on the owner's device at the pinned
+        # version, ship only the requested rows here (the ICI hop)
+        peers = exchange_peer_rows(
+            sl.peer_requests,
+            lambda p, v: self.cache.shards[p].data_on(
+                self._accel_device(f"accel{p}"), version=v),
+            dev, use_pallas=self._assemble_pallas,
+            pipeline_depth=self.cfg.kernel_pipeline_depth)
+        x = assemble_features_sharded(local, peers + [miss], look.slots,
+                                      look.miss_index,
+                                      use_pallas=self._assemble_pallas,
+                                      pipeline_depth=self.cfg
+                                      .kernel_pipeline_depth)
+        # combine + peer gathers hold their own block references: release
+        # every shard pin so drained versions retire eagerly
+        self.cache.release_union(sl)
+        return x
 
     def _accel_device(self, name: str):
         """Device of accelerator trainer ``name`` ("accelN" -> ordinal N).
@@ -615,8 +734,12 @@ class HybridGNNTrainer:
             dev = (self.cpu_device if kind == "cpu"
                    else self._accel_device(name))
             feat = p["features"][name]
-            x = (self._assemble(feat, dev) if isinstance(feat, MissBlock)
-                 else jax.device_put(feat, dev))
+            if isinstance(feat, ShardMissBlock):
+                x = self._assemble_sharded(feat, dev)
+            elif isinstance(feat, MissBlock):
+                x = self._assemble(feat, dev)
+            else:
+                x = jax.device_put(feat, dev)
             mb = jax.device_put(p["minibatch"][name], dev)
             p["features"][name] = x
             p["minibatch"][name] = mb
@@ -711,19 +834,39 @@ class HybridGNNTrainer:
             return self.prefetch_overlap
         return float(src.prefetch_hit_rate)
 
+    def _sharded_pricing(self, measured: float) -> Tuple[float, float, float]:
+        """Split the measured hit rate into (local, peer) components and
+        derive the union multicast factor from window stats — the
+        sharded-plane Eq. 7/8 terms.  The window's ``hit_rate`` counts
+        local AND peer-served positions (neither touches the host), so
+        the model's ``cache_hit_rate`` gets only the local share."""
+        if not self._sharded:
+            return measured, 0.0, 1.0
+        win = self.loader.window
+        if win.total_rows == 0:
+            return measured, 0.0, 1.0
+        rb = self.cache.row_bytes
+        peer = (win.peer_saved_bytes / rb) / win.total_rows
+        shipped = win.bytes - win.padding_bytes
+        denom = shipped + win.union_saved_bytes
+        uf = shipped / denom if denom > 0 else 1.0
+        return max(measured - peer, 0.0), peer, uf
+
     def _reprice_mapping(self, measured: float, alpha: float) -> None:
         """Re-run the initial task mapping with a measured hit rate +
         alpha and hand the refreshed shares to the runtime (the DRM keeps
         fine-tuning from there)."""
         overlap = self._measured_prefetch_overlap()
+        local, peer, uf = self._sharded_pricing(measured)
         mapping = initial_task_mapping(
             PLATFORMS[self.cfg.host_platform],
             PLATFORMS[self.cfg.accel_platform],
             self.cfg.n_accel, self.cfg.total_batch,
             self.gnn_cfg.fanouts, self.gnn_cfg.layer_dims,
-            model=self.gnn_cfg.model, cache_hit_rate=measured,
+            model=self.gnn_cfg.model, cache_hit_rate=local,
             dedup_factor=alpha, feature_tier=self.feature_tier,
-            prefetch_overlap=overlap)
+            prefetch_overlap=overlap, peer_hit_rate=peer,
+            union_factor=uf)
         self._model_prefetch_overlap = overlap
         a = self.runtime.assignment
         n = max(self.cfg.n_accel, 1)
@@ -957,6 +1100,10 @@ class HybridGNNTrainer:
                 if dead_accel and a.n_accel > self.cfg.n_accel - dead_accel:
                     a.cpu_batch += a.accel_batch * dead_accel
                     a.n_accel = self.cfg.n_accel - dead_accel
+                # a dead trainer's recent-rows history will never be
+                # matched (or filled) again: free it
+                for n in failed:
+                    self.loader.drop_recent(n)
             self.runtime.end_iteration(times)
             # refresh the cache first: when it moves rows it resets the
             # measurement window, so the mapping re-price (next iterations)
@@ -1156,15 +1303,24 @@ class HybridGNNTrainer:
         s = self.loader.stats
         # legacy baseline = every requested frontier position shipped
         # (= gathered unique-miss bytes + bytes the cache absorbed + bytes
-        # dedup absorbed; padding is an artifact of the compact path, not
-        # part of the baseline)
+        # dedup absorbed + bytes peer shards / the union multicast / the
+        # recent-rows LRU absorbed; padding is an artifact of the compact
+        # path, not part of the baseline).  The sharded/recent terms are 0
+        # on the replicated path, so legacy runs reconstruct exactly.
         baseline = ((s.bytes - s.padding_bytes) + s.saved_bytes
-                    + s.dedup_saved_bytes)
+                    + s.dedup_saved_bytes + s.peer_saved_bytes
+                    + s.union_saved_bytes + s.recent_saved_bytes)
         return {
             "shipped_rows": float(s.rows),
             "shipped_bytes": float(s.bytes),
             "saved_bytes": float(s.saved_bytes),
             "dedup_saved_bytes": float(s.dedup_saved_bytes),
+            "peer_rows": float(s.peer_rows),
+            "peer_saved_bytes": float(s.peer_saved_bytes),
+            "union_saved_bytes": float(s.union_saved_bytes),
+            "ici_bytes": float(s.ici_bytes),
+            "recent_rows": float(s.recent_rows),
+            "recent_saved_bytes": float(s.recent_saved_bytes),
             "padding_bytes": float(s.padding_bytes),
             "host_read_bytes": float(self.loader.host_stats.bytes),
             "hit_rate": s.hit_rate,

@@ -36,6 +36,11 @@ class PlatformSpec:
     # (the out-of-core MmapFeatures tier).  0 = knob unset: Eq. 7 falls
     # back to memory bandwidth, i.e. features are assumed RAM-resident.
     storage_bw_gbps: float = 0.0
+    # accelerator-to-accelerator interconnect (ICI/NVLink) bandwidth, used
+    # by the sharded feature plane to price peer-shard row hops separately
+    # from host PCIe.  0 = knob unset: peer traffic falls back to the PCIe
+    # figure (interconnect_gbps), i.e. no fast device fabric.
+    ici_gbps: float = 0.0
 
 
 PLATFORMS: Dict[str, PlatformSpec] = {
@@ -49,7 +54,7 @@ PLATFORMS: Dict[str, PlatformSpec] = {
                                2048, 0.3, True),
     # target hardware for the dry-run/roofline (TPU v5e per prompt constants)
     "tpu-v5e":    PlatformSpec("tpu-v5e", 197.0, 819.0, 16.0, 128.0,
-                               4 * 128 * 128, 0.94, True),
+                               4 * 128 * 128, 0.94, True, ici_gbps=200.0),
 }
 
 
@@ -96,6 +101,19 @@ class WorkloadSpec:
     # exposed.  At runtime the feedback loop re-prices with the measured
     # prefetch hit rate.  Ignored on the "ram" tier.
     prefetch_overlap: float = 0.0
+    # sharded hot-feature plane (ShardedFeatureCache): fraction of loaded
+    # rows served from a *peer* device's shard over the accelerator
+    # interconnect instead of the local shard or the host.  Peer rows
+    # never touch the host gather or PCIe (Eqs. 7/8) but do cross the
+    # ICI, so t_trans prices them at ici_gbps.  0 = replicated cache.
+    peer_hit_rate: float = 0.0
+    # union-gather multicast factor: unique rows in the *union* of all
+    # trainers' miss sets / sum of per-trainer unique misses.  The host
+    # gathers and ships the union once (Eq. 7 and the PCIe leg of Eq. 8
+    # scale by this), then the rows a trainer needs but did not receive
+    # directly are fanned out over ICI.  1 = per-trainer dedup only
+    # (replicated plane); < 1 only when trainers' frontiers overlap.
+    union_factor: float = 1.0
 
     def frontier_sizes(self) -> Tuple[int, ...]:
         out = [self.batch_size]
@@ -117,10 +135,15 @@ class WorkloadSpec:
         return self.frontier_sizes()[-1]
 
     def miss_rows(self) -> float:
-        """Expected rows actually gathered+shipped after cache hits and
-        frontier deduplication (unique misses only)."""
-        return (self.loaded_rows() * (1.0 - self.cache_hit_rate)
-                * self.dedup_factor)
+        """Expected rows actually gathered+shipped after local cache hits,
+        peer-shard hits and frontier deduplication (unique misses only)."""
+        miss = max(1.0 - self.cache_hit_rate - self.peer_hit_rate, 0.0)
+        return self.loaded_rows() * miss * self.dedup_factor
+
+    def peer_rows(self) -> float:
+        """Expected rows served from peer shards over the ICI (deduped the
+        same way as host misses — one hop per unique peer row)."""
+        return self.loaded_rows() * self.peer_hit_rate * self.dedup_factor
 
     def model_bytes(self) -> int:
         """Σ_l f^{l-1} × f^l × S_feat (Eq. 13 numerator)."""
@@ -159,8 +182,13 @@ def t_load(w: WorkloadSpec, host: PlatformSpec, n_trainers: int) -> float:
     prefetcher overlaps the storage stream with the previous iteration's
     compute, so only ``(1 - prefetch_overlap)`` of the storage *penalty*
     (the excess over the RAM-speed gather) stays exposed on the load
-    stage — the same discount TFP applies to the stage as a whole."""
-    num = n_trainers * w.miss_rows() * w.layer_dims[0] * w.feat_bytes
+    stage — the same discount TFP applies to the stage as a whole.
+
+    With the union-gather multicast (sharded plane) the host gathers the
+    *union* of the trainers' miss sets once instead of each trainer's set
+    separately, so the per-trainer traffic scales by ``union_factor``."""
+    num = (n_trainers * w.miss_rows() * w.layer_dims[0] * w.feat_bytes
+           * min(max(w.union_factor, 0.0), 1.0))
     t_mem = num / (host.mem_bw_gbps * 1e9)
     if w.feature_tier == "disk" and host.storage_bw_gbps > 0.0:
         bw = min(host.mem_bw_gbps, host.storage_bw_gbps)
@@ -171,9 +199,24 @@ def t_load(w: WorkloadSpec, host: PlatformSpec, n_trainers: int) -> float:
 
 
 def t_trans(w: WorkloadSpec, accel: PlatformSpec) -> float:
-    """Eq. 8 extended with the cache term: only miss rows cross PCIe."""
-    num = w.miss_rows() * w.layer_dims[0] * w.feat_bytes
-    return num / (accel.interconnect_gbps * 1e9)
+    """Eq. 8 extended with the cache and sharding terms.
+
+    PCIe leg: only the union share of the miss rows is shipped from the
+    host (the union-gather sends each unique row once, to one device).
+    ICI leg: the multicast fan-out copies (rows this trainer needs that
+    arrived on another device first) plus the peer-shard row hops cross
+    the accelerator interconnect, priced at ``ici_gbps`` (falling back to
+    PCIe bandwidth when the platform has no fast fabric).  The two legs
+    use different links and overlap, so the stage time is their max."""
+    row_bytes = w.layer_dims[0] * w.feat_bytes
+    uf = min(max(w.union_factor, 0.0), 1.0)
+    t_pcie = w.miss_rows() * uf * row_bytes / (accel.interconnect_gbps * 1e9)
+    ici_rows = w.miss_rows() * (1.0 - uf) + w.peer_rows()
+    if ici_rows <= 0.0:
+        return t_pcie
+    ici_bw = accel.ici_gbps if accel.ici_gbps > 0.0 else accel.interconnect_gbps
+    t_ici = ici_rows * row_bytes / (ici_bw * 1e9)
+    return max(t_pcie, t_ici)
 
 
 def t_aggregate(w: WorkloadSpec, dev: PlatformSpec, layer: int) -> float:
@@ -243,7 +286,9 @@ def initial_task_mapping(host: PlatformSpec, accel: PlatformSpec,
                          cache_hit_rate: float = 0.0,
                          dedup_factor: float = 1.0,
                          feature_tier: str = "ram",
-                         prefetch_overlap: float = 0.0) -> Dict[str, int]:
+                         prefetch_overlap: float = 0.0,
+                         peer_hit_rate: float = 0.0,
+                         union_factor: float = 1.0) -> Dict[str, int]:
     """Coarse-grained design-time mapping (paper §IV-A first paragraph).
 
     Chooses the CPU trainer's mini-batch share so the predicted CPU
@@ -267,6 +312,12 @@ def initial_task_mapping(host: PlatformSpec, accel: PlatformSpec,
     disk tier's storage penalty by the fraction the background window
     prefetcher hides (both trainer kinds gather through the same
     prefetched page cache, so both carry it).
+
+    ``peer_hit_rate`` and ``union_factor`` are the sharded-plane terms
+    (peer-shard service rate and union-gather multicast factor): both
+    shrink the accelerators' host-side load/PCIe terms (peer rows ride
+    the ICI instead), again shifting the optimum toward larger
+    accelerator shares.  The CPU trainer carries neither.
     """
     best: Tuple[float, int] = (float("inf"), 0)
     step = max(1, total_batch // 64)
@@ -279,7 +330,9 @@ def initial_task_mapping(host: PlatformSpec, accel: PlatformSpec,
                              cache_hit_rate=cache_hit_rate,
                              dedup_factor=dedup_factor,
                              feature_tier=feature_tier,
-                             prefetch_overlap=prefetch_overlap)
+                             prefetch_overlap=prefetch_overlap,
+                             peer_hit_rate=peer_hit_rate,
+                             union_factor=union_factor)
         pred = predict(host, accel, n_accel, w_cpu, w_acc)
         if pred.t_execution < best[0]:
             best = (pred.t_execution, cpu_share)

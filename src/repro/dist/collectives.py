@@ -12,10 +12,20 @@ phases instead:
 
 Leaves whose leading dim the local axes do not divide (scalars, small
 biases) fall back to a flat psum — same result, negligible bytes.
+
+This module also hosts the *peer feature exchange* for the sharded
+hot-feature plane (``graph.featcache.ShardedFeatureCache``): each
+accelerator pins a disjoint hot shard, and a frontier row that misses
+locally but is resident on a peer shard is served with one on-peer
+gather plus one row hop over the accelerator interconnect (ICI) instead
+of a host PCIe ship.  ``exchange_peer_rows`` walks the requests in
+deterministic ring order (me+1, me+2, ..., wrap) — the schedule every
+trainer derives identically, so an all-to-all of such exchanges never
+deadlocks and the combined transfer-source layout is reproducible.
 """
 from __future__ import annotations
 
-from typing import Any
+from typing import Any, Callable, List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +33,59 @@ from jax.sharding import PartitionSpec as P
 
 from . import current_mesh, shard_map_compat
 
-__all__ = ["hierarchical_psum_mean"]
+__all__ = ["exchange_peer_rows", "hierarchical_psum_mean",
+           "peer_gather_rows", "ring_order"]
+
+
+def ring_order(n: int, me: int) -> List[int]:
+    """Deterministic ring schedule of the other ``n - 1`` ordinals as
+    seen from ``me``: (me+1) % n, (me+2) % n, ...  Step s of the
+    all-to-all pairs every trainer with a distinct peer (i talks to
+    i+s while i-s talks to i), so no link is oversubscribed and every
+    participant derives the same global schedule locally."""
+    n = int(n)
+    me = int(me) % max(n, 1)
+    return [(me + s) % n for s in range(1, n)]
+
+
+def peer_gather_rows(block: jax.Array, slots, dest_device,
+                     use_pallas: bool = False,
+                     pipeline_depth: int = 1) -> jax.Array:
+    """Serve one peer request: gather ``slots`` rows out of the owner
+    shard's device-resident ``block`` (on the owner's device — the
+    Pallas path reuses the tiled combine machinery via
+    ``kernels.ops.gather_rows``), then ship only those rows to
+    ``dest_device`` in one hop (the ICI transfer; on the CPU test mesh
+    the hop is a same-backend ``device_put``)."""
+    from repro.kernels.ops import gather_rows
+    rows = gather_rows(block, slots, use_pallas=use_pallas,
+                       pipeline_depth=pipeline_depth)
+    return jax.device_put(rows, dest_device)
+
+
+def exchange_peer_rows(requests: Sequence[Tuple[int, Any, int]],
+                       block_of: Callable[[int, int], jax.Array],
+                       dest_device,
+                       use_pallas: bool = False,
+                       pipeline_depth: int = 1) -> List[jax.Array]:
+    """Pull the requested rows from each peer shard, in the ring order
+    the requests were built in.
+
+    ``requests`` is one trainer's ``ShardLookup.peer_requests`` —
+    ``(peer ordinal, slots into the peer block, peer version)`` tuples —
+    and ``block_of(peer, version)`` resolves the peer shard's
+    device-resident block at the pinned version (the caller holds the
+    pins, so the block cannot be retired mid-exchange).  Returns one
+    row-block per request, in request order: exactly the leading
+    segments of the combined transfer source the union lookup's
+    ``miss_index`` addresses."""
+    out: List[jax.Array] = []
+    for peer, slots, version in requests:
+        block = block_of(int(peer), int(version))
+        out.append(peer_gather_rows(block, slots, dest_device,
+                                    use_pallas=use_pallas,
+                                    pipeline_depth=pipeline_depth))
+    return out
 
 
 def hierarchical_psum_mean(tree: Any) -> Any:

@@ -8,6 +8,9 @@
 #              (boots hotness-ordered; vectorized id->slot lookup; dynamic
 #              refresh swaps cold slots for observed-hot uncached nodes
 #              with versioned device snapshots for in-flight consistency).
+#              ShardedFeatureCache partitions the hot set into disjoint
+#              per-accelerator shards (hash / degree-range placement) and
+#              classifies union lookups into local / peer / host tiers.
 # featload.py  host gather stage: full-frontier loads for CPU trainers,
 #              miss-only loads for cache-backed accelerator trainers.
 # prefetch.py  WindowPrefetcher: background thread pre-faulting the NEXT
@@ -30,9 +33,10 @@ from .storage import (CSRGraph, DenseFeatures, FeatureSource, GraphDataset,
                       DATASET_STATS, as_feature_source, make_dataset,
                       synth_powerlaw_graph)
 from .sampler import MiniBatch, NumpySampler, sample_minibatch_jax, frontier_sizes
-from .featcache import (CacheLookup, CacheStats, FeatureCache, build_cache,
-                        compact_lookup)
-from .featload import FeatureLoader, LoadStats, MissBlock
+from .featcache import (CacheLookup, CacheStats, FeatureCache, ShardLookup,
+                        ShardPlacement, ShardedFeatureCache, UnionLookup,
+                        build_cache, build_sharded_cache, compact_lookup)
+from .featload import FeatureLoader, LoadStats, MissBlock, ShardMissBlock
 from .prefetch import WindowPrefetcher
 from .faults import FaultInjector, FaultSpec, WorkerKilled
 from .models import GNNConfig, init_params, forward, loss_fn, param_count
@@ -43,9 +47,11 @@ __all__ = [
     "as_feature_source",
     "DATASET_STATS", "make_dataset", "synth_powerlaw_graph",
     "MiniBatch", "NumpySampler", "sample_minibatch_jax", "frontier_sizes",
-    "CacheLookup", "CacheStats", "FeatureCache", "build_cache",
-    "compact_lookup",
-    "FeatureLoader", "LoadStats", "MissBlock", "WindowPrefetcher",
+    "CacheLookup", "CacheStats", "FeatureCache", "ShardLookup",
+    "ShardPlacement", "ShardedFeatureCache", "UnionLookup", "build_cache",
+    "build_sharded_cache", "compact_lookup",
+    "FeatureLoader", "LoadStats", "MissBlock", "ShardMissBlock",
+    "WindowPrefetcher",
     "FaultInjector", "FaultSpec", "WorkerKilled",
     "GNNConfig", "init_params", "forward", "loss_fn", "param_count",
 ]

@@ -31,12 +31,17 @@ consistency protocol: a lookup classified against the slot table at
 version v must be combined against the *version-v* device block, or the
 positional slot indices would read rows that were since evicted.  The
 cache therefore keeps a monotonically increasing ``version``; every
-``CacheLookup`` records the version it was classified against, device
-snapshots are retained per version (the last ``keep_versions``, sized to
-the pipeline depth by the trainer — note this pins up to that many [K, F]
-blocks per device; see the ROADMAP undo-log follow-on), and
-``data_on(device, version=...)`` serves the matching block.  A refresh
-can thus never corrupt batches already past the load stage.
+``CacheLookup`` records the version it was classified against, old
+versions are reconstructable for the last ``keep_versions`` bumps (sized
+to the pipeline depth by the trainer), and ``data_on(device,
+version=...)`` serves the matching block.  A refresh can thus never
+corrupt batches already past the load stage.  Retention is an
+O(swapped_rows) *undo log*, not full blocks: each version bump stores
+only the evicted rows (slot indices + old row values), and an old host
+block is rebuilt on demand by applying the log backwards from the
+current one — device blocks already placed for an in-flight version stay
+memoized until the pin protocol (or the ``keep_versions`` window)
+retires them.
 
 Components:
 
@@ -72,7 +77,7 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -81,8 +86,10 @@ from repro.analysis.annotations import guarded_by, requires_lock
 
 from .storage import FeatureSource, as_feature_source
 
-__all__ = ["CacheLookup", "CacheStats", "FeatureCache", "build_cache",
-           "compact_lookup", "wire_row_bytes"]
+__all__ = ["CacheLookup", "CacheStats", "FeatureCache", "ShardLookup",
+           "ShardPlacement", "ShardedFeatureCache", "UnionLookup",
+           "build_cache", "build_sharded_cache", "compact_lookup",
+           "wire_row_bytes"]
 
 
 def wire_row_bytes(feat_dim: int, transfer_dtype: str) -> int:
@@ -221,14 +228,15 @@ class _StagedRefresh:
 
 
 # one lock covers the (slot_of, version) pair, the hotness counters, the
-# stats windows, the staged plan and the per-version retention maps.
+# stats windows, the staged plan and the version-retention state (undo
+# log + floor + memoized device blocks).
 # Deliberately undeclared: capacity/feat_dim/row_bytes (immutable),
 # track_hotness/keep_versions/use_pallas_update/kernel_pipeline_depth/
 # refresh_* (config knobs, set before any worker thread starts).
 @guarded_by("_lock", "slot_of", "version", "cached_ids", "stats",
             "epoch_stats", "stage_failures", "refreshes",
             "refresh_swapped_rows", "_staged", "_slot_hot", "_node_hot",
-            "_host_rows", "_host_by_version", "_device_data", "_devices",
+            "_host_rows", "_undo", "_floor", "_device_data", "_devices",
             "_inflight")
 class FeatureCache:
     """Top-K hot-row cache over any ``FeatureSource``.
@@ -305,12 +313,15 @@ class FeatureCache:
         self.track_hotness = False
         self._slot_hot = np.zeros(capacity, dtype=np.float32)
         self._node_hot: Optional[np.ndarray] = None
-        # per-version state: refresh is copy-on-write, so retaining the
-        # last keep_versions host buffers is reference-keeping, not
-        # copying — it lets a device that never placed a block before a
-        # refresh still materialize the (retained) version an in-flight
-        # lookup was classified against
-        self._host_by_version: Dict[int, np.ndarray] = {0: self._host_rows}
+        # version retention: an O(swapped_rows) undo log instead of full
+        # [K, F] blocks per version.  ``_undo[v]`` holds (victim slots,
+        # their version-v row values) — the delta that rebuilds the
+        # version-v host block from version v+1.  ``_floor`` is the
+        # lowest still-reconstructable version; a device that never
+        # placed a block before a refresh can still materialize any
+        # retained version an in-flight lookup was classified against.
+        self._undo: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+        self._floor = 0
         self._device_data: Dict[Tuple[int, int], jax.Array] = {}
         self._devices: Dict[int, Any] = {}   # id(device) -> device handle
         # in-flight lookup pins: version -> count of pinned lookups not
@@ -387,25 +398,33 @@ class FeatureCache:
 
     def data_on(self, device, version: Optional[int] = None) -> jax.Array:
         """The [K, F] hot block resident on ``device`` at ``version``
-        (default: current).  Blocks are placed lazily from the retained
-        per-version host buffers — a device that never placed a block
-        before a refresh can still materialize the (retained) version an
-        in-flight lookup was classified against.  Versions older than the
-        ``keep_versions`` retention window are gone for good: asking for
-        one is a consistency bug and raises instead of silently serving
+        (default: current).  Blocks are placed lazily: an old version's
+        host block is rebuilt by applying the O(swapped_rows) undo log
+        backwards from the current block — a device that never placed a
+        block before a refresh can still materialize any retained version
+        an in-flight lookup was classified against.  Versions older than
+        the retention floor are gone for good: asking for one is a
+        consistency bug and raises instead of silently serving
         mismatched rows."""
         with self._lock:
             ver = self.version if version is None else int(version)
             key = (id(device), ver)
             arr = self._device_data.get(key)
             if arr is None:
-                host = self._host_by_version.get(ver)
-                if host is None:
+                if ver < self._floor or ver > self.version:
                     raise RuntimeError(
                         f"cache version {ver} retired (current "
                         f"{self.version}, keep_versions="
                         f"{self.keep_versions}): a lookup outlived the "
                         f"refresh retention window — raise keep_versions")
+                host = self._host_rows
+                if ver < self.version:
+                    # walk the undo log backwards: each entry restores
+                    # the rows its version bump evicted
+                    host = host.copy()
+                    for v in range(self.version - 1, ver - 1, -1):
+                        slots, old_rows = self._undo[v]
+                        host[slots] = old_rows
                 # deliberate device dispatch under the lock: lazy
                 # placement is memoized, so this runs once per (device,
                 # version) — serializing it prevents two threads from
@@ -449,12 +468,7 @@ class FeatureCache:
         ``keep_versions`` retention window.
         """
         ids = np.asarray(ids, dtype=np.int64)
-        with self._lock:
-            slot_of = self.slot_of   # refresh swaps the reference, never
-            ver = self.version       # mutates the array in place
-            if pin:
-                self._pin_used = True
-                self._inflight[ver] = self._inflight.get(ver, 0) + 1
+        slot_of, ver = self.snapshot(pin=1 if pin else 0)
         if dedup:
             look = compact_lookup(ids, slot_of)
         else:
@@ -472,19 +486,41 @@ class FeatureCache:
             self.record_lookup(look)
         return look
 
+    def snapshot(self, pin: int = 0) -> Tuple[np.ndarray, int]:
+        """Atomically snapshot the (slot table, version) pair.  ``pin``
+        registers that many in-flight references at the snapshot version
+        (each owing one ``release_version``) — atomic with the snapshot,
+        so a concurrent commit can never land between the two.  The
+        sharded plane snapshots every shard once per union lookup and
+        pins one reference per trainer."""
+        with self._lock:
+            if pin:
+                self._pin_used = True
+                self._inflight[self.version] = \
+                    self._inflight.get(self.version, 0) + int(pin)
+            # refresh swaps the slot_of reference, never mutates the
+            # array in place, so the returned table is immutable
+            return self.slot_of, self.version
+
     def release_lookup(self, look: CacheLookup) -> None:
         """Release one ``lookup(pin=True)`` registration.
 
         When the last pin at a version drops and a newer version exists,
-        every full [K, F] block of versions below the minimum still-in-
-        flight one is retired immediately — the pipelined trainer holds
-        at most tfp_depth lookups in flight, so device memory returns to
-        one block per device as soon as the pipeline drains instead of
-        after ``keep_versions`` further refreshes.  Idempotence is the
-        caller's job (exactly one release per pinned lookup); releasing
-        an unpinned lookup is a no-op."""
+        every retained block/undo entry of versions below the minimum
+        still-in-flight one is retired immediately — the pipelined
+        trainer holds at most tfp_depth lookups in flight, so device
+        memory returns to one block per device as soon as the pipeline
+        drains instead of after ``keep_versions`` further refreshes.
+        Idempotence is the caller's job (exactly one release per pinned
+        lookup); releasing an unpinned lookup is a no-op."""
+        self.release_version(int(look.version))
+
+    def release_version(self, version: int) -> None:
+        """Release one pinned reference at ``version`` (the primitive
+        behind ``release_lookup``; the sharded plane releases per-shard
+        pins through it directly)."""
         with self._lock:
-            ver = int(look.version)
+            ver = int(version)
             n = self._inflight.get(ver)
             if n is None:
                 return
@@ -503,16 +539,27 @@ class FeatureCache:
             return
         floor = min(self._inflight) if self._inflight else self.version
         floor = min(floor, self.version)   # never retire the current block
-        for key in [k for k in self._device_data if k[1] < floor]:
+        if floor > self._floor:
+            self._floor = floor
+        for key in [k for k in self._device_data if k[1] < self._floor]:
             del self._device_data[key]
-        for v in [v for v in self._host_by_version if v < floor]:
-            del self._host_by_version[v]
+        for v in [v for v in self._undo if v < self._floor]:
+            del self._undo[v]
 
     def retained_versions(self) -> list:
-        """Sorted cache versions with a retained host snapshot (the
-        current one always included) — observability for tests/health."""
+        """Sorted cache versions still reconstructable (the current one
+        always included) — observability for tests/health."""
         with self._lock:
-            return sorted(self._host_by_version)
+            return list(range(self._floor, self.version + 1))
+
+    def retained_bytes(self) -> int:
+        """Host bytes held by the version-retention undo log —
+        O(swapped_rows per retained version), NOT full [K, F] blocks.
+        The live current block is working state, not retention, and is
+        excluded."""
+        with self._lock:
+            return sum(slots.nbytes + rows.nbytes
+                       for slots, rows in self._undo.values())
 
     def record_lookup(self, look: CacheLookup) -> None:
         """Account one classified lookup: stats windows + hotness
@@ -543,6 +590,44 @@ class FeatureCache:
                     np.add.at(self._slot_hot, look.slots[hit],
                               np.float32(1.0))
                 np.add.at(self._node_hot, look.ids[~hit], np.float32(1.0))
+
+    def record_access(self, hit_slots: np.ndarray, hit_counts: np.ndarray,
+                      miss_ids: np.ndarray, miss_counts: np.ndarray,
+                      lookups: int = 1) -> None:
+        """Account a pre-aggregated, position-weighted access pattern.
+
+        The sharded plane classifies whole frontiers against their owner
+        shards and records each shard's share in one call: ``hit_slots``
+        / ``miss_ids`` are unique entries, ``*_counts`` carry how many
+        frontier positions referenced each — the same position-weighted
+        quantities ``record_lookup`` derives from a ``CacheLookup``, so
+        hit rates and hotness estimates stay comparable across modes."""
+        hit_rows = int(hit_counts.sum()) if hit_counts.size else 0
+        miss_rows = int(miss_counts.sum()) if miss_counts.size else 0
+        delta = CacheStats(
+            lookups=int(lookups), hit_rows=hit_rows, miss_rows=miss_rows,
+            unique_rows=int(hit_slots.shape[0] + miss_ids.shape[0]),
+            saved_bytes=hit_rows * self.row_bytes)
+        with self._lock:
+            self.stats.merge(delta)
+            self.epoch_stats.merge(delta)
+            if self.track_hotness:
+                if self._node_hot is None:
+                    self._node_hot = np.zeros(self.num_nodes,
+                                              dtype=np.float32)
+                if self.capacity and hit_slots.size:
+                    np.add.at(self._slot_hot, hit_slots,
+                              hit_counts.astype(np.float32))
+                if miss_ids.size:
+                    np.add.at(self._node_hot, miss_ids,
+                              miss_counts.astype(np.float32))
+
+    def stats_snapshot(self) -> Tuple[CacheStats, CacheStats]:
+        """(lifetime, epoch-window) stats copies, taken atomically —
+        aggregation across shards must not observe half-merged windows."""
+        with self._lock:
+            return (dataclasses.replace(self.stats),
+                    dataclasses.replace(self.epoch_stats))
 
     # -------------------------------------------------------------- refresh
 
@@ -710,13 +795,17 @@ class FeatureCache:
                 # device blocks that in-flight payloads still combine with
                 new_host = self._host_rows.copy()
                 new_host[cold] = rows
+                # O(swapped) undo entry: the evicted rows at their victim
+                # slots rebuild this (old) version from the new block
+                slots32 = cold.astype(np.int32)
+                self._undo[self.version] = (
+                    slots32, self._host_rows[cold].copy())
                 # estimates travel with their nodes
                 admit_est = self._node_hot[top].copy()
                 self._node_hot[evicted] = self._slot_hot[cold]
                 self._slot_hot[cold] = admit_est
                 self._node_hot[top] = 0.0
                 new_ver = self.version + 1
-                slots32 = cold.astype(np.int32)
                 # deliberate device dispatch under the lock: commit IS
                 # the designed cheap half — O(swapped rows) scatter DMAs
                 # that must be atomic with the table/version swap, or a
@@ -733,15 +822,16 @@ class FeatureCache:
                 self.slot_of = new_slot_of
                 self.cached_ids = new_cached
                 self._host_rows = new_host
-                self._host_by_version[new_ver] = new_host
                 self.version = new_ver
                 # retire snapshots no in-flight lookup can still reference
                 low = new_ver - max(int(self.keep_versions), 1) + 1
+                if low > self._floor:
+                    self._floor = low
                 for key in [key for key in self._device_data
-                            if key[1] < low]:
+                            if key[1] < self._floor]:
                     del self._device_data[key]
-                for v in [v for v in self._host_by_version if v < low]:
-                    del self._host_by_version[v]
+                for v in [v for v in self._undo if v < self._floor]:
+                    del self._undo[v]
                 # pins that leaked past the retention window (a batch
                 # dropped by a pipeline failure never reaches its
                 # release) can no longer be served anyway — age them out
@@ -788,3 +878,439 @@ def build_cache(dataset, fraction: float,
                         refresh_decay=refresh_decay,
                         max_refresh_frac=max_refresh_frac,
                         refresh_hysteresis=refresh_hysteresis)
+
+
+# ====================================================================
+# Sharded hot-feature plane: disjoint per-accelerator shards + the
+# union-gather classification (DistDGL/P3 partitioned feature server
+# collapsed into one node).
+# ====================================================================
+
+
+def _mix64(x: np.ndarray) -> np.ndarray:
+    """SplitMix64 finalizer: deterministic avalanching id hash so hash
+    placement spreads hub nodes uniformly across shards (consecutive ids
+    land on unrelated shards)."""
+    z = x.astype(np.uint64) + np.uint64(0x9E3779B97F4A7C15)
+    z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+    z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+    return z ^ (z >> np.uint64(31))
+
+
+class ShardPlacement:
+    """Disjoint, exhaustive node-id -> shard ownership.
+
+    ``hash``: SplitMix64-mixed id modulo ``n_shards`` — hubs spread
+    uniformly, so every shard caches a same-shaped slice of the hot set
+    (the default; best effective capacity at equal per-shard size).
+    ``degree``: contiguous hotness-rank ranges — shard 0 owns the
+    hottest ceil(N/n) nodes, shard 1 the next range, and so on
+    (locality-style placement; per-shard hit rates are skewed by
+    construction, trainers on high shards serve mostly peers).
+
+    Both are pure functions of (num_nodes, n_shards, policy, hotness):
+    every shard and every trainer derives the identical owner table."""
+
+    POLICIES = ("hash", "degree")
+
+    def __init__(self, num_nodes: int, n_shards: int,
+                 policy: str = "hash",
+                 hotness: Optional[np.ndarray] = None):
+        if policy not in self.POLICIES:
+            raise ValueError(f"unknown shard placement {policy!r} "
+                             f"(choose from {self.POLICIES})")
+        self.num_nodes = int(num_nodes)
+        self.n_shards = int(max(1, n_shards))
+        self.policy = policy
+        if policy == "hash":
+            ids = np.arange(self.num_nodes, dtype=np.uint64)
+            owner = (_mix64(ids) % np.uint64(self.n_shards)).astype(np.int32)
+        else:
+            if hotness is None:
+                raise ValueError("degree placement needs a hotness vector")
+            hotness = np.asarray(hotness, dtype=np.float64)
+            # stable order: equal-hotness ties deterministic across runs
+            rank = np.argsort(-hotness, kind="stable")
+            span = max(1, -(-self.num_nodes // self.n_shards))
+            owner = np.empty(self.num_nodes, dtype=np.int32)
+            owner[rank] = (np.arange(self.num_nodes) // span
+                           ).astype(np.int32)
+        self.owner = owner
+
+    def owner_of(self, ids: np.ndarray) -> np.ndarray:
+        """Owning shard ordinal per id (int32, vectorized)."""
+        return self.owner[np.asarray(ids, dtype=np.int64)]
+
+
+@dataclasses.dataclass
+class ShardLookup:
+    """One trainer's frontier classified against the sharded plane.
+
+    ``look`` is a ``CacheLookup`` against the trainer's LOCAL shard:
+    ``slots`` index the local [K_me, F] device block (-1 otherwise),
+    ``miss_index`` points into the combined transfer source
+    ``[peer rows (ring order) | fresh host rows]`` and ``miss_ids``
+    holds only the FRESH unique ids the host must gather.
+    ``peer_requests`` name the rows to pull over ICI from each peer
+    shard, pinned at that shard's classification version."""
+    look: CacheLookup
+    shard: int                    # the trainer's own shard ordinal
+    peer_requests: List[Tuple[int, np.ndarray, int]]
+    pinned: List[Tuple[int, int]]  # (shard, version) pins to release
+    peer_rows: int = 0            # unique rows pulled over ICI
+    peer_positions: int = 0       # frontier positions served by peers
+    local_positions: int = 0      # frontier positions served locally
+
+
+@dataclasses.dataclass
+class UnionLookup:
+    """All trainers' classifications for one pipeline batch, plus the
+    per-shard accounting payload deferred until the union gather
+    succeeds (mirrors the ``record=False`` protocol of ``lookup``)."""
+    per_trainer: Dict[str, ShardLookup]
+    record_payload: List[tuple]
+
+
+# the lock only covers the memoized merged slot table; the shards guard
+# their own state, and placement/row_bytes/shards are immutable after
+# construction.
+@guarded_by("_lock", "_merged_key", "_merged_table")
+class ShardedFeatureCache:
+    """Partitioned hot-feature plane: ``n_shards`` disjoint per-device
+    ``FeatureCache`` shards over one source, giving n× effective
+    capacity at the same per-device budget.
+
+    A frontier position resolves in priority order: local shard hit
+    (device-resident) → peer shard hit (one row hop over ICI via
+    ``repro.dist.collectives.exchange_peer_rows``) → host miss.  Host
+    misses are gathered once for the *union* of all trainers'
+    fresh-miss sets (``FeatureLoader.load_union``) and each row is
+    multicast only to the devices that need it.
+
+    Each shard keeps its own version/pin protocol; a union lookup
+    snapshots every shard once and pins one reference per trainer, so a
+    mid-pipeline refresh of any shard stays semantically invisible
+    exactly as in the replicated plane."""
+
+    def __init__(self, source: "FeatureSource | np.ndarray",
+                 hotness: np.ndarray, capacity_per_shard: int,
+                 n_shards: int, placement: str = "hash",
+                 transfer_dtype: str = "float32", **refresh_kw):
+        source = as_feature_source(source)
+        num_nodes, feat_dim = source.shape
+        hotness = np.asarray(hotness, dtype=np.float64)
+        if hotness.shape[0] != num_nodes:
+            raise ValueError("hotness must have one entry per node")
+        self.num_nodes = int(num_nodes)
+        self.feat_dim = int(feat_dim)
+        self.n_shards = int(max(1, n_shards))
+        self.transfer_dtype = transfer_dtype
+        self.row_bytes = wire_row_bytes(feat_dim, transfer_dtype)
+        self.placement = ShardPlacement(num_nodes, self.n_shards,
+                                        placement, hotness)
+        hmin = float(hotness.min()) if num_nodes else 0.0
+        self.shards: List[FeatureCache] = []
+        for d in range(self.n_shards):
+            owned = self.placement.owner == d
+            # shift owned hotness strictly positive and zero the rest:
+            # the shard's top-K pick can then never leak a non-owned id
+            # (disjointness by construction), capped at the owned count
+            h_d = np.where(owned, hotness - hmin + 1.0, 0.0)
+            cap_d = int(min(int(capacity_per_shard), int(owned.sum())))
+            self.shards.append(
+                FeatureCache(source, h_d, cap_d,
+                             transfer_dtype=transfer_dtype, **refresh_kw))
+        mass = sum(float(hotness[s.cached_ids].sum()) for s in self.shards)
+        self._expected_hit_rate = mass / max(float(hotness.sum()), 1e-12)
+        self._lock = threading.RLock()
+        self._merged_key: Optional[tuple] = None
+        self._merged_table: Optional[np.ndarray] = None
+
+    # ------------------------------------------------------------ plumbing
+
+    @property
+    def capacity(self) -> int:
+        """Total resident rows across shards (the n× effective capacity)."""
+        return sum(s.capacity for s in self.shards)
+
+    @property
+    def nbytes(self) -> int:
+        """Device bytes pinned across ALL shards (one shard per device;
+        the per-device budget is a single shard's block)."""
+        return sum(s.nbytes for s in self.shards)
+
+    @property
+    def expected_hit_rate(self) -> float:
+        """Hotness mass covered by the UNION of the shards — the plane's
+        design-time (local + peer) hit estimate for Eq. 7/8."""
+        return self._expected_hit_rate
+
+    @property
+    def version(self) -> int:
+        """Monotone aggregate version (sum of shard versions): bumps
+        whenever any shard refreshes, for drift/metrics consumers."""
+        return sum(s.snapshot()[1] for s in self.shards)
+
+    @property
+    def slot_of(self) -> np.ndarray:
+        """Merged id -> slot table (slot within the OWNER shard's block;
+        >= 0 means resident somewhere in the plane).  Consumers — the
+        prefetch submit filter, the dup-factor probe — only ask "cached
+        anywhere?"; memoized per shard-version vector."""
+        snaps = [s.snapshot() for s in self.shards]
+        key = tuple(v for _, v in snaps)
+        with self._lock:
+            if key == self._merged_key and self._merged_table is not None:
+                return self._merged_table
+        merged = np.full(self.num_nodes, -1, dtype=np.int32)
+        for table, _ in snaps:
+            resident = table >= 0
+            # shards own disjoint id sets: blind scatter cannot collide
+            merged[resident] = table[resident]
+        with self._lock:
+            self._merged_key, self._merged_table = key, merged
+            return self._merged_table
+
+    # config knobs forwarded to every shard ------------------------------
+
+    @property
+    def keep_versions(self) -> int:
+        return self.shards[0].keep_versions
+
+    @keep_versions.setter
+    def keep_versions(self, value: int) -> None:
+        for s in self.shards:
+            s.keep_versions = value
+
+    @property
+    def track_hotness(self) -> bool:
+        return self.shards[0].track_hotness
+
+    @track_hotness.setter
+    def track_hotness(self, value: bool) -> None:
+        for s in self.shards:
+            s.track_hotness = value
+
+    @property
+    def use_pallas_update(self) -> bool:
+        return self.shards[0].use_pallas_update
+
+    @use_pallas_update.setter
+    def use_pallas_update(self, value: bool) -> None:
+        for s in self.shards:
+            s.use_pallas_update = value
+
+    @property
+    def kernel_pipeline_depth(self) -> int:
+        return self.shards[0].kernel_pipeline_depth
+
+    @kernel_pipeline_depth.setter
+    def kernel_pipeline_depth(self, value: int) -> None:
+        for s in self.shards:
+            s.kernel_pipeline_depth = value
+
+    @property
+    def fault_injector(self):
+        return self.shards[0].fault_injector
+
+    @fault_injector.setter
+    def fault_injector(self, value) -> None:
+        for s in self.shards:
+            s.fault_injector = value
+
+    # aggregated health/observability ------------------------------------
+
+    @property
+    def stage_failures(self) -> int:
+        return sum(s.stage_failures for s in self.shards)
+
+    @property
+    def refreshes(self) -> int:
+        return sum(s.refreshes for s in self.shards)
+
+    @property
+    def refresh_swapped_rows(self) -> int:
+        return sum(s.refresh_swapped_rows for s in self.shards)
+
+    @property
+    def staged_ready(self) -> bool:
+        return any(s.staged_ready for s in self.shards)
+
+    def measured_hit_rate(self) -> float:
+        """Aggregate positional (local + peer) hit rate over the shards'
+        current epoch windows, falling back to lifetime totals — the
+        same feedback quantity the replicated cache reports."""
+        epoch_hit = epoch_tot = life_hit = life_tot = 0
+        for s in self.shards:
+            life, epoch = s.stats_snapshot()
+            epoch_hit += epoch.hit_rows
+            epoch_tot += epoch.total_rows
+            life_hit += life.hit_rows
+            life_tot += life.total_rows
+        if epoch_tot:
+            return epoch_hit / epoch_tot
+        return life_hit / max(life_tot, 1)
+
+    def retained_versions(self) -> Dict[int, list]:
+        """Per-shard retained-version ranges (observability)."""
+        return {d: s.retained_versions()
+                for d, s in enumerate(self.shards)}
+
+    def retained_bytes(self) -> int:
+        """Undo-log retention bytes summed across shards."""
+        return sum(s.retained_bytes() for s in self.shards)
+
+    # ------------------------------------------------------ union lookup
+
+    def lookup_union(self, frontiers: Dict[str, np.ndarray],
+                     ordinals: Dict[str, int], pin: bool = False,
+                     record: bool = True) -> UnionLookup:
+        """Classify every trainer's frontier against the plane in one
+        pass: local-shard hits, peer-shard hits (grouped per owner in
+        ring order from each trainer's ordinal) and fresh host misses.
+
+        Every shard is snapshotted once (atomically per shard) and, with
+        ``pin=True``, pinned once per trainer — the trainer releases all
+        of a batch's pins via ``release_union`` after its combine.  With
+        ``record=False`` the per-shard stats/hotness accounting is
+        returned in the payload and applied later by ``record_union``
+        (the loader defers it past the union gather, mirroring the
+        replicated ``record=False`` protocol)."""
+        from repro.dist.collectives import ring_order
+        npin = len(frontiers) if pin else 0
+        snaps = [s.snapshot(pin=npin) for s in self.shards]
+        tables = [t for t, _ in snaps]
+        vers = [v for _, v in snaps]
+        owner_all = self.placement.owner
+        acc = [{"hs": [], "hc": [], "mi": [], "mc": [], "lk": 0}
+               for _ in range(self.n_shards)]
+        per: Dict[str, ShardLookup] = {}
+        for name in sorted(frontiers):
+            me = int(ordinals[name])
+            ids = np.asarray(frontiers[name], dtype=np.int64)
+            uniq, inverse = np.unique(ids, return_inverse=True)
+            inverse = inverse.astype(np.int32)
+            counts = np.bincount(inverse, minlength=uniq.shape[0])
+            owner = owner_all[uniq]
+            uslots = np.full(uniq.shape[0], -1, dtype=np.int32)
+            for d in range(self.n_shards):
+                sel = owner == d
+                if sel.any():
+                    uslots[sel] = tables[d][uniq[sel]]
+            hit = uslots >= 0
+            # combined transfer-source index per unique: peer rows first
+            # (ring order from me, each group in sorted-id order), then
+            # the fresh host-gathered rows — deterministic layout shared
+            # with the transfer stage's source concatenation
+            u_midx = np.zeros(uniq.shape[0], dtype=np.int32)
+            base = 0
+            peer_requests: List[Tuple[int, np.ndarray, int]] = []
+            peer_rows = peer_pos = 0
+            for p in ring_order(self.n_shards, me):
+                sel = hit & (owner == p)
+                k = int(np.count_nonzero(sel))
+                if k:
+                    u_midx[sel] = base + np.arange(k, dtype=np.int32)
+                    peer_requests.append(
+                        (p, uslots[sel].astype(np.int32), vers[p]))
+                    peer_rows += k
+                    peer_pos += int(counts[sel].sum())
+                    base += k
+            fresh = ~hit
+            n_fresh = int(np.count_nonzero(fresh))
+            if n_fresh:
+                u_midx[fresh] = base + np.arange(n_fresh, dtype=np.int32)
+            local_sel = hit & (owner == me)
+            slots_u = np.where(local_sel, uslots,
+                               np.int32(-1)).astype(np.int32)
+            look = CacheLookup(
+                ids=ids, slots=slots_u[inverse],
+                miss_index=u_midx[inverse], miss_ids=uniq[fresh],
+                unique_ids=uniq, inverse=inverse, version=vers[me])
+            per[name] = ShardLookup(
+                look=look, shard=me, peer_requests=peer_requests,
+                pinned=([(d, vers[d]) for d in range(self.n_shards)]
+                        if pin else []),
+                peer_rows=peer_rows, peer_positions=peer_pos,
+                local_positions=int(counts[local_sel].sum()))
+            # hotness/stats land on the OWNER shard (position-weighted):
+            # refresh admission then only ever considers owned ids, so
+            # shard disjointness survives every refresh
+            for d in range(self.n_shards):
+                seld = owner == d
+                h = seld & hit
+                m = seld & fresh
+                a = acc[d]
+                a["lk"] += 1
+                if h.any():
+                    a["hs"].append(uslots[h])
+                    a["hc"].append(counts[h])
+                if m.any():
+                    a["mi"].append(uniq[m])
+                    a["mc"].append(counts[m])
+        payload = []
+        for d, a in enumerate(acc):
+            payload.append((
+                d,
+                np.concatenate(a["hs"]) if a["hs"] else
+                np.zeros(0, dtype=np.int32),
+                np.concatenate(a["hc"]) if a["hc"] else
+                np.zeros(0, dtype=np.int64),
+                np.concatenate(a["mi"]) if a["mi"] else
+                np.zeros(0, dtype=np.int64),
+                np.concatenate(a["mc"]) if a["mc"] else
+                np.zeros(0, dtype=np.int64),
+                a["lk"]))
+        union = UnionLookup(per_trainer=per, record_payload=payload)
+        if record:
+            self.record_union(union)
+        return union
+
+    def record_union(self, union: UnionLookup) -> None:
+        """Apply a deferred union lookup's per-shard accounting."""
+        for d, hs, hc, mi, mc, lk in union.record_payload:
+            self.shards[d].record_access(hs, hc, mi, mc, lookups=lk)
+        union.record_payload = []
+
+    def release_union(self, shard_look: ShardLookup) -> None:
+        """Release one trainer's per-shard pins for one batch."""
+        for d, ver in shard_look.pinned:
+            self.shards[d].release_version(ver)
+        shard_look.pinned = []
+
+    # ------------------------------------------------------------ refresh
+
+    def stage(self, max_swap: Optional[int] = None) -> int:
+        return sum(s.stage(max_swap) for s in self.shards)
+
+    def commit(self) -> int:
+        return sum(s.commit() for s in self.shards)
+
+    def discard_staged(self) -> int:
+        return sum(s.discard_staged() for s in self.shards)
+
+    def refresh(self, max_swap: Optional[int] = None) -> int:
+        self.stage(max_swap)
+        return self.commit()
+
+
+def build_sharded_cache(dataset, fraction: float, n_shards: int,
+                        placement: str = "hash",
+                        transfer_dtype: str = "float32",
+                        refresh_decay: float = 0.5,
+                        max_refresh_frac: float = 0.25,
+                        refresh_hysteresis: float = 1.25
+                        ) -> Optional[ShardedFeatureCache]:
+    """Sharded plane at the SAME per-device budget as ``build_cache``:
+    ``fraction`` of the dataset's nodes *per shard*, so n shards hold up
+    to n× the replicated row count (None when the budget rounds to 0)."""
+    if fraction <= 0.0 or n_shards < 1:
+        return None
+    capacity = int(round(dataset.num_nodes * min(fraction, 1.0)))
+    if capacity == 0:
+        return None
+    return ShardedFeatureCache(
+        dataset.feature_source, dataset.feature_hotness(), capacity,
+        n_shards, placement=placement, transfer_dtype=transfer_dtype,
+        refresh_decay=refresh_decay, max_refresh_frac=max_refresh_frac,
+        refresh_hysteresis=refresh_hysteresis)

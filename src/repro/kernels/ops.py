@@ -28,7 +28,9 @@ from .gather_scatter_mm import (cache_combine_kernel_call,
                                 segment_sum_kernel_call)
 
 __all__ = ["segment_weighted_sum_regular", "fused_gnn_update",
-           "flash_attention", "assemble_features", "update_cache_rows"]
+           "flash_attention", "assemble_features",
+           "assemble_features_sharded", "gather_rows",
+           "update_cache_rows"]
 
 _INTERPRET = jax.default_backend() != "tpu"
 
@@ -81,6 +83,58 @@ def assemble_features(cache: Optional[jax.Array], miss: jax.Array,
     return _assemble_tiled(cache, miss, np.asarray(slots),
                            np.asarray(miss_index),
                            depth=int(pipeline_depth))
+
+
+def gather_rows(block: jax.Array, slots, use_pallas: bool = False,
+                pipeline_depth: int = 1) -> jax.Array:
+    """Gather ``slots`` rows out of a device-resident [K, F] block —
+    the peer-serve half of the sharded plane's row exchange (the owner
+    shard reads the requested rows before the ICI hop).
+
+    The jnp path is one XLA take.  ``use_pallas`` reuses the tiled
+    combine machinery as a pure gather: every requested row is a "cache
+    hit" of the block, the miss source is empty, so the sort-by-rank
+    schedule, 4W VMEM window and multi-buffered DMA pipeline all apply
+    unchanged (bit-identical across paths and depths).
+    """
+    slots = np.asarray(slots, dtype=np.int32)
+    if not use_pallas or slots.shape[0] == 0:
+        return _gather_ref(block, jnp.asarray(slots))
+    miss_index = np.zeros(slots.shape[0], dtype=np.int32)
+    return _assemble_tiled(block,
+                           jnp.zeros((1, block.shape[1]), block.dtype),
+                           slots, miss_index, depth=int(pipeline_depth))
+
+
+@jax.jit
+def _gather_ref(block: jax.Array, slots: jax.Array) -> jax.Array:
+    return jnp.take(block, slots, axis=0)
+
+
+def assemble_features_sharded(cache: Optional[jax.Array], sources,
+                              slots, miss_index, use_pallas: bool = False,
+                              pipeline_depth: int = 1) -> jax.Array:
+    """Shard-aware assemble: like ``assemble_features`` but the miss
+    source arrives as an ordered list of device-resident row blocks —
+    the peer-fetched segments (ring order) followed by the fresh
+    host-shipped rows.  They are concatenated on device into the one
+    combined source the union lookup's ``miss_index`` addresses, then
+    dispatched through the same combine machinery; ``cache`` is the
+    trainer's LOCAL shard block."""
+    sources = [s for s in sources if int(s.shape[0])]
+    if not sources:
+        miss = None
+    elif len(sources) == 1:
+        miss = sources[0]
+    else:
+        miss = jnp.concatenate(sources, axis=0)
+    if miss is None:
+        f = cache.shape[1] if cache is not None else 1
+        dtype = cache.dtype if cache is not None else jnp.float32
+        miss = jnp.zeros((1, f), dtype)
+    return assemble_features(cache, miss, slots, miss_index,
+                             use_pallas=use_pallas,
+                             pipeline_depth=pipeline_depth)
 
 
 @jax.jit

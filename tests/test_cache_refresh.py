@@ -772,3 +772,46 @@ def test_measured_hit_rate_blocks_on_inflight_merge():
     reader.join(5.0)
     assert not reader.is_alive()
     assert 0.0 <= got[0] <= 1.0
+
+
+# -------------------------------------------- undo-log version retention
+
+
+def test_retention_is_undo_log_bounded():
+    """Satellite bugfix: old versions are retained as O(swapped_rows)
+    undo entries, not full [K, F] host blocks.  The retained footprint
+    must be bounded by the total rows actually swapped and stay strictly
+    below even ONE full block per retained old version."""
+    src, cache = _cache(capacity=40)
+    cache.keep_versions = 8
+    total_swapped = 0
+    for r in range(4):
+        for _ in range(4):
+            cache.lookup(np.repeat(np.arange(100 + 40 * r, 140 + 40 * r), 5))
+        total_swapped += cache.refresh(max_swap=6)
+    assert cache.version == 4 and total_swapped > 0
+    row_undo = F * src.take(np.arange(1)).dtype.itemsize + np.dtype(
+        np.int32).itemsize
+    assert cache.retained_bytes() <= total_swapped * row_undo
+    n_old = len(cache.retained_versions()) - 1
+    full_blocks = n_old * cache.capacity * F * 4
+    assert cache.retained_bytes() < full_blocks
+
+
+def test_undo_log_reconstructs_multi_version_chain():
+    """Every retained old version must rebuild exactly (walking the undo
+    chain back from the current table), even several refreshes later and
+    on a device that never placed that version."""
+    src, cache = _cache(capacity=40)
+    cache.keep_versions = 8
+    dev = jax.devices()[0]
+    tables = {0: cache.cached_ids.copy()}
+    for r in range(3):
+        for _ in range(4):
+            cache.lookup(np.repeat(np.arange(120 + 30 * r, 160 + 30 * r), 5))
+        assert cache.refresh(max_swap=8) > 0
+        tables[cache.version] = cache.cached_ids.copy()
+    for ver, ids in tables.items():
+        block = np.asarray(cache.data_on(dev, version=ver))
+        assert np.array_equal(block, cache._cast_rows(src.take(ids))), \
+            f"version {ver} must rebuild bit-exactly from the undo log"

@@ -114,3 +114,40 @@ def test_drm_converges_on_synthetic_imbalance():
                        t_ta=1.0 * a.accel_batch)
         a = engine.step(t)
     assert abs(a.cpu_batch - a.accel_batch) < 0.2 * a.total_batch
+
+
+def test_stall_excluded_from_balancing_signal():
+    """Regression: the balancing signal must subtract t_load_stall.
+
+    A loader whose wall time is dominated by storage-I/O stall (cold mmap
+    faults) is not compute-bound: rebalancing threads or rows cannot
+    shrink the stall (the prefetcher exists for that).  Folding the stall
+    in made the loader look like the system bottleneck and stole a thread
+    from the real pipeline.  The stall-bound system must take the same
+    action as its stall-free twin (identical compute profile)."""
+    stalled = StageTimes(t_sa=0.0, t_sc=0.10, t_load=0.50, t_load_stall=0.48,
+                         t_tran=0.20, t_tc=0.05, t_ta=0.30)
+    clean = StageTimes(t_sa=0.0, t_sc=0.10, t_load=0.02,
+                       t_tran=0.20, t_tc=0.05, t_ta=0.30)
+    e1, e2 = DRMEngine(_mk()), DRMEngine(_mk())
+    a1, a2 = e1.step(stalled), e2.step(clean)
+    assert e1.log[-1][1] == e2.log[-1][1], \
+        "stall-bound and stall-free twins must take the same action"
+    # the effective bottleneck is t_accel -> rows move accel->cpu, and the
+    # loader is NOT granted a thread at the trainers' expense
+    assert a1.threads == {"sample": 2, "load": 2, "train": 2}
+    assert a1.cpu_batch > 256 and a1.accel_batch < 256
+    assert (a1.cpu_batch, a1.accel_batch) == (a2.cpu_batch, a2.accel_batch)
+
+
+def test_stall_exceeding_wall_time_clamps():
+    """Pool-thread-summed stall can exceed the wall-clock t_load: the
+    effective load signal clamps at 0 (inactive) instead of going
+    negative and ranking the loader 'fastest CPU task'."""
+    t = StageTimes(t_sa=0.0, t_sc=0.30, t_load=0.20, t_load_stall=0.55,
+                   t_tran=0.32, t_tc=0.40, t_ta=0.35)
+    a = DRMEngine(_mk()).step(t)
+    # bottleneck is t_tc; fastest CPU task must be sample-or-load by
+    # *compute* time — with the clamp, load (0.0) donates the thread
+    assert a.threads["train"] == 3
+    assert a.threads["load"] == 1
