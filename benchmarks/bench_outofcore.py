@@ -298,9 +298,11 @@ def run_prefetch_smoke() -> dict:
     """Tier-1 gate (~60 s): the prefetch on/off disk-tier sweep at test
     scale — prefetch-on load-stage stall strictly below prefetch-off,
     page-cache residency bounded by the window LRU, and the 4-config
-    {prefetch, async_refresh} trainer matrix bit-identical."""
+    {prefetch, async_refresh} trainer matrix bit-identical.  Writes
+    BENCH_prefetch.json (smoke is the only mode CI runs, so the smoke
+    run must produce the artifact gen_roofline_md.py renders)."""
     res = run_prefetch(scale=1e-3, iters=6, batch=128, e2e_iters=3,
-                       partition_rows=2048, lru_windows=4, out_path="")
+                       partition_rows=2048, lru_windows=4)
     _prefetch_asserts(res)
     return res
 
@@ -344,7 +346,9 @@ def _asserts(res: dict, resident_frac_max: float) -> None:
 def run_smoke() -> dict:
     """Tier-1 gate (~60 s): small-scale papers100M in a temp dir (cleaned
     on exit) — dense/mmap gather parity, the one-partition spill bound, a
-    bounded gather working set, and e2e loss bit-identity."""
+    bounded gather working set, and e2e loss bit-identity.  Writes
+    BENCH_outofcore.json (smoke is the only mode CI runs, so the smoke
+    run must produce the artifact gen_roofline_md.py renders)."""
     with tempfile.TemporaryDirectory(prefix="outofcore-smoke-") as td:
         # explicit byte-parity gate on one dataset instance
         ds_d = make_dataset(DATASET, scale=1e-3, seed=0,
@@ -359,7 +363,7 @@ def run_smoke() -> dict:
         assert a.tobytes() == b.tobytes(), "mmap gather != dense gather"
         emit("outofcore,smoke_parity", 0.0, f"rows={rows.shape[0]} OK")
     res = run(scale=1e-3, iters=4, batch=128, e2e_iters=3,
-              partition_rows=4096, out_path="")
+              partition_rows=4096)
     _asserts(res, resident_frac_max=0.7)
     return res
 

@@ -96,11 +96,34 @@ def overlap_table(res, title):
 def main():
     parts = []
     for path in sys.argv[1:]:
-        with open(path) as f:
-            results = json.load(f)
+        # a bench artifact may legitimately be absent (its bench has not
+        # run on this checkout yet): skip with a visible note instead of
+        # failing the whole render
+        try:
+            with open(path) as f:
+                results = json.load(f)
+        except FileNotFoundError:
+            parts.append(f"### {path}\n\n_Skipped: {path} not found — "
+                         f"run its benchmark to regenerate._\n")
+            continue
+        except json.JSONDecodeError as e:
+            parts.append(f"### {path}\n\n_Skipped: {path} is not valid "
+                         f"JSON ({e})._\n")
+            continue
         if isinstance(results, dict) and "combine" in results:
             parts.append(overlap_table(results,
                                        f"Kernel overlap — {path}"))
+            continue
+        if not (isinstance(results, list) and results
+                and "mesh" in results[0]):
+            # some other bench's artifact (out-of-core, prefetch,
+            # autotune, ...): note what it is rather than crash on an
+            # unexpected shape
+            keys = (sorted(results)[:8] if isinstance(results, dict)
+                    else [type(results).__name__])
+            parts.append(f"### {path}\n\n_Skipped: no roofline/overlap "
+                         f"tables in this artifact (top-level: "
+                         f"{', '.join(map(str, keys))})._\n")
             continue
         mesh = "x".join(str(m) for m in results[0]["mesh"])
         parts.append(table(results, f"mesh {mesh} ({results[0]['chips']} "

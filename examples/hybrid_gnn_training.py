@@ -116,6 +116,21 @@ def main():
                          "boundary only pays the cheap table/device-block "
                          "commit (losses stay bit-identical — versioned "
                          "lookups)")
+    ap.add_argument("--auto-tune", action="store_true",
+                    help="model-predictive knob auto-tuning: the DRM "
+                         "proposes bounded moves in prefetch depth, "
+                         "window LRU, stage threads and refresh "
+                         "cadence/fraction from the calibrated Eq. 7/8 "
+                         "model, verifying each against measured "
+                         "iteration time and rolling back regressions "
+                         "(losses stay bit-identical — knobs never touch "
+                         "RNG streams or batch composition)")
+    ap.add_argument("--autotune-interval", type=int, default=3,
+                    help="iterations per autotuner measurement window")
+    ap.add_argument("--cache-refresh-period", type=int, default=1,
+                    help="iteration boundaries between cache drift "
+                         "checks (the refresh-cadence knob; 1 = every "
+                         "boundary)")
     ap.add_argument("--inject-failure", type=int, default=0,
                     help="kill accel0 at this iteration (0 = off)")
     ap.add_argument("--fault-schedule", default=None,
@@ -166,6 +181,9 @@ def main():
                         kernel_pipeline_depth=args.kernel_pipeline_depth,
                         mmap_lru_windows=args.mmap_lru_windows,
                         pipeline_watchdog_seconds=args.pipeline_watchdog,
+                        auto_tune=args.auto_tune,
+                        autotune_interval=args.autotune_interval,
+                        cache_refresh_period=args.cache_refresh_period,
                         ckpt_every=50 if args.ckpt_dir else 0)
     injector = None
     if args.fault_schedule:
@@ -228,6 +246,21 @@ def main():
             print(f"prefetch dedup: "
                   f"{io['resubmitted_rows_skipped']:.0f} already-warm rows "
                   f"stripped from resubmits")
+    if args.auto_tune:
+        rep = tr.autotune_report()
+        k = rep["knobs"]
+        print(f"autotune: {rep['trials']} trials, {rep['accepted']} "
+              f"accepted, {rep['rollbacks']} rolled back -> prefetch "
+              f"{k['prefetch_windows']}, lru {k['mmap_lru_windows']}, "
+              f"threads {k['sample_threads']}/{k['load_threads']}/"
+              f"{k['train_threads']}, refresh 1/{k['refresh_period']} "
+              f"@ {k['refresh_frac']:.2f}")
+        for mv in rep.get("moves", []):
+            print(f"  + {mv['move']}: predicted "
+                  f"{mv['baseline_predicted']*1e3:.2f} -> "
+                  f"{mv['predicted']*1e3:.2f} ms, measured "
+                  f"{mv['baseline_wall']*1e3:.2f} -> "
+                  f"{mv['measured_wall']*1e3:.2f} ms")
     if tr._failed:
         print(f"survived failures: {sorted(tr._failed)}")
     h = tr.health()

@@ -27,6 +27,12 @@
 #    n_accel=4 cell must clear the >= 1.5x shipped-byte reduction, and
 #    sharded/replicated losses must be bit-identical,
 #
+#  * autotune (~90 s): closed-DRM-loop gate — a knob-misconfigured run
+#    (no prefetch, one-window LRU, skewed stage threads) with the
+#    model-predictive knob autotuner ON must converge to within 15% of
+#    the hand-tuned steady-state iteration time, with losses
+#    bit-identical to the static-knob twin and >= 1 accepted move,
+#
 #  * chaos suite (~30 s, hard 300 s timeout): deterministic fault
 #    injection against the whole trainer — transient storage faults with
 #    bit-identical losses, prefetcher death with graceful degradation,
@@ -58,4 +64,5 @@ python -m benchmarks.bench_outofcore --smoke
 python -m benchmarks.bench_outofcore --smoke-prefetch
 python -m benchmarks.bench_kernel_overlap --smoke
 python -m benchmarks.bench_shard --smoke
+python -m benchmarks.bench_autotune --smoke
 echo "tier1: OK"

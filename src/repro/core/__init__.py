@@ -1,9 +1,11 @@
 # The paper's primary contribution: the hybrid training system —
 # protocol, two-stage feature prefetching, DRM, performance model, and the
 # hybrid (CPU + accelerators) trainer orchestration.
-from .drm import Assignment, DRMEngine, StageTimes
-from .perfmodel import (PLATFORMS, PlatformSpec, StagePrediction,
-                        WorkloadSpec, calibrate_sampling,
+from .drm import (Assignment, DRMEngine, KnobAutoTuner, KnobProposal,
+                  StageTimes, knob_neighbors)
+from .perfmodel import (PLATFORMS, CalibratedKnobModel, KnobBounds,
+                        KnobState, PlatformSpec, SignalSnapshot,
+                        StagePrediction, WorkloadSpec, calibrate_sampling,
                         initial_task_mapping, mteps, predict,
                         predict_epoch_time)
 from .pipeline import (PipelineItem, PipelineStallError, PrefetchPipeline,
@@ -12,7 +14,9 @@ from .protocol import Runtime, Synchronizer, TrainerHandle
 from .hybrid import HybridConfig, HybridGNNTrainer, IterationMetrics
 
 __all__ = [
-    "Assignment", "DRMEngine", "StageTimes",
+    "Assignment", "DRMEngine", "KnobAutoTuner", "KnobProposal",
+    "StageTimes", "knob_neighbors",
+    "CalibratedKnobModel", "KnobBounds", "KnobState", "SignalSnapshot",
     "PLATFORMS", "PlatformSpec", "StagePrediction", "WorkloadSpec",
     "calibrate_sampling", "initial_task_mapping", "mteps", "predict",
     "predict_epoch_time",

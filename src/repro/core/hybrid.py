@@ -127,8 +127,9 @@ from repro.optim import (CompressionSpec, adamw, compress_grads,
                          decompress_grads)
 from repro.optim.optimizers import apply_updates
 
-from .drm import Assignment, StageTimes
-from .perfmodel import PLATFORMS, initial_task_mapping
+from .drm import Assignment, KnobAutoTuner, StageTimes
+from .perfmodel import (PLATFORMS, CalibratedKnobModel, KnobBounds,
+                        KnobState, SignalSnapshot, initial_task_mapping)
 from .pipeline import PipelineItem, PrefetchPipeline, Stage
 from .protocol import Runtime, Synchronizer, TrainerHandle
 
@@ -217,6 +218,33 @@ class HybridConfig:
                                       #   stage busy on one item past this
                                       #   deadline raises PipelineStallError
                                       #   instead of hanging (0 = off)
+    cache_refresh_period: int = 1     # iteration boundaries between drift
+                                      #   checks (refresh cadence; 1 = every
+                                      #   boundary, the legacy behaviour)
+    auto_tune: bool = False           # model-predictive knob search: the
+                                      #   DRM proposes bounded moves in the
+                                      #   performance knobs (prefetch queue,
+                                      #   window LRU, stage threads, refresh
+                                      #   cadence/fraction) from the
+                                      #   calibrated Eq. 7/8 model, applies
+                                      #   them through the re-price/refresh
+                                      #   machinery and rolls back measured
+                                      #   regressions.  Never touches RNG
+                                      #   streams, batch composition or
+                                      #   workload shares: losses stay
+                                      #   bit-identical to a static-knob run
+    autotune_interval: int = 3        # iterations per measurement window
+    autotune_hysteresis: float = 0.10 # measured regression (relative) that
+                                      #   rolls a trial move back
+    autotune_min_gain: float = 0.02   # predicted gain required to try a move
+    autotune_warmup_windows: int = 1  # windows observed before the first
+                                      #   proposal (JIT warmup pollutes the
+                                      #   earliest measurements)
+    initial_threads: Optional[Tuple[int, int, int]] = None
+                                      # (sample, load, train) stage-thread
+                                      #   start point; None = (2, 2, 2).
+                                      #   Benchmarks use this to start the
+                                      #   autotuner from a skewed layout
     lr: float = 1e-3
     share_quantum: int = 64
     drm_damping: float = 0.25
@@ -319,14 +347,8 @@ class HybridGNNTrainer:
             src.lru_windows = int(cfg.mmap_lru_windows)
         if fault_injector is not None and hasattr(src, "fault_injector"):
             src.fault_injector = fault_injector
-        self.prefetcher: Optional[WindowPrefetcher] = None
-        if cfg.prefetch_windows > 0 and hasattr(src, "prefetch_rows"):
-            self.prefetcher = WindowPrefetcher(
-                src, max_queue=cfg.prefetch_windows,
-                dedup_history=cfg.prefetch_dedup_history,
-                restart_budget=cfg.prefetch_restart_budget,
-                raise_on_failure=not cfg.degrade_on_failure,
-                fault_injector=fault_injector)
+        self.prefetcher: Optional[WindowPrefetcher] = \
+            self._build_prefetcher(cfg.prefetch_windows)
 
         # --- feature store: device hot cache + dedup/miss-only loader --------
         # "sharded" partitions the hot set across the accelerators
@@ -419,14 +441,62 @@ class HybridGNNTrainer:
         else:
             mapping = {"cpu": 0,
                        "accel_each": cfg.total_batch // max(cfg.n_accel, 1)}
+        thr = cfg.initial_threads or (2, 2, 2)
         assignment = Assignment(
             cpu_batch=mapping["cpu"], accel_batch=mapping["accel_each"],
             n_accel=cfg.n_accel, sample_frac_accel=0.5 if self._dev_topology
             else 0.0,
-            threads={"sample": 2, "load": 2, "train": 2})
+            threads={"sample": int(thr[0]), "load": int(thr[1]),
+                     "train": int(thr[2])})
         self.runtime = Runtime(assignment, use_drm=cfg.use_drm,
                                damping=cfg.drm_damping,
                                share_quantum=cfg.share_quantum)
+
+        # --- model-predictive knob auto-tuning (closes the DRM loop) ---------
+        # refresh cadence / admission bookkeeping exists with or without
+        # the autotuner: Eq. 7/8 carry the admission term whenever the
+        # dynamic cache runs
+        self._refresh_period = max(1, int(cfg.cache_refresh_period))
+        self._iters_done = 0
+        self._iters_since_refresh = 0
+        self._refresh_bytes_per_iter = 0.0
+        self._hit_decay_per_iter = 0.0
+        self._last_load_stats = self.loader.snapshot_stats()
+        self._last_windows_touched = int(
+            getattr(src, "gather_windows_touched", 0))
+        self.autotuner: Optional[KnobAutoTuner] = None
+        self._knobs = KnobState(
+            prefetch_windows=(cfg.prefetch_windows
+                              if self.prefetcher is not None else 0),
+            mmap_lru_windows=int(getattr(src, "lru_windows", 0)),
+            sample_threads=int(thr[0]), load_threads=int(thr[1]),
+            train_threads=int(thr[2]),
+            refresh_period=self._refresh_period,
+            refresh_frac=float(cfg.cache_refresh_frac))
+        if cfg.auto_tune:
+            can_prefetch = hasattr(src, "prefetch_rows")
+            can_lru = hasattr(src, "lru_windows")
+            lru0 = self._knobs.mmap_lru_windows
+            refresh_on = cfg.cache_refresh and self.cache is not None
+            bounds = KnobBounds(
+                prefetch_windows=(0, 64) if can_prefetch else (0, 0),
+                # lru == 0 means unbounded: the search may bound it, but
+                # never below one window
+                mmap_lru_windows=(1, 4096) if can_lru else (lru0, lru0),
+                min_stage_threads=1,
+                total_threads=self._knobs.total_threads,
+                refresh_period=((1, 16) if refresh_on
+                                else (self._refresh_period,
+                                      self._refresh_period)),
+                refresh_frac=((0.05, 0.5) if refresh_on
+                              else (self._knobs.refresh_frac,
+                                    self._knobs.refresh_frac)))
+            self.autotuner = KnobAutoTuner(
+                self.runtime.drm, bounds,
+                interval=cfg.autotune_interval,
+                hysteresis=cfg.autotune_hysteresis,
+                min_gain=cfg.autotune_min_gain,
+                warmup_windows=cfg.autotune_warmup_windows)
 
         # --- jit'd gradient function (shared across trainers/devices) --------
         def _grad(params, batch: MiniBatch, x0):
@@ -439,6 +509,20 @@ class HybridGNNTrainer:
         self._ckpt_cb: Optional[Callable[[int, PyTree, PyTree], None]] = None
 
     # ------------------------------------------------------------ utilities
+
+    def _build_prefetcher(self, windows: int) -> Optional[WindowPrefetcher]:
+        """Construct the background window prefetcher (or None when the
+        knob is off / the source cannot page-fault).  Shared by __init__
+        and the knob autotuner's prefetch_windows moves."""
+        src = self.dataset.feature_source
+        if windows <= 0 or not hasattr(src, "prefetch_rows"):
+            return None
+        return WindowPrefetcher(
+            src, max_queue=int(windows),
+            dedup_history=self.cfg.prefetch_dedup_history,
+            restart_budget=self.cfg.prefetch_restart_budget,
+            raise_on_failure=not self.cfg.degrade_on_failure,
+            fault_injector=self.fault_injector)
 
     def _probe_dup_factor(self) -> float:
         """Measure alpha = unique-miss / positional-miss frontier rows from
@@ -541,8 +625,11 @@ class HybridGNNTrainer:
         # just stops being fed — loads fall back to synchronous (cold)
         # gathers, the overlap term re-prices to 0, and health() reports
         # the component.
-        if (self.prefetcher is not None and p["minibatch"]
-                and not self.prefetcher.failed):
+        # snapshot the prefetcher reference: the knob autotuner may swap
+        # or drop it from the training thread while this stage runs in a
+        # pipeline thread (submit() on a closed prefetcher safely drops)
+        pf = self.prefetcher
+        if pf is not None and p["minibatch"] and not pf.failed:
             depth = len(self.gnn_cfg.fanouts)
             parts = []
             for name, mb in p["minibatch"].items():
@@ -553,12 +640,11 @@ class HybridGNNTrainer:
                 if name != "cpu" and self.cache is not None:
                     ids = ids[self.cache.slot_of[ids] < 0]
                 parts.append(ids)
-            self.prefetcher.submit(np.unique(np.concatenate(parts)))
-            if self.prefetcher.failed:
+            pf.submit(np.unique(np.concatenate(parts)))
+            if pf.failed:
                 self._note_degraded(
                     "prefetcher",
-                    self.prefetcher.errors[0] if self.prefetcher.errors
-                    else None,
+                    pf.errors[0] if pf.errors else None,
                     action="window prefetch disabled; loads run "
                            "synchronously and prefetch_overlap re-prices "
                            "to 0")
@@ -866,7 +952,8 @@ class HybridGNNTrainer:
             model=self.gnn_cfg.model, cache_hit_rate=local,
             dedup_factor=alpha, feature_tier=self.feature_tier,
             prefetch_overlap=overlap, peer_hit_rate=peer,
-            union_factor=uf)
+            union_factor=uf,
+            refresh_bytes_per_iter=self._refresh_bytes_per_iter)
         self._model_prefetch_overlap = overlap
         a = self.runtime.assignment
         n = max(self.cfg.n_accel, 1)
@@ -948,6 +1035,17 @@ class HybridGNNTrainer:
         reprice = (self.cfg.hybrid and self.cfg.n_accel > 0
                    and not any_failed)
         if swapped:
+            # Eq. 7/8 admission term + staleness signal, both measured:
+            # the swapped rows crossed host->device once, amortized over
+            # the iterations since the previous refresh; the hit-rate gap
+            # the refresh just closed, per iteration, is how fast the
+            # cached set goes stale at the current cadence
+            iters = max(self._iters_since_refresh, 1)
+            self._refresh_bytes_per_iter = (
+                swapped * self.cache.row_bytes / iters)
+            self._hit_decay_per_iter = (
+                max(self._model_hit_rate - measured, 0.0) / iters)
+            self._iters_since_refresh = 0
             if reprice:
                 self._reprice_mapping(measured, alpha)
             else:
@@ -1058,6 +1156,113 @@ class HybridGNNTrainer:
         self._reprice_mapping(measured, self._window_alpha(stats))
         return True
 
+    # ------------------------------------------- model-predictive knob loop
+
+    def _build_knob_model(self, mean_times: StageTimes,
+                          iters: int) -> CalibratedKnobModel:
+        """Calibrate the Eq. 7/8 knob model on one measured window: the
+        mean stage times anchor the model at the CURRENT knob state, and
+        the measured traffic signals (dup factor, prefetch hit/drop
+        rates, touched windows, refresh admission, hit-rate decay) let
+        ``predict`` re-price only the knob-sensitive components."""
+        src = self.loader.source
+        cum = self.loader.snapshot_stats()
+        prev = self._last_load_stats
+        self._last_load_stats = cum
+        d_total = max(cum.total_rows - prev.total_rows, 0)
+        d_unique = max(cum.unique_rows - prev.unique_rows, 1)
+        d_hit = max(cum.hit_rows - prev.hit_rows, 0)
+        wt = int(getattr(src, "gather_windows_touched", 0))
+        d_windows = max(wt - self._last_windows_touched, 0)
+        self._last_windows_touched = wt
+        pf = self.prefetcher
+        drop_rate = 0.0
+        if pf is not None and pf.submitted + pf.dropped > 0:
+            drop_rate = pf.dropped / (pf.submitted + pf.dropped)
+        row_bytes = (self.cache.row_bytes if self.cache is not None
+                     else self.dataset.feat_dim * 4)
+        return CalibratedKnobModel(
+            host=PLATFORMS[self.cfg.host_platform],
+            accel=PLATFORMS[self.cfg.accel_platform],
+            ref=self._knobs,
+            signals=SignalSnapshot(
+                t_sc=mean_times.t_sc, t_sa=mean_times.t_sa,
+                t_load=mean_times.t_load,
+                t_load_stall=mean_times.t_load_stall,
+                t_tran=mean_times.t_tran, t_tc=mean_times.t_tc,
+                t_ta=mean_times.t_ta,
+                dup_factor=(d_total / d_unique if d_total else 1.0),
+                hit_rate=(d_hit / d_total if d_total else 0.0),
+                prefetch_hit_rate=self._measured_prefetch_overlap(),
+                prefetch_drop_rate=drop_rate,
+                touched_windows=max(d_windows // max(iters, 1), 1),
+                loaded_rows_per_iter=d_unique / max(iters, 1),
+                refresh_bytes_per_iter=self._refresh_bytes_per_iter,
+                hit_decay_per_iter=self._hit_decay_per_iter,
+                row_bytes=int(row_bytes),
+                disk_tier=(self.feature_tier == "disk")))
+
+    def _apply_knobs(self, k: KnobState) -> None:
+        """Apply one accepted (or rolled-back) knob state through the
+        existing machinery: stage threads via the assignment (the loader
+        pool rebuilds on its next gather), prefetch queue via
+        resize/rebuild/close, window LRU via the source's immediate
+        trim, refresh cadence/fraction via the boundary gate and the
+        cache's admission bound.  Deliberately never touches workload
+        shares, RNG streams or batch composition — losses must stay
+        bit-identical to a static-knob run."""
+        prev, self._knobs = self._knobs, k
+        a = self.runtime.assignment
+        a.threads["sample"] = k.sample_threads
+        a.threads["load"] = k.load_threads
+        a.threads["train"] = k.train_threads
+        src = self.loader.source
+        if k.mmap_lru_windows != prev.mmap_lru_windows:
+            if hasattr(src, "set_lru_windows"):
+                src.set_lru_windows(k.mmap_lru_windows)
+            elif hasattr(src, "lru_windows"):
+                src.lru_windows = int(k.mmap_lru_windows)
+        if k.prefetch_windows != prev.prefetch_windows:
+            with self._state_lock:
+                pf_dead = "prefetcher" in self._degraded
+            if k.prefetch_windows <= 0:
+                pf, self.prefetcher = self.prefetcher, None
+                if pf is not None:
+                    pf.close()
+            elif self.prefetcher is not None:
+                self.prefetcher.resize(k.prefetch_windows)
+            elif not pf_dead:
+                self.prefetcher = self._build_prefetcher(k.prefetch_windows)
+        self._refresh_period = max(1, k.refresh_period)
+        if (self.cache is not None
+                and k.refresh_frac != prev.refresh_frac):
+            shards = self.cache.shards if self._sharded else [self.cache]
+            for sh in shards:
+                sh.max_refresh_frac = float(k.refresh_frac)
+
+    def _maybe_autotune(self, times: StageTimes) -> None:
+        """One iteration-boundary step of the knob autotuner: feed the
+        measured StageTimes; when a window closes the tuner may hand back
+        a knob state to apply — a new trial move, or the exact pre-move
+        state of a trial whose measured iteration time regressed past the
+        hysteresis band (rollback)."""
+        if self.autotuner is None:
+            return
+        nxt = self.autotuner.step(times, self._build_knob_model,
+                                  self._knobs)
+        if nxt is not None:
+            self._apply_knobs(nxt)
+
+    def autotune_report(self) -> Dict[str, Any]:
+        """Autotuner trajectory + the knob state it converged to."""
+        out: Dict[str, Any] = {
+            "enabled": self.autotuner is not None,
+            "knobs": dataclasses.asdict(self._knobs),
+        }
+        if self.autotuner is not None:
+            out.update(self.autotuner.report())
+        return out
+
     def _apply_update(self, grads: PyTree) -> float:
         t0 = time.perf_counter()
         if self.compression.method != "none":
@@ -1105,11 +1310,17 @@ class HybridGNNTrainer:
                 for n in failed:
                     self.loader.drop_recent(n)
             self.runtime.end_iteration(times)
+            self._iters_done += 1
+            self._iters_since_refresh += 1
             # refresh the cache first: when it moves rows it resets the
             # measurement window, so the mapping re-price (next iterations)
-            # sees the post-refresh rate instead of a stale average
-            self._maybe_refresh_cache()
+            # sees the post-refresh rate instead of a stale average.  The
+            # cadence knob gates how often the drift check runs at all
+            # (legacy period 1 = every boundary).
+            if self._iters_done % self._refresh_period == 0:
+                self._maybe_refresh_cache()
             self._maybe_refresh_mapping()
+            self._maybe_autotune(times)
             edges = sum(mb.edges_traversed()
                         for mb in p["minibatch"].values())
             m = IterationMetrics(

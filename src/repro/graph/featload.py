@@ -249,6 +249,13 @@ class FeatureLoader:
         with self._stats_lock:
             self.window = LoadStats()
 
+    def snapshot_stats(self) -> LoadStats:
+        """Consistent copy of the cumulative transfer-path stats — the
+        knob autotuner diffs consecutive snapshots to get per-window
+        traffic without resetting the window the drift feedback reads."""
+        with self._stats_lock:
+            return dataclasses.replace(self.stats)
+
     def _get_pool(self):
         import concurrent.futures as cf
         if self._pool is None or self._pool_size != self.num_threads:

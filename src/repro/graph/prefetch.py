@@ -87,8 +87,10 @@ _SENTINEL = object()
 #     impossible (reference assignment) and the supervisor re-checks
 #     under its own control flow; taking _cv in the hot submit path for
 #     an advisory latch is not worth it.
-#   * _history / _evictions_seen / resubmitted_rows_skipped / dropped —
-#     producer-side only: submit() is single-producer by contract.
+#   * _history / _evictions_seen / resubmitted_rows_skipped / dropped /
+#     max_queue — producer-side only: submit() is single-producer by
+#     contract, and resize() runs on the same (training) thread at
+#     iteration boundaries.
 @guarded_by("_cv", "_pending", "completed", "submitted")
 class WindowPrefetcher:
     """Background thread pre-faulting partition windows for future gathers."""
@@ -106,7 +108,8 @@ class WindowPrefetcher:
                 "prefetcher only serves page-faulting (mmap) sources")
         self.source = source
         self._name = name
-        self._q: "queue.Queue" = queue.Queue(maxsize=max(1, int(max_queue)))
+        self.max_queue = max(1, int(max_queue))
+        self._q: "queue.Queue" = queue.Queue(maxsize=self.max_queue)
         self._cv = threading.Condition()
         self._pending = 0              # submitted but not yet processed
         self._stop = threading.Event()
@@ -280,6 +283,19 @@ class WindowPrefetcher:
             # prefetches nothing, so it must not poison the memory
             self._history.append(rows)
         return True
+
+    def resize(self, max_queue: int) -> None:
+        """Change the queue depth in place (DRM knob auto-tuning).
+        Queued work is never discarded: shrinking only makes the queue
+        stop accepting new submits (drops, by the advisory contract)
+        until it drains below the new bound.  queue.Queue re-reads
+        ``maxsize`` under its own mutex on every put, so swapping it
+        there is exactly the synchronization the queue itself uses."""
+        depth = max(1, int(max_queue))
+        with self._q.mutex:
+            self._q.maxsize = depth
+            self._q.not_full.notify_all()
+        self.max_queue = depth
 
     def wait_idle(self, timeout: Optional[float] = None) -> bool:
         """Block until every submitted request was processed (or failed,

@@ -333,6 +333,9 @@ class MmapFeatures:
         self.warm_gather_seconds = 0.0           # take() time on warm windows
         self.prefetch_hit_windows = 0            # take() touches of warm pids
         self.prefetch_miss_windows = 0
+        self.gather_windows_touched = 0          # take() window touches
+                                                 #   (load-stage working-set
+                                                 #   signal for knob tuning)
         # per-thread exclusion from the stall/prefetch counters: background
         # maintenance gathers (cache boot, staged-refresh admission) are
         # not load-stage traffic and must not skew the stall metrics the
@@ -507,6 +510,24 @@ class MmapFeatures:
     def reset_touch_stats(self) -> None:
         self._page_touched[:] = False
         self.last_gather_page_bytes = 0
+
+    def set_lru_windows(self, n: int) -> None:
+        """Re-bound the window LRU at runtime (DRM knob auto-tuning) and
+        trim immediately when tightening — ``_part()`` would trim on the
+        next access anyway, but an immediate trim makes the page-cache
+        effect of an accepted knob move visible within its trial window
+        rather than one gather later."""
+        self.lru_windows = max(0, int(n))
+        with self._win_lock:
+            if self.lru_windows <= 0:
+                return
+            while len(self._parts) > self.lru_windows:
+                old = next((p for p in self._parts
+                            if p not in self._pinned), None)
+                if old is None:
+                    self.pin_blocked_evictions += 1
+                    break
+                self._evict_window(old, self._parts[old])
 
     @contextlib.contextmanager
     def untracked_gathers(self):
@@ -787,6 +808,7 @@ class MmapFeatures:
                     continue
                 # stall accounting: pages nobody faulted before this
                 # gather are the cold reads a prefetcher exists to hide
+                self.gather_windows_touched += 1
                 self.cold_fault_page_bytes += fresh
                 if warm:
                     self.prefetch_hit_windows += 1

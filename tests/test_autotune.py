@@ -1,0 +1,163 @@
+"""Model-predictive knob autotuner: search, rollback, bounds, and
+end-to-end loss bit-identity (ISSUE 10 tentpole)."""
+import pytest
+
+from repro.core import (Assignment, DRMEngine, KnobAutoTuner, KnobBounds,
+                        KnobState, StageTimes)
+from repro.core.perfmodel import (PLATFORMS, CalibratedKnobModel,
+                                  SignalSnapshot)
+
+
+def _engine():
+    return DRMEngine(Assignment(cpu_batch=128, accel_batch=128, n_accel=1,
+                                sample_frac_accel=0.0,
+                                threads={"sample": 2, "load": 2,
+                                         "train": 2}))
+
+
+def _bounds():
+    return KnobBounds(prefetch_windows=(0, 64), mmap_lru_windows=(1, 64),
+                      min_stage_threads=1, total_threads=6,
+                      refresh_period=(1, 16), refresh_frac=(0.05, 0.5))
+
+
+def _times(scale=1.0):
+    return StageTimes(t_sa=0.005 * scale, t_sc=0.01 * scale,
+                      t_load=0.08 * scale, t_tran=0.004 * scale,
+                      t_tc=0.03 * scale, t_ta=0.008 * scale,
+                      t_load_stall=0.04 * scale)
+
+
+def _fixed_model(ref: KnobState) -> CalibratedKnobModel:
+    """One calibrated model, anchored once: a fixed objective over knob
+    space, so greedy descent must be monotone."""
+    sig = SignalSnapshot(t_sc=0.01, t_sa=0.005, t_load=0.08,
+                         t_load_stall=0.04, t_tran=0.004, t_tc=0.03,
+                         t_ta=0.008, dup_factor=1.5, hit_rate=0.6,
+                         prefetch_hit_rate=0.0, prefetch_drop_rate=0.0,
+                         touched_windows=16, loaded_rows_per_iter=1000,
+                         refresh_bytes_per_iter=1e6,
+                         hit_decay_per_iter=0.001, row_bytes=4,
+                         disk_tier=True)
+    return CalibratedKnobModel(host=PLATFORMS["epyc-7763"],
+                               accel=PLATFORMS["tpu-v5e"],
+                               ref=ref, signals=sig)
+
+
+def test_predicted_time_non_increasing_across_accepted():
+    """Convergence property: with a fixed predictor and no measured
+    regressions, every accepted proposal's predicted iteration time is
+    below its baseline by min_gain, and the accepted trajectory is
+    non-increasing overall."""
+    start = KnobState(prefetch_windows=0, mmap_lru_windows=1)
+    model = _fixed_model(start)
+    tuner = KnobAutoTuner(_engine(), _bounds(), interval=2,
+                          warmup_windows=0, min_gain=0.02)
+    current = start
+    for _ in range(40):
+        nxt = tuner.step(_times(), lambda mean, n: model, current)
+        if nxt is not None:
+            current = nxt
+    assert tuner.accepted, "fixed beatable model must yield accepted moves"
+    assert tuner.rollbacks == 0  # constant measured walls: nothing regresses
+    preds = [tuner.accepted[0].baseline_predicted] + \
+        [t.predicted for t in tuner.accepted]
+    for a, b in zip(preds, preds[1:]):
+        assert b <= a * (1.0 - tuner.min_gain) + 1e-12, \
+            f"accepted move raised predicted time {a} -> {b}"
+    # converged: at the final state the search finds nothing else
+    prop = tuner.engine.propose_knobs(model, current, tuner.bounds,
+                                      min_gain=tuner.min_gain)
+    assert prop is None
+
+
+def test_rejected_proposal_rolls_back_exactly():
+    """A trial whose measured window regresses past the hysteresis band
+    returns the EXACT pre-move knob state, and the move is vetoed."""
+    start = KnobState(prefetch_windows=0, mmap_lru_windows=1)
+    model = _fixed_model(start)
+    tuner = KnobAutoTuner(_engine(), _bounds(), interval=1,
+                          warmup_windows=0, hysteresis=0.10)
+    # window 1: propose
+    prop = tuner.step(_times(), lambda mean, n: model, start)
+    assert prop is not None and prop != start
+    # window 2 measures 3x slower: rollback must return `start` exactly
+    back = tuner.step(_times(scale=3.0), lambda mean, n: model, prop)
+    assert back == start
+    assert tuner.rollbacks == 1 and not tuner.accepted
+    rolled_move = [m for ev, m in tuner.log if ev == "rollback"][0]
+    assert rolled_move in tuner.report()["vetoed"], \
+        "rolled-back move must be vetoed"
+    # the vetoed move is not re-proposed while the veto holds
+    nxt = tuner.step(_times(), lambda mean, n: model, start)
+    if nxt is not None:
+        assert tuner._trial.move != rolled_move
+
+
+class _HostileModel:
+    """Adversarial predictor: rewards the most extreme knob state it can
+    see (negative pseudo-times, monotone in every knob), trying to drag
+    the search out of bounds."""
+
+    def predict(self, k: KnobState) -> float:
+        return -(k.prefetch_windows * 1e6 + k.mmap_lru_windows * 1e3
+                 + k.load_threads * 1e2 + k.refresh_period
+                 + k.refresh_frac)
+
+
+def test_knob_bounds_respected_under_hostile_predictor():
+    bounds = _bounds()
+    tuner = KnobAutoTuner(_engine(), bounds, interval=1, warmup_windows=0)
+    current = KnobState(prefetch_windows=0, mmap_lru_windows=1)
+    total0 = current.total_threads
+    for _ in range(60):
+        nxt = tuner.step(_times(), lambda mean, n: _HostileModel(), current)
+        if nxt is not None:
+            current = nxt
+        lo, hi = bounds.prefetch_windows
+        assert lo <= current.prefetch_windows <= hi
+        lo, hi = bounds.mmap_lru_windows
+        assert lo <= current.mmap_lru_windows <= hi
+        lo, hi = bounds.refresh_period
+        assert lo <= current.refresh_period <= hi
+        lo, hi = bounds.refresh_frac
+        assert lo <= current.refresh_frac <= hi
+        assert current.total_threads == total0
+        assert min(current.sample_threads, current.load_threads,
+                   current.train_threads) >= bounds.min_stage_threads
+    # the hostile model drove every geometric knob to its ceiling —
+    # and no further
+    assert current.prefetch_windows == bounds.prefetch_windows[1]
+    assert current.mmap_lru_windows == bounds.mmap_lru_windows[1]
+
+
+@pytest.mark.parametrize("n_accel", [0, 1, 2])
+def test_losses_bit_identical_autotune_on_off(n_accel, tmp_path):
+    """Knob moves never touch RNG streams or batch composition: the
+    autotuner-on run's losses equal the static-knob twin bit-for-bit at
+    every accelerator count (0 = CPU-only hybrid)."""
+    from repro.core import HybridConfig, HybridGNNTrainer
+    from repro.graph import GNNConfig, make_dataset
+
+    def run(auto):
+        ds = make_dataset("ogbn-papers100M", scale=2e-4, seed=0,
+                          feature_backend="mmap", partition_rows=2048,
+                          spill_dir=str(tmp_path / f"spill-{auto}"),
+                          mmap_lru_windows=1)
+        gnn = GNNConfig(fanouts=(3, 3), layer_dims=ds.layer_dims,
+                        model="sage")
+        cfg = HybridConfig(total_batch=128, n_accel=n_accel,
+                           hybrid=(n_accel == 0), use_drm=False,
+                           tfp_depth=2, seed=0, mmap_lru_windows=1,
+                           initial_threads=(4, 1, 1), auto_tune=auto,
+                           autotune_interval=2, autotune_warmup_windows=0)
+        tr = HybridGNNTrainer(ds, gnn, cfg)
+        hist = tr.train(8)
+        rep = tr.autotune_report()
+        tr.close()
+        return [m.loss for m in hist], rep
+
+    on, rep_on = run(True)
+    off, rep_off = run(False)
+    assert on == off, f"autotune on/off losses diverged at n_accel={n_accel}"
+    assert rep_on["enabled"] and not rep_off["enabled"]

@@ -140,6 +140,42 @@ def test_stall_excluded_from_balancing_signal():
     assert (a1.cpu_batch, a1.accel_batch) == (a2.cpu_batch, a2.accel_batch)
 
 
+def test_accel_only_inactive_trainer_never_donates():
+    """Regression: ``cpu_ranked`` ranked over the raw stage dict without
+    the zero-time activity filter, so a stage that never ran — t_tc == 0
+    with no CPU trainer — was 'fastest CPU task' and donated a thread
+    every iteration, bleeding the train stage's pool dry in accel-only
+    configs.  The donor must come from stages that actually ran."""
+    engine = DRMEngine(_mk(cpu=0, accel=256, n=2, frac=0.0))
+    t = StageTimes(t_sa=0.0, t_sc=0.05, t_load=0.5, t_tran=0.01,
+                   t_tc=0.0, t_ta=0.02)
+    a = engine.step(t)
+    # load is the bottleneck; among the stages that ran, sample (0.05) is
+    # the fastest CPU task and donates — NOT the inactive CPU trainer
+    assert a.threads == {"sample": 1, "load": 3, "train": 2}
+    # repeated steps never drain the inactive trainer's pool
+    for _ in range(8):
+        a = engine.step(t)
+    assert a.threads["train"] == 2
+
+
+@given(st.floats(0.0, 1.0), st.floats(0.0, 1.0))
+@settings(max_examples=100, deadline=None)
+def test_balanced_sampler_pair_zero_drift(t_eq, frac):
+    """Regression: at t_sc == t_sa (including both 0 in a probe
+    iteration) the 1e-9 clamp on t_fast made the step negative, and the
+    ``t_sc > t_sa`` branch — False at equality — subtracted it from the
+    accel share on every call: a perfectly balanced sampler pair drifted.
+    Equality must be a no-op, repeated indefinitely."""
+    engine = DRMEngine(_mk(frac=frac))
+    t = StageTimes(t_sa=t_eq, t_sc=t_eq, t_load=0.1, t_tran=0.1,
+                   t_tc=0.1, t_ta=0.1)
+    for _ in range(10):
+        engine._balance_work_sample(t)
+        assert engine.assign.sample_frac_accel == frac, \
+            "balanced sampler pair must produce zero drift"
+
+
 def test_stall_exceeding_wall_time_clamps():
     """Pool-thread-summed stall can exceed the wall-clock t_load: the
     effective load signal clamps at 0 (inactive) instead of going
